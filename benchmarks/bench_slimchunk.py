@@ -1,0 +1,32 @@
+"""Paper Fig. 6e: SlimChunk splits tall chunks for load balance.
+
+Without real parallel hardware we measure the two effects SlimChunk trades:
+(i) max-tile work imbalance (the quantity GPUs stall on), and (ii) padding
+overhead, for column-tile widths L. Wall time on CPU tracks total cells.
+"""
+import numpy as np
+
+from repro.core.bfs import bfs
+from repro.core.formats import build_slimsell
+from .common import emit, graph, time_fn
+
+SCALE, EF = 13, 16
+
+
+def run():
+    csr = graph("kron", SCALE, EF)
+    root = int(np.argmax(csr.deg))
+    base_cells = None
+    for L in (4096, 512, 128, 32):
+        t = build_slimsell(csr, C=8, L=L, sigma=csr.n).to_jax()
+        # work of the largest single tile, relative to the mean (imbalance)
+        cl = np.asarray(t.cl)
+        tile_work = np.minimum(cl[np.asarray(t.row_block)], L) * t.C
+        imbalance = tile_work.max() / max(tile_work.mean(), 1)
+        cells = int(t.n_tiles) * t.C * L
+        base_cells = base_cells or cells
+        us = time_fn(lambda t=t: bfs(t, root, "tropical", mode="fused",
+                                     slimwork=False), iters=3)
+        emit(f"slimchunk/L{L}", us,
+             f"tiles={t.n_tiles};imbalance={imbalance:.1f}x;"
+             f"padding_cells={cells/base_cells:.2f}x")

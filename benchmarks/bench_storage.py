@@ -1,0 +1,26 @@
+"""Paper Table III + Fig. 7: storage of CSR / AL / Sell-C-sigma / SlimSell
+across n, avg-degree, sigma, and graph family. C=8 as in the paper's CPU
+analysis; SlimSell ~50% of Sell-C-sigma and ~AL for sigma >= sqrt(n)."""
+import math
+
+from repro.core.formats import storage_summary
+from .common import emit, graph
+
+CASES = [
+    ("kron", 12, 4), ("kron", 12, 16), ("kron", 14, 16), ("kron", 14, 64),
+    ("er", 12, 16), ("er", 14, 16),
+]
+
+
+def run():
+    for kind, scale, ef in CASES:
+        csr = graph(kind, scale, ef)
+        n = csr.n
+        for sigma_name, sigma in [("s1", 1), ("sqrt_n", int(math.sqrt(n))),
+                                  ("sn", None)]:
+            s = storage_summary(csr, C=8, sigma=sigma)
+            emit(f"storage/{kind}_s{scale}_e{ef}/sigma_{sigma_name}", 0.0,
+                 f"slim/sellcs={s.slimsell_vs_sellcs:.3f};"
+                 f"slim/al={s.slimsell_vs_al:.3f};"
+                 f"slim/csr={s.slimsell/s.csr:.3f};"
+                 f"P={s.padding_flat};cells={s.slimsell}")

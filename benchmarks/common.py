@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, graph cache, CSV emission."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import numpy as np
+
+from repro.core.formats import build_slimsell
+from repro.graphs.generators import erdos_renyi, kronecker
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds (fn must block on its outputs)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out) if out is not None else None
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+@functools.lru_cache(maxsize=32)
+def graph(kind: str, scale: int, ef: int = 16, seed: int = 0):
+    if kind == "kron":
+        return kronecker(scale, ef, seed=seed)
+    return erdos_renyi(1 << scale, ef, seed=seed)
+
+
+@functools.lru_cache(maxsize=32)
+def tiled(kind: str, scale: int, ef: int = 16, C: int = 8, L: int = 128,
+          sigma: int | None = None, seed: int = 0):
+    return build_slimsell(graph(kind, scale, ef, seed), C=C, L=L,
+                          sigma=sigma).to_jax()

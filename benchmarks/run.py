@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §8).
+
+Prints ``name,us_per_call,derived`` CSV.  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (bench_layout, bench_semirings, bench_slimchunk, bench_slimsell,
+               bench_slimwork, bench_storage, bench_vs_traditional, bench_work)
+
+ALL = {
+    "storage": bench_storage,            # Table III / Fig 7
+    "semirings": bench_semirings,        # Fig 5a-c / Fig 8
+    "slimsell": bench_slimsell,          # Table V
+    "slimwork": bench_slimwork,          # Fig 5d
+    "slimchunk": bench_slimchunk,        # Fig 6e
+    "vs_traditional": bench_vs_traditional,  # Fig 9/10 + Fig 1
+    "work": bench_work,                  # Table II, Eq (1)(2)
+    "layout": bench_layout,              # beyond-paper: SpMM backends
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated bench names")
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        ALL[name].run()
+        print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Serving example: batched prefill + greedy decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main(["--arch", "smollm-135m", "--reduced", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

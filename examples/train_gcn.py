@@ -1,0 +1,62 @@
+"""Train GCN on a synthetic Cora-like graph — with the SlimSell aggregation
+backend (the paper's layout as a first-class GNN feature).
+
+    PYTHONPATH=src python examples/train_gcn.py --steps 200
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cells import _gnn_loss
+from repro.core.formats import build_slimsell
+from repro.graphs.generators import erdos_renyi
+from repro.models import gnn
+from repro.optim import adamw
+from repro.train import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--aggregation", default="slimsell",
+                    choices=["slimsell", "segment"])
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    csr = erdos_renyi(512, 8, seed=0)
+    n_classes, d_in = 7, 64
+    cfg = gnn.GCNConfig(n_layers=2, d_hidden=16, d_in=d_in,
+                        n_classes=n_classes, aggregation=args.aggregation)
+    # planted communities -> learnable labels
+    labels = rng.integers(0, n_classes, csr.n)
+    feat = (np.eye(n_classes)[labels] @ rng.standard_normal((n_classes, d_in))
+            + 0.5 * rng.standard_normal((csr.n, d_in)))
+    src = np.repeat(np.arange(csr.n), np.diff(csr.indptr))
+    batch = {
+        "node_feat": jnp.asarray(feat, jnp.float32),
+        "edge_index": jnp.stack([jnp.asarray(src, jnp.int32),
+                                 jnp.asarray(csr.indices, jnp.int32)]),
+        "deg": jnp.asarray(csr.deg, jnp.int32),
+        "labels": jnp.asarray(labels, jnp.int32),
+        "train_mask": jnp.asarray(rng.random(csr.n) < 0.7, jnp.float32),
+        "tiled": build_slimsell(csr, C=8, L=32).to_jax(),
+    }
+    params = gnn.gcn_init(cfg, jax.random.PRNGKey(0))
+    step_fn, init_state = make_train_step(
+        lambda p, b: _gnn_loss("gcn", p, b, cfg), adamw(lr=1e-2))
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    state = init_state(params)
+    for step in range(args.steps):
+        params, state, m = step_fn(params, state, batch)
+        if step % 25 == 0 or step == args.steps - 1:
+            logits = gnn.gcn_forward(params, batch, cfg)
+            acc = float((jnp.argmax(logits, -1) == batch["labels"]).mean())
+            print(f"step {step:4d} loss {float(m['loss']):.3f} acc {acc:.2f}")
+    assert acc > 0.5, "GCN failed to learn planted communities"
+    print(f"final accuracy {acc:.2f} with aggregation={args.aggregation}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end LM training example: a SmolLM-family model for a few hundred
+steps with checkpoint/resume (fault-tolerant loop).
+
+Reduced config by default (CPU container); pass --full on a real cluster.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+    argv = ["--arch", "smollm-135m", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "100", "--resume"]
+    if not args.full:
+        argv.append("--reduced")
+    losses = train.main(argv)
+    assert losses[-1] < losses[0], "loss did not decrease"
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Architecture registry: the 10 assigned archs + the paper's own BFS config.
+
+``build_cell(arch, shape, mesh)`` -> Cell (step fn + ShapeDtypeStruct args)
+is everything the dry-run / roofline pipeline needs.
+"""
+from __future__ import annotations
+
+from . import (bfs_graph500, dlrm_mlperf, egnn, gcn_cora, gin_tu,
+               internlm2_1_8b, kimi_k2, llama4_scout, nequip, phi3_mini,
+               smollm_135m)
+
+ARCHS = {
+    m.ARCH_ID: m
+    for m in (smollm_135m, phi3_mini, internlm2_1_8b, llama4_scout, kimi_k2,
+              egnn, gin_tu, nequip, gcn_cora, dlrm_mlperf, bfs_graph500)
+}
+
+ASSIGNED = [m for m in ARCHS if m != "bfs-graph500"]
+
+# §Perf hillclimb variants (not part of the assigned 40-cell matrix)
+PERF_VARIANTS = {"train_batch_hybrid", "serve_bulk_hybrid",
+                 "train_batch_dp256", "train_4k_cf125",
+                 "kron_s26_sliced", "kron_s26_sliced_i16"}
+
+
+def get(arch_id: str):
+    try:
+        return ARCHS[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+
+
+def shapes_for(arch_id: str):
+    return list(get(arch_id).SHAPES)
+
+
+def build_cell(arch_id: str, shape: str, mesh, **kw):
+    return get(arch_id).build_cell(shape, mesh, **kw)
+
+
+def all_cells():
+    """The 40 assigned (arch x shape) pairs + the BFS extras."""
+    out = []
+    for a in ARCHS:
+        for s in shapes_for(a):
+            out.append((a, s))
+    return out

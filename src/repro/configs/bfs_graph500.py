@@ -1,0 +1,113 @@
+"""The paper's own workload: Graph500-scale BFS over 2D-partitioned SlimSell.
+
+Shapes mirror the paper's Kronecker sweep (§IV, n up to 2^28). Each cell
+lowers the fused distributed BFS (64-iteration while_loop of SlimSell-SpMV +
+semiring collectives) with ShapeDtypeStructs — tile counts are computed from
+the expected nnz with a 1.5x SlimChunk imbalance margin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.dist_bfs import DistSlimSell, make_dist_bfs
+from .cells import Cell
+
+ARCH_ID = "bfs-graph500"
+FAMILY = "bfs"
+
+BFS_SHAPES = {
+    # scale, edge_factor, semiring
+    "kron_s24": dict(scale=24, edge_factor=16, semiring="tropical"),
+    "kron_s26": dict(scale=26, edge_factor=16, semiring="tropical"),
+    "kron_s26_selmax": dict(scale=26, edge_factor=16, semiring="selmax"),
+    "er_s24": dict(scale=24, edge_factor=16, semiring="tropical"),
+    # §Perf hillclimb variants: slot-space layout, row-sliced reduce +
+    # grid-transpose exchange (+ bf16 frontier); see core.dist_bfs_sliced
+    "kron_s26_sliced": dict(scale=26, edge_factor=16, semiring="tropical",
+                            sliced=True),
+    "kron_s26_sliced_i16": dict(scale=26, edge_factor=16,
+                                semiring="tropical", sliced=True, i16=True),
+}
+SHAPES = list(BFS_SHAPES)
+
+
+def dist_meta(scale: int, edge_factor: int, R: int, Co: int, *, C: int = 8,
+              L: int = 128, margin: float = 1.5) -> DistSlimSell:
+    n = 1 << scale
+    nnz = 2 * edge_factor * n
+    n_chunks = math.ceil(n / C)
+    cps = math.ceil(n_chunks / R)
+    n_col = math.ceil(n / Co)
+    per_dev = nnz / (R * Co)
+    t_max = max(1, math.ceil(per_dev * margin / (C * L)) + cps // (C * L) + 1)
+    return DistSlimSell(n=n, C=C, L=L, R=R, Co=Co, n_col=n_col,
+                        chunks_per_shard=cps, t_max=t_max,
+                        cols=None, row_block=None, row_vertex=None)
+
+
+def build_cell(shape: str, mesh, cost_layers=None) -> Cell:
+    """cost_layers (1 or 2) caps max_iters for the while-body cost
+    extrapolation; the full artifact uses 64 iterations."""
+    sh = BFS_SHAPES[shape]
+    names = mesh.axis_names
+    if sh.get("sliced"):
+        return _build_sliced_cell(shape, sh, mesh, cost_layers)
+    row_axes = tuple(a for a in names if a != "model")
+    R = int(np.prod([mesh.shape[a] for a in row_axes]))
+    Co = mesh.shape["model"]
+    meta = dist_meta(sh["scale"], sh["edge_factor"], R, Co)
+    fn = make_dist_bfs(mesh, meta, sh["semiring"], row_axes=row_axes,
+                       col_axes=("model",),
+                       max_iters=cost_layers if cost_layers else 64)
+    row = row_axes if len(row_axes) > 1 else row_axes[0]
+    args = (
+        jax.ShapeDtypeStruct((R, Co, meta.t_max, meta.C, meta.L), jnp.int32,
+                             sharding=NamedSharding(mesh, P(row, "model", None, None, None))),
+        jax.ShapeDtypeStruct((R, Co, meta.t_max), jnp.int32,
+                             sharding=NamedSharding(mesh, P(row, "model", None))),
+        jax.ShapeDtypeStruct((R, meta.chunks_per_shard, meta.C), jnp.int32,
+                             sharding=NamedSharding(mesh, P(row, None, None))),
+        jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+    )
+    # BFS "model flops": one add+min per nonzero per iteration x D iterations
+    D_iters = 12
+    flops = 2.0 * (2 * sh["edge_factor"] * (1 << sh["scale"])) * D_iters
+    return Cell(ARCH_ID, shape, "bfs", fn, args, flops)
+
+
+def _build_sliced_cell(shape, sh, mesh, cost_layers):
+    """Optimized layout (slot space, 16x16 vertex grid, pod splits edges)."""
+    import jax.numpy as jnp
+    from repro.core.dist_bfs import make_dist_bfs_sliced
+
+    pods = mesh.shape.get("pod", 1)
+    R = Co = 16
+    meta = dist_meta(sh["scale"], sh["edge_factor"], R, Co)
+    meta = dataclasses.replace(meta, t_max=max(1, meta.t_max // pods))
+    dt = jnp.int16 if sh.get("i16") else jnp.float32
+    fn = make_dist_bfs_sliced(mesh, meta, row_axis="data", col_axis="model",
+                              pod_axis="pod" if pods > 1 else None,
+                              max_iters=cost_layers if cost_layers else 64,
+                              frontier_dtype=dt)
+    lead = (pods,) if pods > 1 else ()
+    lead_spec = ("pod",) if pods > 1 else ()
+    args = (
+        jax.ShapeDtypeStruct(lead + (R, Co, meta.t_max, meta.C, meta.L),
+                             jnp.int32,
+                             sharding=NamedSharding(mesh, P(*lead_spec, "data",
+                                                            "model", None,
+                                                            None, None))),
+        jax.ShapeDtypeStruct(lead + (R, Co, meta.t_max), jnp.int32,
+                             sharding=NamedSharding(mesh, P(*lead_spec, "data",
+                                                            "model", None))),
+        jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+    )
+    D_iters = 12
+    flops = 2.0 * (2 * sh["edge_factor"] * (1 << sh["scale"])) * D_iters
+    return Cell(ARCH_ID, shape, "bfs", fn, args, flops)

@@ -1,0 +1,360 @@
+"""(architecture x input-shape) cells: step function + ShapeDtypeStruct inputs.
+
+A Cell is everything the dry-run needs to lower one matrix entry:
+  * ``fn``           — the jitted-to-be step (train_step / prefill / decode /
+                       serve), closed over config + ShardCtx,
+  * ``args``         — a pytree of jax.ShapeDtypeStruct with NamedShardings
+                       attached (AOT lowering; nothing is allocated),
+  * ``model_flops``  — 6·N·D (dense) / 6·N_active·D (MoE) per step, for the
+                       §Roofline "useful compute" ratio.
+
+Family builders below; the per-arch modules provide configs and shape tables.
+All device-facing array dims are padded to mesh-divisible sizes (documented
+in DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import dlrm as dlrm_lib
+from repro.models import gnn as gnn_lib
+from repro.models import transformer as tf
+from repro.models.sharding import AxisRules, shard_dim, spec as mk_spec
+from repro.optim import adamw, muon
+from repro.train import make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: Any                      # pytree of ShapeDtypeStruct (+shardings)
+    model_flops: float             # per executed step, whole job
+    donate: tuple = ()
+    static: dict = dataclasses.field(default_factory=dict)
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _sds(shape, dtype, mesh=None, pspec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, pspec or P()))
+
+
+def _shard_tree(tree, specs, mesh):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _replicated_tree(tree, mesh):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                       sharding=NamedSharding(mesh, P())),
+        tree, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# Optimizer-state sharding (ZeRO): every moment buffer shards exactly like
+# the parameter it tracks. Matched by array shape — optimizer states are
+# params-shaped (AdamW m/v, Muon momentum) or placeholders/scalars (-> P()).
+def _state_specs_like(state_sds, params_sds, pspecs):
+    shape2spec = {}
+    for leaf, s in zip(
+            jax.tree.leaves(params_sds,
+                            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+            jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))):
+        shape2spec.setdefault(leaf.shape, s)
+    return jax.tree.map(lambda l: shape2spec.get(l.shape, P()), state_sds,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ------------------------------------------------------------------ LM family
+
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    # §Perf variant (kimi hillclimb iter): tighter MoE dispatch capacity
+    "train_4k_cf125": dict(kind="train", seq=4096, batch=256,
+                           cap_factor=1.25),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, seq_shard=True),
+}
+
+
+def lm_model_flops(cfg: tf.LMConfig, batch: int, seq: int, kind: str) -> float:
+    n_active = cfg.active_params_e9 * 1e9
+    tokens = batch * seq if kind in ("train", "prefill") else batch
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def build_lm_cell(arch: str, cfg: tf.LMConfig, shape: str, mesh: Mesh,
+                  *, optimizer: str = "adamw",
+                  cost_layers: int | None = None) -> Cell:
+    """cost_layers: build the cost-extrapolation variant — n_layers=k and
+    single-trip attention scans (q_chunk=kv_chunk=seq), so XLA's
+    count-while-body-once cost analysis is exact for one layer; the dry-run
+    extrapolates cost(L) = cost(1) + (L-1)·(cost(2)-cost(1))."""
+    sh = LM_SHAPES[shape]
+    if sh.get("cap_factor"):
+        cfg = dataclasses.replace(cfg, moe_cap_factor=sh["cap_factor"])
+    if cost_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=cost_layers, scan_unroll=True,
+                                  q_chunk=sh["seq"], kv_chunk=sh["seq"])
+    rules = AxisRules.for_mesh(mesh)
+    ctx = tf.ShardCtx(mesh=mesh, rules=rules,
+                      cache_seq_shard=sh.get("seq_shard", False))
+    B, S = sh["batch"], sh["seq"]
+    pspecs = tf.param_specs(cfg, mesh, rules)
+    params_sds = _shard_tree(
+        jax.eval_shape(lambda k: tf.init_params(cfg, k), jax.random.PRNGKey(0)),
+        pspecs, mesh)
+    flops = lm_model_flops(cfg, B, S, sh["kind"])
+
+    if sh["kind"] == "train":
+        opt = muon() if optimizer == "muon" else adamw()
+        step_fn, init_state = make_train_step(
+            lambda p, b: tf.loss_fn(p, b, cfg, ctx), opt)
+        state_sds = jax.eval_shape(init_state, params_sds)
+        state_specs = _state_specs_like(state_sds, params_sds, pspecs)
+        state_sds = _shard_tree(state_sds, state_specs, mesh)
+        batch_sds = {
+            "tokens": _sds((B, S), jnp.int32, mesh, P(rules.dp, None)),
+            "labels": _sds((B, S), jnp.int32, mesh, P(rules.dp, None)),
+        }
+        return Cell(arch, shape, "train", step_fn,
+                    (params_sds, state_sds, batch_sds), flops)
+
+    if sh["kind"] == "prefill":
+        fn = lambda p, toks: tf.prefill(p, toks, cfg, ctx)
+        toks = _sds((B, S), jnp.int32, mesh, P(rules.dp, None))
+        return Cell(arch, shape, "prefill", fn, (params_sds, toks), flops)
+
+    # decode
+    fn = lambda p, cache, tok, pos: tf.decode_step(p, cache, tok, pos, cfg, ctx)
+    cache_sds = jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
+    cspecs = tf.cache_specs(cfg, mesh, rules,
+                            seq_shard=sh.get("seq_shard", False), batch=B)
+    cache_sds = _shard_tree(cache_sds, cspecs, mesh)
+    b_ax = shard_dim(mesh, B, rules.dp)
+    tok = _sds((B,), jnp.int32, mesh, P(b_ax))
+    pos = _sds((B,), jnp.int32, mesh, P(b_ax))
+    return Cell(arch, shape, "decode", fn, (params_sds, cache_sds, tok, pos),
+                flops)
+
+
+# ----------------------------------------------------------------- GNN family
+
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_graphs=1),
+    "minibatch_lg": dict(kind="train", n_nodes=169984, n_edges=168960,
+                         d_feat=602, n_graphs=1, sampled=True),
+    "ogb_products": dict(kind="train", n_nodes=2449029, n_edges=61859140,
+                         d_feat=100, n_graphs=1),
+    "molecule": dict(kind="train", n_nodes=30 * 128, n_edges=64 * 128,
+                     d_feat=16, n_graphs=128),
+}
+
+
+def _gnn_loss(arch_kind, params, batch, cfg):
+    if arch_kind == "gcn":
+        logits = gnn_lib.gcn_forward(params, batch, cfg)
+        oh = jax.nn.one_hot(jnp.maximum(batch["labels"], 0), logits.shape[-1])
+        nll = -jnp.sum(jax.nn.log_softmax(logits) * oh, -1)
+        mask = (batch["labels"] >= 0).astype(jnp.float32) * batch["train_mask"]
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    if arch_kind == "gin":
+        logits = gnn_lib.gin_forward(params, batch, cfg)
+        oh = jax.nn.one_hot(jnp.maximum(batch["graph_labels"], 0),
+                            logits.shape[-1])
+        nll = -jnp.sum(jax.nn.log_softmax(logits) * oh, -1)
+        return nll.mean()
+    if arch_kind == "egnn":
+        e, _ = gnn_lib.egnn_forward(params, batch, cfg)
+        return jnp.mean((e - batch["energy"]) ** 2)
+    if arch_kind == "nequip":
+        e = gnn_lib.nequip_forward(params, batch, cfg)
+        return jnp.mean((e - batch["energy"]) ** 2)
+    raise ValueError(arch_kind)
+
+
+_GNN_INIT = {"gcn": (gnn_lib.gcn_init,), "gin": (gnn_lib.gin_init,),
+             "egnn": (gnn_lib.egnn_init,), "nequip": (gnn_lib.nequip_init,)}
+
+
+def gnn_model_flops(arch_kind, cfg, n_nodes, n_edges, d_feat) -> float:
+    """Analytic forward+backward FLOPs (3x forward) for the §Roofline ratio."""
+    if arch_kind == "gcn":
+        sizes = [d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+        f = sum(2 * n_nodes * a * b + 2 * n_edges * b
+                for a, b in zip(sizes[:-1], sizes[1:]))
+    elif arch_kind == "gin":
+        h = cfg.d_hidden
+        f = cfg.n_layers * (2 * n_edges * h + 2 * n_nodes * (h * h * 2))
+    elif arch_kind == "egnn":
+        h = cfg.d_hidden
+        f = cfg.n_layers * (2 * n_edges * (2 * h + 1) * h + 2 * n_edges * h * h * 2
+                            + 2 * n_nodes * 2 * h * h * 2)
+    else:  # nequip
+        c = cfg.d_hidden
+        f = cfg.n_layers * (2 * n_edges * (cfg.n_rbf * 32 + 32 * 9 * c)
+                            + n_edges * c * (1 + 3 + 9 + 9 + 27)
+                            + 2 * n_nodes * 3 * 2 * c * c)
+    return 3.0 * f
+
+
+def build_gnn_cell(arch: str, arch_kind: str, cfg, shape: str,
+                   mesh: Mesh) -> Cell:
+    sh = GNN_SHAPES[shape]
+    rules = AxisRules.for_mesh(mesh)
+    dpm = tuple(rules.dp) + (rules.tp,)
+    N = _pad_to(sh["n_nodes"], 512)
+    E = _pad_to(sh["n_edges"], 512)
+    d_feat = sh["d_feat"]
+    cfg = dataclasses.replace(cfg, d_in=d_feat) if hasattr(cfg, "d_in") else cfg
+
+    init_fn = _GNN_INIT[arch_kind][0]
+    params_sds = _replicated_tree(
+        jax.eval_shape(lambda k: init_fn(cfg, k), jax.random.PRNGKey(0)), mesh)
+
+    batch = {
+        "edge_index": _sds((2, E), jnp.int32, mesh, P(None, dpm)),
+        "deg": _sds((N,), jnp.int32, mesh, P()),
+        "graph_ids": _sds((N,), jnp.int32, mesh, P()),
+    }
+    batch["n_graphs"] = sh["n_graphs"]
+    if arch_kind in ("gcn", "gin"):
+        batch["node_feat"] = _sds((N, d_feat), jnp.float32, mesh, P(None, None))
+    if arch_kind == "gcn":
+        batch["labels"] = _sds((N,), jnp.int32, mesh, P())
+        batch["train_mask"] = _sds((N,), jnp.float32, mesh, P())
+    if arch_kind == "gin":
+        batch["graph_labels"] = _sds((sh["n_graphs"],), jnp.int32, mesh, P())
+    if arch_kind == "egnn":
+        batch["node_feat"] = _sds((N, d_feat), jnp.float32, mesh, P(None, None))
+        batch["pos"] = _sds((N, 3), jnp.float32, mesh, P())
+        batch["energy"] = _sds((sh["n_graphs"],), jnp.float32, mesh, P())
+    if arch_kind == "nequip":
+        batch["species"] = _sds((N,), jnp.int32, mesh, P())
+        batch["pos"] = _sds((N, 3), jnp.float32, mesh, P())
+        batch["energy"] = _sds((sh["n_graphs"],), jnp.float32, mesh, P())
+
+    def loss(p, b):
+        return _gnn_loss(arch_kind, p, b, cfg)
+
+    step_fn, init_state = make_train_step(loss, adamw())
+    state_sds = _replicated_tree(jax.eval_shape(init_state, params_sds), mesh)
+    n_graphs = sh["n_graphs"]
+
+    def fn(p, s, b):
+        b = dict(b, n_graphs=n_graphs)
+        return step_fn(p, s, b)
+
+    batch_arrays = {k: v for k, v in batch.items() if k != "n_graphs"}
+    flops = gnn_model_flops(arch_kind, cfg, sh["n_nodes"], sh["n_edges"], d_feat)
+    return Cell(arch, shape, "train", fn, (params_sds, state_sds, batch_arrays),
+                flops)
+
+
+# -------------------------------------------------------------- RecSys family
+
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1000000),
+    # §Perf hillclimb variant: hybrid table placement (DLRM paper's own
+    # hybrid parallelism) — tables < 1M rows replicate (data-parallel
+    # lookups, no collective), only the 6 huge tables stay model-sharded.
+    "train_batch_hybrid": dict(kind="train", batch=65536, hybrid=True),
+    "serve_bulk_hybrid": dict(kind="serve", batch=262144, hybrid=True),
+    # iteration 2: shard the batch over BOTH mesh axes (dense/MLP parts are
+    # pure data-parallel; only the big-table lookups cross the model axis)
+    "train_batch_dp256": dict(kind="train", batch=65536, hybrid=True,
+                              dp_all=True),
+}
+
+
+def build_dlrm_cell(arch: str, cfg: dlrm_lib.DLRMConfig, shape: str,
+                    mesh: Mesh) -> Cell:
+    sh = RECSYS_SHAPES[shape]
+    rules = AxisRules.for_mesh(mesh)
+    B = sh["batch"]
+    tp = rules.tp
+    # tables row-sharded over model (padded to divisible vocab)
+    padded = dlrm_lib.DLRMConfig(
+        name=cfg.name, vocabs=tuple(_pad_to(v, mesh.shape[tp])
+                                    for v in cfg.vocabs),
+        embed_dim=cfg.embed_dim, bot_mlp=cfg.bot_mlp, top_mlp=cfg.top_mlp,
+        multi_hot=cfg.multi_hot, dtype=cfg.dtype)
+    params_sds = jax.eval_shape(lambda k: dlrm_lib.dlrm_init(padded, k),
+                                jax.random.PRNGKey(0))
+    hybrid_thresh = 1_000_000 if sh.get("hybrid") else 0
+    dp_axes = (tuple(rules.dp) + (tp,)) if sh.get("dp_all") else rules.dp
+    pspecs = {
+        "tables": [P(tp, None) if v >= hybrid_thresh else P()
+                   for v in padded.vocabs],
+        "bot": [{"w": P(None, None), "b": P(None)} for _ in cfg.bot_mlp[:-1]],
+        "top": [{"w": P(None, None), "b": P(None)}
+                for _ in ([0] + list(cfg.top_mlp[:-1]))],
+    }
+    params_sds = _shard_tree(params_sds, pspecs, mesh)
+    b_ax = shard_dim(mesh, B, dp_axes)
+    flops_mlp = (sum(2 * a * b for a, b in zip(cfg.bot_mlp[:-1], cfg.bot_mlp[1:]))
+                 + 2 * (padded.n_interactions + cfg.bot_mlp[-1]) * cfg.top_mlp[0]
+                 + sum(2 * a * b for a, b in zip(cfg.top_mlp[:-1], cfg.top_mlp[1:]))
+                 + 2 * 27 * 27 * cfg.embed_dim)
+
+    if sh["kind"] == "train":
+        step_fn, init_state = make_train_step(
+            lambda p, b: dlrm_lib.dlrm_loss(p, b, padded), adamw())
+        state_sds = jax.eval_shape(init_state, params_sds)
+        sspecs = _state_specs_like(state_sds, params_sds, pspecs)
+        state_sds = _shard_tree(state_sds, sspecs, mesh)
+        batch_sds = {
+            "dense": _sds((B, 13), jnp.float32, mesh, P(b_ax, None)),
+            "sparse": _sds((B, padded.n_sparse, padded.multi_hot), jnp.int32,
+                           mesh, P(b_ax, None, None)),
+            "label": _sds((B,), jnp.int32, mesh, P(b_ax)),
+        }
+        return Cell(arch, shape, "train", step_fn,
+                    (params_sds, state_sds, batch_sds), 3 * B * flops_mlp)
+
+    if sh["kind"] == "serve":
+        fn = lambda p, b: dlrm_lib.dlrm_forward(p, b, padded)
+        batch_sds = {
+            "dense": _sds((B, 13), jnp.float32, mesh, P(b_ax, None)),
+            "sparse": _sds((B, padded.n_sparse, padded.multi_hot), jnp.int32,
+                           mesh, P(b_ax, None, None)),
+        }
+        return Cell(arch, shape, "serve", fn, (params_sds, batch_sds),
+                    B * flops_mlp)
+
+    # retrieval: one user scored against N candidates
+    N = sh["n_candidates"]
+    fn = lambda p, b, cands: dlrm_lib.retrieval_scores(
+        dlrm_lib.dlrm_user_tower(p, b, padded)[0], cands)
+    batch_sds = {"dense": _sds((1, 13), jnp.float32, mesh, P())}
+    cands = _sds((N, cfg.embed_dim), jnp.float32, mesh,
+                 P(shard_dim(mesh, N, rules.dp), None))
+    flops = 2 * N * cfg.embed_dim + flops_mlp
+    return Cell(arch, shape, "retrieval", fn, (params_sds, batch_sds, cands),
+                flops)

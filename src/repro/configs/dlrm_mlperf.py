@@ -1,0 +1,26 @@
+"""dlrm-mlperf [recsys] n_dense=13 n_sparse=26 embed_dim=128
+bot_mlp=13-512-256-128 top_mlp=1024-1024-512-256-1 interaction=dot
+(MLPerf Criteo-1TB config) [arXiv:1906.00091]."""
+import dataclasses
+
+from repro.models.dlrm import DLRMConfig
+from .cells import RECSYS_SHAPES, build_dlrm_cell
+
+ARCH_ID = "dlrm-mlperf"
+FAMILY = "recsys"
+SHAPES = list(RECSYS_SHAPES)
+
+
+def make_config() -> DLRMConfig:
+    return DLRMConfig(name=ARCH_ID)
+
+
+def reduced_config() -> DLRMConfig:
+    return DLRMConfig(name=ARCH_ID, vocabs=(64, 32, 128, 16),
+                      embed_dim=16, bot_mlp=(13, 32, 16),
+                      top_mlp=(32, 1))
+
+
+def build_cell(shape, mesh, cost_layers=None):
+    del cost_layers  # no scans: XLA cost analysis is already exact
+    return build_dlrm_cell(ARCH_ID, make_config(), shape, mesh)

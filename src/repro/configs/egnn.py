@@ -1,0 +1,24 @@
+"""egnn [gnn] n_layers=4 d_hidden=64 equivariance=E(n) [arXiv:2102.09844].
+Edge-MLP regime: SlimSell covers the gather/reduce, the MLP stays dense."""
+import dataclasses
+
+from repro.models.gnn import EGNNConfig
+from .cells import GNN_SHAPES, build_gnn_cell
+
+ARCH_ID = "egnn"
+FAMILY = "gnn"
+KIND = "egnn"
+SHAPES = list(GNN_SHAPES)
+
+
+def make_config() -> EGNNConfig:
+    return EGNNConfig(name=ARCH_ID, n_layers=4, d_hidden=64)
+
+
+def reduced_config() -> EGNNConfig:
+    return dataclasses.replace(make_config(), d_hidden=16, d_in=8)
+
+
+def build_cell(shape, mesh, cost_layers=None):
+    del cost_layers  # no scans: XLA cost analysis is already exact
+    return build_gnn_cell(ARCH_ID, KIND, make_config(), shape, mesh)

@@ -1,0 +1,25 @@
+"""gcn-cora [gnn] n_layers=2 d_hidden=16 aggregator=mean norm=sym
+[arXiv:1609.02907]. SlimSell-applicable (SpMM regime): aggregation backend
+is selectable (segment | slimsell)."""
+import dataclasses
+
+from repro.models.gnn import GCNConfig
+from .cells import GNN_SHAPES, build_gnn_cell
+
+ARCH_ID = "gcn-cora"
+FAMILY = "gnn"
+KIND = "gcn"
+SHAPES = list(GNN_SHAPES)
+
+
+def make_config() -> GCNConfig:
+    return GCNConfig(name=ARCH_ID, n_layers=2, d_hidden=16, n_classes=16)
+
+
+def reduced_config() -> GCNConfig:
+    return dataclasses.replace(make_config(), d_in=8, n_classes=4)
+
+
+def build_cell(shape, mesh, cost_layers=None):
+    del cost_layers  # no scans: XLA cost analysis is already exact
+    return build_gnn_cell(ARCH_ID, KIND, make_config(), shape, mesh)

@@ -1,0 +1,24 @@
+"""gin-tu [gnn] n_layers=5 d_hidden=64 aggregator=sum eps=learnable
+[arXiv:1810.00826]. SlimSell-applicable (sum-agg SpMM regime)."""
+import dataclasses
+
+from repro.models.gnn import GINConfig
+from .cells import GNN_SHAPES, build_gnn_cell
+
+ARCH_ID = "gin-tu"
+FAMILY = "gnn"
+KIND = "gin"
+SHAPES = list(GNN_SHAPES)
+
+
+def make_config() -> GINConfig:
+    return GINConfig(name=ARCH_ID, n_layers=5, d_hidden=64, n_classes=8)
+
+
+def reduced_config() -> GINConfig:
+    return dataclasses.replace(make_config(), d_in=8, d_hidden=16, n_classes=2)
+
+
+def build_cell(shape, mesh, cost_layers=None):
+    del cost_layers  # no scans: XLA cost analysis is already exact
+    return build_gnn_cell(ARCH_ID, KIND, make_config(), shape, mesh)

@@ -1,0 +1,31 @@
+"""internlm2-1.8b [dense] 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544 [arXiv:2403.17297]. kv=8 is not divisible by model=16 ->
+head_dim TP (128/16=8) with interleaved RoPE."""
+import dataclasses
+import jax.numpy as jnp
+
+from repro.models.transformer import LMConfig
+from .cells import LM_SHAPES, build_lm_cell
+
+ARCH_ID = "internlm2-1.8b"
+FAMILY = "lm"
+SHAPES = [s for s in LM_SHAPES if s != "train_4k_cf125"]
+OPTIMIZER = "adamw"
+
+
+def make_config() -> LMConfig:
+    return LMConfig(name=ARCH_ID, n_layers=24, d_model=2048, n_heads=16,
+                    n_kv=8, d_head=128, d_ff=8192, vocab=92544,
+                    rope_theta=1e6, dtype=jnp.bfloat16)
+
+
+def reduced_config() -> LMConfig:
+    return dataclasses.replace(make_config(), n_layers=2, d_model=64,
+                               n_heads=4, n_kv=2, d_head=16, d_ff=128,
+                               vocab=256, dtype=jnp.float32,
+                               q_chunk=32, kv_chunk=32)
+
+
+def build_cell(shape, mesh, cost_layers=None):
+    return build_lm_cell(ARCH_ID, make_config(), shape, mesh,
+                         optimizer=OPTIMIZER, cost_layers=cost_layers)

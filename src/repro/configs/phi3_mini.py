@@ -1,0 +1,30 @@
+"""phi3-mini-3.8b [dense] 32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064 — RoPE SwiGLU [arXiv:2404.14219]."""
+import dataclasses
+import jax.numpy as jnp
+
+from repro.models.transformer import LMConfig
+from .cells import LM_SHAPES, build_lm_cell
+
+ARCH_ID = "phi3-mini-3.8b"
+FAMILY = "lm"
+SHAPES = [s for s in LM_SHAPES if s != "train_4k_cf125"]
+OPTIMIZER = "adamw"
+
+
+def make_config() -> LMConfig:
+    return LMConfig(name=ARCH_ID, n_layers=32, d_model=3072, n_heads=32,
+                    n_kv=32, d_head=96, d_ff=8192, vocab=32064,
+                    rope_theta=1e4, dtype=jnp.bfloat16)
+
+
+def reduced_config() -> LMConfig:
+    return dataclasses.replace(make_config(), n_layers=2, d_model=64,
+                               n_heads=4, n_kv=4, d_head=16, d_ff=128,
+                               vocab=256, dtype=jnp.float32,
+                               q_chunk=32, kv_chunk=32)
+
+
+def build_cell(shape, mesh, cost_layers=None):
+    return build_lm_cell(ARCH_ID, make_config(), shape, mesh,
+                         optimizer=OPTIMIZER, cost_layers=cost_layers)

@@ -1,0 +1,2 @@
+"""Core: the paper's contribution — SlimSell + semiring BFS-SpMV."""
+from . import semiring, formats, spmv, bfs, bfs_traditional, dist_bfs, complexity  # noqa: F401

@@ -1,0 +1,255 @@
+"""Algebraic BFS over SlimSell (paper §III): four semirings, SlimWork, DP.
+
+Two execution modes:
+
+* ``mode="fused"`` — the whole BFS is one ``lax.while_loop`` on device.
+  SlimWork is expressed as a per-tile mask (correctness-preserving; on TPU the
+  Pallas kernel turns the mask into scalar-prefetch grid indirection so skipped
+  tiles issue no DMA, see kernels/slimsell_spmv.py). The fused mode is what the
+  multi-pod dry-run lowers.
+
+* ``mode="hostloop"`` — the BFS loop runs on host and each iteration gathers
+  only the *active* tiles (bucketed to powers of two to bound retracing) before
+  invoking the jitted step. This performs real work-skipping on any backend and
+  is what the SlimWork benchmarks measure (paper Fig. 5d).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import semiring as sm
+from .spmv import slimsell_spmv
+
+Array = jax.Array
+WORK_LOG = 512  # max logged iterations
+
+
+@dataclasses.dataclass
+class BFSResult:
+    distances: np.ndarray          # int32[n]; -1 unreachable
+    parents: Optional[np.ndarray]  # int32[n]; parent in BFS tree; root -> root
+    iterations: int
+    work_log: Optional[np.ndarray] = None  # active tiles per iteration
+
+
+# ------------------------------------------------------------------ state ops
+
+
+def _init_state(sr_name: str, n: int, root):
+    d = jnp.full((n,), -1, jnp.int32).at[root].set(0)
+    if sr_name == "tropical":
+        f = jnp.full((n,), jnp.inf, jnp.float32).at[root].set(0.0)
+        return {"d": d, "f": f}
+    if sr_name == "real":
+        f = jnp.zeros((n,), jnp.float32).at[root].set(1.0)
+        return {"d": d, "f": f, "visited": jnp.zeros((n,), bool).at[root].set(True)}
+    if sr_name == "boolean":
+        f = jnp.zeros((n,), jnp.int32).at[root].set(1)
+        return {"d": d, "f": f, "visited": jnp.zeros((n,), bool).at[root].set(True)}
+    if sr_name == "selmax":
+        x = jnp.zeros((n,), jnp.float32).at[root].set(jnp.asarray(root, jnp.float32) + 1.0)
+        p = jnp.zeros((n,), jnp.float32).at[root].set(jnp.asarray(root, jnp.float32) + 1.0)
+        return {"d": d, "x": x, "p": p}
+    raise ValueError(sr_name)
+
+
+def _not_final(sr_name: str, state) -> Array:
+    """bool[n]: True where the output value can still change (SlimWork §III-C)."""
+    if sr_name == "tropical":
+        return jnp.isinf(state["f"])
+    if sr_name in ("real", "boolean"):
+        return ~state["visited"]
+    return state["p"] == 0.0
+
+
+def _chunk_active(sr_name: str, state, row_vertex: Array, n: int) -> Array:
+    nf = _not_final(sr_name, state)
+    safe = jnp.where(row_vertex < 0, 0, row_vertex)
+    per_row = jnp.where(row_vertex < 0, False, jnp.take(nf, safe, axis=0))
+    return per_row.any(axis=1)  # bool[n_chunks]
+
+
+def _step(sr_name: str, tiled, state, k: Array, tile_mask):
+    """One frontier expansion; k is the 1-based iteration (== distance)."""
+    sr = sm.get(sr_name)
+    if sr_name == "tropical":
+        y = slimsell_spmv(sr, tiled, state["f"], tile_mask=tile_mask)
+        f_new = jnp.minimum(state["f"], y)  # accumulator init == implicit diagonal
+        changed = jnp.any(f_new < state["f"])
+        d = jnp.where(jnp.isfinite(f_new), f_new.astype(jnp.int32), -1)
+        return {"d": d, "f": f_new}, changed
+    if sr_name in ("real", "boolean"):
+        y = slimsell_spmv(sr, tiled, state["f"], tile_mask=tile_mask)
+        new = (y > 0) & ~state["visited"]
+        d = jnp.where(new, k.astype(jnp.int32), state["d"])
+        visited = state["visited"] | new
+        f = new.astype(state["f"].dtype)
+        return {"d": d, "f": f, "visited": visited}, jnp.any(new)
+    if sr_name == "selmax":
+        y = slimsell_spmv(sr, tiled, state["x"], tile_mask=tile_mask)
+        new = (y > 0) & (state["p"] == 0.0)
+        p = jnp.where(new, y, state["p"])
+        d = jnp.where(new, k.astype(jnp.int32), state["d"])
+        ids1 = jnp.arange(tiled.n, dtype=jnp.float32) + 1.0
+        x = jnp.where(new, ids1, 0.0)
+        return {"d": d, "x": x, "p": p}, jnp.any(new)
+    raise ValueError(sr_name)
+
+
+# ---------------------------------------------------------------- DP transform
+
+
+def dp_transform(tiled, d: Array, root) -> Array:
+    """p = DP(d): for each v pick a neighbor w with d[w] == d[v]-1 (paper §II-C).
+
+    One SlimSell sweep under the sel-max semiring; O(m+n) work, O(1) depth.
+    """
+    pad = tiled.cols < 0
+    safe = jnp.where(pad, 0, tiled.cols)
+    d_nbr = jnp.take(d, safe, axis=0)                       # [T, C, L]
+    rv_tile = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)  # [T, C]
+    rv_safe = jnp.where(rv_tile < 0, 0, rv_tile)
+    d_row = jnp.take(d, rv_safe, axis=0)[:, :, None]
+    ok = (~pad) & (d_row > 0) & (d_nbr == d_row - 1) & (d_nbr >= 0)
+    cand = jnp.where(ok, safe + 1, 0)
+    sr = sm.SELMAX
+    tile_red = cand.max(axis=-1)
+    y_blocks = jax.ops.segment_max(tile_red, tiled.row_block, num_segments=tiled.n_chunks)
+    rv = tiled.row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, tiled.n, rv)
+    p1 = jax.ops.segment_max(y_blocks.reshape(-1), ids, num_segments=tiled.n + 1)[: tiled.n]
+    p = p1.astype(jnp.int32) - 1
+    return p.at[root].set(root)
+
+
+# -------------------------------------------------------------------- fused
+
+
+@partial(jax.jit, static_argnames=("sr_name", "slimwork", "max_iters", "log_work"))
+def _bfs_fused(tiled, root, *, sr_name: str, slimwork: bool,
+               max_iters: int, log_work: bool):
+    n = tiled.n
+    state = _init_state(sr_name, n, root)
+    work = jnp.zeros((WORK_LOG,), jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
+
+    def cond(carry):
+        _, k, changed, _ = carry
+        return changed & (k <= max_iters)
+
+    def body(carry):
+        state, k, _, work = carry
+        tile_mask = None
+        if slimwork:
+            active = _chunk_active(sr_name, state, tiled.row_vertex, n)
+            tile_mask = jnp.take(active, tiled.row_block, axis=0)
+            if log_work:
+                idx = jnp.minimum(k - 1, WORK_LOG - 1)
+                work = work.at[idx].set(tile_mask.sum(dtype=jnp.int32))
+        state, changed = _step(sr_name, tiled, state, k, tile_mask)
+        return state, k + 1, changed, work
+
+    state, k, _, work = jax.lax.while_loop(
+        cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True), work))
+    return state, k - 1, work
+
+
+# ------------------------------------------------------------------ hostloop
+
+
+@dataclasses.dataclass
+class _SubsetTiled:
+    """Duck-typed SlimSellTiled view over a compacted tile set."""
+    cols: Array
+    row_block: Array
+    row_vertex: Array
+    n: int
+    n_chunks: int
+
+
+@partial(jax.jit, static_argnames=("sr_name", "n_active", "n", "n_chunks"))
+def _subset_step(sr_name: str, tiled_cols, tiled_row_block, row_vertex,
+                 n: int, n_chunks: int, tile_ids, n_active: int, state, k):
+    """Gather the active tiles (bucketed size) and run one step on them only."""
+    ids = tile_ids[:n_active]
+    sub = _SubsetTiled(
+        cols=jnp.take(tiled_cols, ids, axis=0),
+        row_block=jnp.take(tiled_row_block, ids, axis=0),
+        row_vertex=row_vertex, n=n, n_chunks=n_chunks,
+    )
+    return _step(sr_name, sub, state, k, None)
+
+
+def _bucket(x: int) -> int:
+    return 1 if x <= 1 else 2 ** math.ceil(math.log2(x))
+
+
+# ----------------------------------------------------------------- public API
+
+
+def bfs(tiled, root: int, semiring: str = "tropical", *,
+        need_parents: bool = False, slimwork: bool = True,
+        mode: str = "fused", max_iters: Optional[int] = None,
+        log_work: bool = False) -> BFSResult:
+    """Run BFS from ``root``; returns distances (+parents) in vertex space."""
+    if semiring not in sm.SEMIRINGS:
+        raise KeyError(semiring)
+    n = tiled.n
+    max_iters = int(max_iters) if max_iters is not None else n
+    root = jnp.asarray(root, jnp.int32)
+
+    if mode == "fused":
+        state, iters, work = _bfs_fused(
+            tiled, root, sr_name=semiring, slimwork=slimwork,
+            max_iters=max_iters, log_work=log_work)
+        iters = int(iters)
+    elif mode == "hostloop":
+        state = _init_state(semiring, n, root)
+        k, iters = 1, 0
+        work_list = []
+        n_tiles = int(tiled.n_tiles)
+        while k <= max_iters:
+            if slimwork:
+                active = _chunk_active(semiring, state, tiled.row_vertex, n)
+                tmask = np.asarray(jnp.take(active, tiled.row_block, axis=0))
+                ids = np.nonzero(tmask)[0]
+                if ids.size == 0:
+                    break
+                work_list.append(ids.size)
+                bucket = min(_bucket(ids.size), n_tiles)
+                ids_p = np.zeros(bucket, np.int32)
+                ids_p[: ids.size] = ids
+                if ids.size < bucket:       # pad with repeats of the first id
+                    ids_p[ids.size:] = ids[0]
+                state, changed = _subset_step(
+                    semiring, tiled.cols, tiled.row_block, tiled.row_vertex,
+                    n, tiled.n_chunks, jnp.asarray(ids_p), bucket,
+                    state, jnp.asarray(k, jnp.int32))
+            else:
+                work_list.append(n_tiles)
+                state, changed = _step(semiring, tiled, state,
+                                       jnp.asarray(k, jnp.int32), None)
+            iters = k
+            k += 1
+            if not bool(changed):
+                break
+        work = np.asarray(work_list, np.int32)
+    else:
+        raise ValueError(mode)
+
+    d = np.asarray(state["d"])
+    parents = None
+    if need_parents:
+        if semiring == "selmax":
+            parents = np.array(state["p"].astype(jnp.int32) - 1)
+            parents[int(root)] = int(root)
+        else:
+            parents = np.asarray(dp_transform(tiled, jnp.asarray(d), root))
+    wl = np.asarray(work) if (log_work or mode == "hostloop") else None
+    return BFSResult(distances=d, parents=parents, iterations=iters, work_log=wl)

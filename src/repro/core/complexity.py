@@ -1,0 +1,51 @@
+"""Work/storage complexity bounds (paper §III-A Table II, Eqs. (1)-(2)).
+
+``measured_work`` counts the actual SlimSell cells touched per BFS run (the
+paper notes the size of val/col == the work of one SpMV product), which the
+bench_work benchmark compares against these analytic bounds.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .formats import CSRGraph, sellcs_order
+
+
+def work_bound_general(n: int, m: int, D: int, C: int, max_deg: int) -> float:
+    """W = O(Dn + Dm + D*C*rho_hat) for any graph (paper, Fig. 3 argument)."""
+    return D * n + D * 2 * m + D * C * max_deg
+
+
+def work_bound_erdos_renyi(n: int, m: int, D: int, C: int) -> float:
+    """Eq. (1): W = O(Dn + Dm + D*C*log n)."""
+    return D * n + D * 2 * m + D * C * math.log(max(n, 2))
+
+
+def work_bound_power_law(n: int, m: int, D: int, C: int,
+                         alpha: float = 1.0, beta: float = 2.1) -> float:
+    """Eq. (2): W = O(Dn + Dm + D*C*(alpha*n*log n)**(1/(beta-1)))."""
+    rho_hat = (alpha * n * math.log(max(n, 2))) ** (1.0 / (beta - 1.0))
+    return D * n + D * 2 * m + D * C * rho_hat
+
+
+def slimsell_cells(csr: CSRGraph, C: int, sigma: int | None = None) -> int:
+    """Size of the col array incl. padding == work of one full SpMV sweep."""
+    n, deg = csr.n, csr.deg
+    sigma = n if sigma is None else sigma
+    perm = sellcs_order(deg, sigma)
+    n_chunks = math.ceil(n / C)
+    pdeg = np.zeros(n_chunks * C, dtype=np.int64)
+    pdeg[:n] = deg[perm]
+    cl = pdeg.reshape(n_chunks, C).max(axis=1)
+    return int((cl * C).sum())
+
+
+def measured_work(csr: CSRGraph, C: int, D: int, sigma: int | None = None,
+                  work_log: np.ndarray | None = None, tile_cells: int = 0) -> int:
+    """Cells touched over a BFS run: D full sweeps, or the SlimWork-reduced
+    sum if a per-iteration active-tile log is provided."""
+    if work_log is not None:
+        return int(work_log.astype(np.int64).sum() * tile_cells)
+    return D * slimsell_cells(csr, C, sigma)

@@ -1,0 +1,337 @@
+"""Distributed 2D algebraic BFS (DESIGN.md §3; Buluç–Madduri [9] layout).
+
+The adjacency is partitioned 2D: chunk rows over the mesh row axes
+(``pod`` × ``data``) and vertex columns over the mesh column axis (``model``).
+Each device owns the SlimSell tiles of its (row-range, column-range) block,
+with column indices *localized* to its column range.
+
+One BFS iteration on device (i, j):
+  1. local SlimSell-SpMV over the owned tiles, gathering from the local
+     frontier slice x_j (no communication),
+  2. scatter partial y into a full-length vector via global row ids,
+  3. semiring all-reduce of y over (row_axes + col_axes)  [baseline], or
+     semiring reduce along ``model`` + all-gather along rows [optimized,
+     see EXPERIMENTS.md §Perf],
+  4. replicated state update (identical math to the single-device engine).
+
+``partition_slimsell`` builds real data for tests; the dry-run lowers the same
+``dist_bfs_step``/``dist_bfs`` with ShapeDtypeStructs only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import semiring as sm
+from .formats import CSRGraph, sellcs_order
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class DistSlimSell:
+    """2D-partitioned SlimSell. Leading [R, Co] axes are the device grid."""
+    n: int
+    C: int
+    L: int
+    R: int                  # row shards (pod*data)
+    Co: int                 # column shards (model)
+    n_col: int              # vertices per column range (padded)
+    chunks_per_shard: int
+    t_max: int
+    cols: np.ndarray        # int32[R, Co, T, C, L] localized (-1 pad)
+    row_block: np.ndarray   # int32[R, Co, T] chunk index *within shard*
+    row_vertex: np.ndarray  # int32[R, chunks_per_shard, C] global vertex ids
+
+
+def _tiled_flatten(t):
+    return (t.cols, t.row_block, t.row_vertex), (
+        t.n, t.C, t.L, t.R, t.Co, t.n_col, t.chunks_per_shard, t.t_max)
+
+
+def _tiled_unflatten(aux, ch):
+    n, C, L, R, Co, n_col, cps, t_max = aux
+    return DistSlimSell(n=n, C=C, L=L, R=R, Co=Co, n_col=n_col,
+                        chunks_per_shard=cps, t_max=t_max,
+                        cols=ch[0], row_block=ch[1], row_vertex=ch[2])
+
+
+jax.tree_util.register_pytree_node(DistSlimSell, _tiled_flatten, _tiled_unflatten)
+
+
+def partition_slimsell(csr: CSRGraph, R: int, Co: int, *, C: int = 8,
+                       L: int = 128, sigma: Optional[int] = None,
+                       slot_space: bool = False) -> DistSlimSell:
+    """Host-side 2D partition of the SlimSell layout.
+
+    slot_space=True renumbers vertices by their sorted-row slot (the
+    optimized layout, EXPERIMENTS.md §Perf): row shard i then owns the
+    *contiguous* slot range [i·cps·C, (i+1)·cps·C), which turns the frontier
+    exchange from a full-length all-reduce into a row-sliced reduce plus an
+    n/Co fragment gather. ``row_vertex`` still maps slots back to original
+    ids for the final un-permutation.
+    """
+    n, deg = csr.n, csr.deg
+    sigma = n if sigma is None else max(1, min(int(sigma), n))
+    perm = sellcs_order(deg, sigma)
+    inv_perm = np.empty(n, np.int64)
+    inv_perm[perm] = np.arange(n)
+    n_chunks = math.ceil(n / C)
+    cps = math.ceil(n_chunks / R)           # chunks per row shard
+    n_pad = (cps * C * R) if slot_space else n
+    n_col = math.ceil(n_pad / Co)
+
+    row_vertex = np.full((R, cps, C), -1, np.int32)
+    per_shard_tiles: list[list[list[tuple[int, np.ndarray]]]] = [
+        [[] for _ in range(Co)] for _ in range(R)]
+
+    for c in range(n_chunks):
+        i = c // cps
+        c_local = c % cps
+        rows = []
+        for r in range(C):
+            row = c * C + r
+            v = int(perm[row]) if row < n else -1
+            row_vertex[i, c_local, r] = v
+            nbr = (csr.indices[csr.indptr[v]:csr.indptr[v + 1]]
+                   if v >= 0 else np.empty(0, np.int32))
+            if slot_space and nbr.size:
+                nbr = inv_perm[nbr].astype(np.int32)
+            rows.append(nbr)
+        for j in range(Co):
+            lo, hi = j * n_col, (j + 1) * n_col
+            parts = [r[(r >= lo) & (r < hi)] - lo for r in rows]
+            length = max((p.size for p in parts), default=0)
+            if length == 0:
+                continue
+            width = math.ceil(length / L) * L
+            buf = np.full((C, width), -1, np.int32)
+            for r, p in enumerate(parts):
+                buf[r, :p.size] = p
+            for t0 in range(0, width, L):
+                per_shard_tiles[i][j].append((c_local, buf[:, t0:t0 + L]))
+
+    t_max = max(1, max(len(per_shard_tiles[i][j]) for i in range(R) for j in range(Co)))
+    cols = np.full((R, Co, t_max, C, L), -1, np.int32)
+    row_block = np.zeros((R, Co, t_max), np.int32)
+    for i in range(R):
+        for j in range(Co):
+            for t, (cl, buf) in enumerate(per_shard_tiles[i][j]):
+                cols[i, j, t] = buf
+                row_block[i, j, t] = cl
+    return DistSlimSell(n=n, C=C, L=L, R=R, Co=Co, n_col=n_col,
+                        chunks_per_shard=cps, t_max=t_max, cols=cols,
+                        row_block=row_block, row_vertex=row_vertex)
+
+
+# ------------------------------------------------ optimized sliced exchange
+
+
+def make_dist_bfs_sliced(mesh: Mesh, meta: DistSlimSell, *,
+                         row_axis: str = "data", col_axis: str = "model",
+                         pod_axis: Optional[str] = None, max_iters: int = 64,
+                         frontier_dtype=jnp.float32):
+    """Optimized tropical BFS over the *slot-space* partition
+    (EXPERIMENTS.md §Perf, BFS hillclimb).
+
+    Decomposition: vertex rows over ``data`` (R=16), vertex columns over
+    ``model`` (Co=16, R == Co), and — on the multi-pod mesh — the *edges* of
+    each (row, column) block over ``pod`` (3D SpMV: A = ⊕_pod A_p).
+
+    Per iteration and device, instead of a full-length replicated-state
+    all-reduce (ring bytes 2·n·b), communicate only:
+      1. pmin over (pod, model) of the OWN row-range slice     2·(n/R)·b
+      2. one collective-permute: the (data, model) grid transpose delivers
+         f_j as the next frontier slice x_j                      (n/R)·b
+    with b = frontier bytes (fp32 or bf16 — tropical distances are small
+    ints, exactly representable in bf16). State stays sharded by row range;
+    distances come back as [R, n/R] slot-space slices (``row_vertex``
+    un-permutes them).
+    """
+    cps, C, L = meta.chunks_per_shard, meta.C, meta.L
+    n_row = cps * C                       # slots per row shard
+    R, Co = meta.R, meta.Co
+    assert R == Co, "sliced mode uses a square (data x model) vertex grid"
+    reduce_axes = (pod_axis, col_axis) if pod_axis else (col_axis,)
+    all_axes = ((pod_axis,) if pod_axis else ()) + (row_axis, col_axis)
+    transpose_perm = [(a * Co + b, b * R + a)
+                      for a in range(R) for b in range(Co)]
+
+    integer = jnp.issubdtype(jnp.dtype(frontier_dtype), jnp.integer)
+
+    def bfs_shard(cols, row_block, root_slot):
+        cols = cols.reshape(-1, C, L)
+        row_block = row_block.reshape(-1)
+        i = jax.lax.axis_index(row_axis)
+        j = jax.lax.axis_index(col_axis)
+        # integer frontier (int16): "infinity" is a sentinel; it drifts up by
+        # 1 per iteration (min(INF)+1) and stays < int16 max for <2.7k iters
+        inf = (jnp.asarray(30_000, frontier_dtype) if integer
+               else jnp.asarray(jnp.inf, frontier_dtype))
+        f_i = jnp.where(i * n_row + jnp.arange(n_row) == root_slot,
+                        0, inf).astype(frontier_dtype)
+        x_j = jnp.where(j * n_row + jnp.arange(n_row) == root_slot,
+                        0, inf).astype(frontier_dtype)
+
+        def body(carry):
+            f_i, x_j, k, _ = carry
+            pad = cols < 0
+            safe = jnp.where(pad, 0, cols)
+            g = jnp.take(x_j, safe, axis=0) + jnp.asarray(1, frontier_dtype)
+            contrib = jnp.where(pad, inf, g)
+            tile_red = contrib.min(axis=-1)                        # [T, C]
+            y = jax.ops.segment_min(tile_red, row_block,
+                                    num_segments=cps).reshape(n_row)
+            # (1) combine partial mins for OWN rows across pod x model
+            y = jax.lax.pmin(y, reduce_axes)
+            f_new = jnp.minimum(f_i, y)
+            changed = jnp.any(f_new < f_i)
+            # (2) grid transpose: x_j for the next iteration is exactly f_j
+            x_new = jax.lax.ppermute(f_new, (row_axis, col_axis),
+                                     transpose_perm)
+            changed = jax.lax.pmax(changed.astype(jnp.int32), all_axes) > 0
+            return f_new, x_new, k + 1, changed
+
+        def cond(carry):
+            _, _, k, changed = carry
+            return changed & (k <= max_iters)
+
+        f_i, _, k, _ = jax.lax.while_loop(
+            cond, body, (f_i, x_j, jnp.asarray(1, jnp.int32),
+                         jnp.asarray(True)))
+        unreached = (f_i >= inf) if integer else jnp.isinf(f_i)
+        d_i = jnp.where(unreached, -1,
+                        f_i.astype(jnp.float32).astype(jnp.int32))
+        return d_i[None], k - 1
+
+    lead = (pod_axis,) if pod_axis else ()
+    cols_spec = P(*(lead + (row_axis, col_axis, None, None, None))) \
+        if pod_axis else P(row_axis, col_axis, None, None, None)
+    rb_spec = P(*(lead + (row_axis, col_axis, None))) \
+        if pod_axis else P(row_axis, col_axis, None)
+    sharded = jax.shard_map(
+        lambda c, rb, r: bfs_shard(c, rb, r), mesh=mesh,
+        in_specs=(cols_spec, rb_spec, P()),
+        out_specs=(P(row_axis, None), P()),
+        check_vma=False,
+    )
+    return jax.jit(sharded)
+
+
+# ------------------------------------------------------------------ device code
+
+
+def _local_spmv(sr: sm.Semiring, cols, row_block, row_vertex, x_local, n: int,
+                cps: int):
+    """SpMV over this device's tiles; returns full-length partial y."""
+    pad = cols < 0
+    safe = jnp.where(pad, 0, cols)
+    gathered = jnp.take(x_local, safe, axis=0)
+    contrib = sr.mul(jnp.asarray(1, gathered.dtype), gathered)
+    contrib = jnp.where(pad, jnp.asarray(sr.zero, contrib.dtype), contrib)
+    if sr.name == "tropical":
+        tile_red = contrib.min(axis=-1)
+    elif sr.name in ("boolean", "selmax"):
+        tile_red = contrib.max(axis=-1)
+    else:
+        tile_red = contrib.sum(axis=-1)
+    y_blocks = sr.segment_reduce(tile_red, row_block, num_segments=cps)  # [cps, C]
+    rv = row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, n, rv)
+    y = sr.segment_reduce(y_blocks.reshape(-1), ids, num_segments=n + 1)
+    return y[:n]
+
+
+def dist_bfs_step(sr_name: str, dist: DistSlimSell, state: dict, k: Array,
+                  row_axes: Sequence[str], col_axes: Sequence[str],
+                  comm: str = "allreduce"):
+    """One frontier expansion inside shard_map. State is replicated."""
+    sr = sm.get(sr_name)
+    n, Co, n_col = dist.n, dist.Co, dist.n_col
+    x_full = state["f"] if sr_name != "selmax" else state["x"]
+    # local frontier slice for this column shard
+    j = jax.lax.axis_index(col_axes[0]) if col_axes else 0
+    x_pad = jnp.pad(x_full, (0, Co * n_col - n), constant_values=sr.zero)
+    x_local = jax.lax.dynamic_slice_in_dim(x_pad, j * n_col, n_col)
+
+    cols = dist.cols.reshape(dist.t_max, dist.C, dist.L)
+    row_block = dist.row_block.reshape(dist.t_max)
+    row_vertex = dist.row_vertex.reshape(dist.chunks_per_shard, dist.C)
+    y = _local_spmv(sr, cols, row_block, row_vertex, x_local, n,
+                    dist.chunks_per_shard)
+    axes = tuple(col_axes) + tuple(row_axes)
+    if comm == "allreduce":
+        y = sr.pall(y, axes)
+    else:  # "reduce_gather": semiring-reduce over columns, gather over rows
+        y = sr.pall(y, tuple(col_axes))
+        # each row shard holds valid y only for its own rows -> combine over rows
+        y = sr.pall(y, tuple(row_axes))
+
+    # replicated state update (same math as bfs._step)
+    if sr_name == "tropical":
+        f_new = jnp.minimum(state["f"], y)
+        changed = jnp.any(f_new < state["f"])
+        d = jnp.where(jnp.isfinite(f_new), f_new.astype(jnp.int32), -1)
+        return {"d": d, "f": f_new}, changed
+    if sr_name in ("real", "boolean"):
+        new = (y > 0) & ~state["visited"]
+        d = jnp.where(new, k.astype(jnp.int32), state["d"])
+        return {"d": d, "f": new.astype(state["f"].dtype),
+                "visited": state["visited"] | new}, jnp.any(new)
+    new = (y > 0) & (state["p"] == 0.0)
+    p = jnp.where(new, y, state["p"])
+    d = jnp.where(new, k.astype(jnp.int32), state["d"])
+    x = jnp.where(new, jnp.arange(n, dtype=jnp.float32) + 1.0, 0.0)
+    return {"d": d, "x": x, "p": p}, jnp.any(new)
+
+
+def make_dist_bfs(mesh: Mesh, meta: DistSlimSell, sr_name: str = "tropical", *,
+                  row_axes: Sequence[str] = ("data",),
+                  col_axes: Sequence[str] = ("model",),
+                  max_iters: int = 64, comm: str = "allreduce"):
+    """Returns a jitted distributed BFS: (cols, row_block, row_vertex, root)
+    -> (distances, iterations). ``meta`` provides the static layout fields
+    (arrays in it may be ShapeDtypeStructs for AOT lowering)."""
+    from .bfs import _init_state  # replicated init, reused verbatim
+
+    def bfs_shard(cols, row_block, row_vertex, root):
+        dist = dataclasses.replace(
+            meta,
+            cols=cols.reshape(meta.t_max, meta.C, meta.L),
+            row_block=row_block.reshape(-1),
+            row_vertex=row_vertex.reshape(meta.chunks_per_shard, meta.C),
+        )
+        state = _init_state(sr_name, meta.n, root)
+
+        def cond(carry):
+            _, k, changed = carry
+            return changed & (k <= max_iters)
+
+        def body(carry):
+            state, k, _ = carry
+            state, changed = dist_bfs_step(sr_name, dist, state, k,
+                                           row_axes, col_axes, comm)
+            return state, k + 1, changed
+
+        state, k, _ = jax.lax.while_loop(
+            cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True)))
+        return state["d"], k - 1
+
+    row = tuple(row_axes) if len(row_axes) > 1 else row_axes[0]
+    sharded = jax.shard_map(
+        bfs_shard, mesh=mesh,
+        in_specs=(P(row, col_axes[0], None, None, None),
+                  P(row, col_axes[0], None),
+                  P(row, None, None),
+                  P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(sharded)

@@ -1,0 +1,236 @@
+"""Graph representations: CSR, AL, Sell-C-sigma, SlimSell (paper §II-D, §III-B).
+
+Host-side (numpy) builders; the compute layout handed to JAX is the
+*SlimChunk-regularized* SlimSell:
+
+  cols:       int32[n_tiles, C, L]   column indices, -1 marks padding
+  row_block:  int32[n_tiles]         owning chunk of each tile
+  row_vertex: int32[n_chunks, C]     original vertex id of each chunk-row (-1 pad)
+
+i.e. every chunk (C rows, padded to its longest row) is split vertically into
+tiles of L columns (paper §III-D SlimChunk), giving a fully regular 3D array
+that maps 1:1 onto TPU (sublane=chunk row, lane=column slot) tiles. ``val`` is
+never stored — it is derived from ``cols`` in-register (paper §III-B).
+
+Storage accounting (paper Table III) is computed for all four representations
+from the same chunk-length vector, in 32-bit "cells":
+  CSR        = 4m + n            (val + col over 2m nonzeros, row offsets)
+  AL         = 2m + n
+  Sell-C-sig = 4m + 2P + 2 n/C   (val+col incl. padding P, cs + cl)
+  SlimSell   = 2m +  P + 2 n/C   (col only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------- CSR
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """Host-side CSR of an (optionally undirected) graph. nnz = indices.size."""
+    n: int
+    m_undirected: int          # number of undirected edges (nnz == 2m if undirected)
+    indptr: np.ndarray         # int64[n+1]
+    indices: np.ndarray        # int32[nnz]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.size)
+
+    @property
+    def deg(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+
+def build_csr(edges: np.ndarray, n: int, *, undirected: bool = True,
+              dedup: bool = True) -> CSRGraph:
+    """Build CSR from an edge array [E, 2]; drops self loops, dedups."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    if undirected:
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    if dedup and edges.size:
+        key = edges[:, 0] * n + edges[:, 1]
+        key = np.unique(key)
+        edges = np.stack([key // n, key % n], axis=1)
+    order = np.lexsort((edges[:, 1], edges[:, 0])) if edges.size else np.array([], np.int64)
+    edges = edges[order]
+    counts = np.bincount(edges[:, 0], minlength=n)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    m_u = edges.shape[0] // 2 if undirected else edges.shape[0]
+    return CSRGraph(n=n, m_undirected=int(m_u), indptr=indptr,
+                    indices=edges[:, 1].astype(np.int32))
+
+
+# ------------------------------------------------------------ Sell-C-σ ordering
+
+
+def sellcs_order(deg: np.ndarray, sigma: int, *, descending: bool = True) -> np.ndarray:
+    """Row permutation: sort by degree within windows of sigma rows (paper σ).
+
+    Returns perm so that perm[i] = original vertex occupying sorted-row i.
+    Descending matches the paper's observation that for large sigma the first
+    chunks hold the longest rows.
+    """
+    n = deg.shape[0]
+    sigma = max(1, min(int(sigma), n))
+    perm = np.arange(n, dtype=np.int64)
+    key = -deg if descending else deg
+    for start in range(0, n, sigma):
+        stop = min(start + sigma, n)
+        window = np.argsort(key[start:stop], kind="stable")
+        perm[start:stop] = window + start
+    return perm
+
+
+# ------------------------------------------------------- SlimSell tiled layout
+
+
+@dataclasses.dataclass
+class SlimSellTiled:
+    """SlimChunk-regularized SlimSell; all arrays are host numpy until .to_jax()."""
+    n: int
+    m_undirected: int
+    C: int
+    L: int
+    sigma: int
+    n_chunks: int
+    n_tiles: int
+    cols: np.ndarray        # int32[n_tiles, C, L]; -1 == padding
+    row_block: np.ndarray   # int32[n_tiles]
+    row_vertex: np.ndarray  # int32[n_chunks, C]; -1 == padding row
+    cl: np.ndarray          # int32[n_chunks]  chunk lengths (pre-tiling)
+    deg: np.ndarray         # int64[n]
+
+    def to_jax(self):
+        import jax.numpy as jnp
+        return dataclasses.replace(
+            self,
+            cols=jnp.asarray(self.cols),
+            row_block=jnp.asarray(self.row_block),
+            row_vertex=jnp.asarray(self.row_vertex),
+            cl=jnp.asarray(self.cl),
+            deg=jnp.asarray(self.deg, dtype=jnp.int32),
+        )
+
+
+def _tiled_flatten(t: "SlimSellTiled"):
+    children = (t.cols, t.row_block, t.row_vertex, t.cl, t.deg)
+    aux = (t.n, t.m_undirected, t.C, t.L, t.sigma, t.n_chunks, t.n_tiles)
+    return children, aux
+
+
+def _tiled_unflatten(aux, children):
+    n, m, C, L, sigma, n_chunks, n_tiles = aux
+    cols, row_block, row_vertex, cl, deg = children
+    return SlimSellTiled(n=n, m_undirected=m, C=C, L=L, sigma=sigma,
+                         n_chunks=n_chunks, n_tiles=n_tiles, cols=cols,
+                         row_block=row_block, row_vertex=row_vertex, cl=cl, deg=deg)
+
+
+def build_slimsell(csr: CSRGraph, *, C: int = 8, L: int = 128,
+                   sigma: int | None = None) -> SlimSellTiled:
+    """Construct the tiled SlimSell layout from CSR (paper §III-B + §III-D)."""
+    n, deg = csr.n, csr.deg
+    sigma = n if sigma is None else max(1, min(int(sigma), n))
+    perm = sellcs_order(deg, sigma)
+    n_chunks = math.ceil(n / C)
+
+    # chunk lengths = longest row in each chunk (after the sigma-scoped sort)
+    pdeg = np.zeros(n_chunks * C, dtype=np.int64)
+    pdeg[:n] = deg[perm]
+    cl = pdeg.reshape(n_chunks, C).max(axis=1).astype(np.int32)
+
+    tiles_per_chunk = np.maximum(1, np.ceil(cl / L).astype(np.int64))
+    n_tiles = int(tiles_per_chunk.sum())
+    cols = np.full((n_tiles, C, L), -1, dtype=np.int32)
+    row_block = np.zeros(n_tiles, dtype=np.int32)
+    row_vertex = np.full((n_chunks, C), -1, dtype=np.int32)
+
+    tile_start = np.zeros(n_chunks + 1, dtype=np.int64)
+    np.cumsum(tiles_per_chunk, out=tile_start[1:])
+
+    for c in range(n_chunks):
+        t0 = tile_start[c]
+        row_block[t0:tile_start[c + 1]] = c
+        width = int(tiles_per_chunk[c]) * L
+        buf = np.full((C, width), -1, dtype=np.int32)
+        for r in range(C):
+            row = c * C + r
+            if row >= n:
+                continue
+            v = perm[row]
+            row_vertex[c, r] = v
+            nbr = csr.indices[csr.indptr[v]:csr.indptr[v + 1]]
+            buf[r, :nbr.size] = nbr
+        cols[t0:tile_start[c + 1]] = buf.reshape(C, -1, L).transpose(1, 0, 2)
+
+    return SlimSellTiled(
+        n=n, m_undirected=csr.m_undirected, C=C, L=L, sigma=sigma,
+        n_chunks=n_chunks, n_tiles=n_tiles, cols=cols, row_block=row_block,
+        row_vertex=row_vertex, cl=cl, deg=deg,
+    )
+
+
+# ----------------------------------------------------------- storage accounting
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageSummary:
+    """Sizes in 32-bit cells (paper Table III)."""
+    n: int
+    m: int
+    nnz: int
+    padding_flat: int    # P with paper-exact (per-chunk) padding
+    padding_tiled: int   # P with L-granular SlimChunk tiling
+    csr: int
+    al: int
+    sell_c_sigma: int
+    slimsell: int
+    slimsell_tiled: int
+
+    @property
+    def slimsell_vs_sellcs(self) -> float:
+        return self.slimsell / self.sell_c_sigma
+
+    @property
+    def slimsell_vs_al(self) -> float:
+        return self.slimsell / self.al
+
+
+def storage_summary(csr: CSRGraph, *, C: int = 8, L: int = 128,
+                    sigma: int | None = None) -> StorageSummary:
+    n, deg, nnz = csr.n, csr.deg, csr.nnz
+    m = csr.m_undirected
+    sigma = n if sigma is None else max(1, min(int(sigma), n))
+    perm = sellcs_order(deg, sigma)
+    n_chunks = math.ceil(n / C)
+    pdeg = np.zeros(n_chunks * C, dtype=np.int64)
+    pdeg[:n] = deg[perm]
+    cl = pdeg.reshape(n_chunks, C).max(axis=1)
+    flat_cells = int((cl * C).sum())
+    tiled_cells = int((np.maximum(1, np.ceil(cl / L)) * L * C).sum())
+    P = flat_cells - nnz
+    P_t = tiled_cells - nnz
+    return StorageSummary(
+        n=n, m=m, nnz=nnz, padding_flat=int(P), padding_tiled=int(P_t),
+        csr=2 * nnz + n,
+        al=nnz + n,
+        sell_c_sigma=2 * flat_cells + 2 * n_chunks,
+        slimsell=flat_cells + 2 * n_chunks,
+        slimsell_tiled=tiled_cells + 2 * n_chunks,
+    )
+
+
+import jax.tree_util as _jtu
+
+_jtu.register_pytree_node(SlimSellTiled, _tiled_flatten, _tiled_unflatten)

@@ -1,0 +1,85 @@
+"""Semirings for algebraic BFS (paper §III-A).
+
+A semiring S = (X, add, mul, zero, one):
+  * ``add`` is the reduction op of the SpMV (commutative monoid, identity ``zero``)
+  * ``mul`` combines a matrix value with a vector value (identity ``one``)
+  * ``zero`` is also the contribution of SlimSell padding entries (col == -1),
+    so that padding is a no-op under ``add``.
+
+The four semirings of the paper:
+  tropical (min, +,  inf, 0)   -> distances in-band
+  real     (+,  *,   0,   1)   -> path counts, frontier via filtering
+  boolean  (|,  &,   0,   1)   -> reachability bits, frontier via filtering
+  selmax   (max, *, -inf, 1)   -> parent ids in-band (0 encodes "unset")
+
+For sel-max we follow the paper's convention that 0 is the practical additive
+identity (all payloads are 1-based vertex ids, hence > 0), which keeps the
+frontier dtype unsigned-friendly and lets padding contribute 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    dtype: jnp.dtype
+    zero: float  # additive identity == padding contribution
+    one: float   # multiplicative identity == implicit SlimSell edge value
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+
+    def segment_reduce(self, data: Array, segment_ids: Array, num_segments: int) -> Array:
+        """Semiring-add reduction by key (used to combine SlimChunk tiles)."""
+        if self.name == "tropical":
+            return jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
+        if self.name in ("boolean", "selmax"):
+            return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+        return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+    def pall(self, x: Array, axis_name: str) -> Array:
+        """Cross-device semiring-add (used by the 2D distributed BFS)."""
+        if self.name == "tropical":
+            return jax.lax.pmin(x, axis_name)
+        if self.name in ("boolean", "selmax"):
+            return jax.lax.pmax(x, axis_name)
+        return jax.lax.psum(x, axis_name)
+
+
+TROPICAL = Semiring(
+    name="tropical", dtype=jnp.float32, zero=jnp.inf, one=0.0,
+    add=jnp.minimum, mul=lambda a, b: a + b,
+)
+
+REAL = Semiring(
+    name="real", dtype=jnp.float32, zero=0.0, one=1.0,
+    add=lambda a, b: a + b, mul=lambda a, b: a * b,
+)
+
+BOOLEAN = Semiring(
+    name="boolean", dtype=jnp.int32, zero=0, one=1,
+    add=jnp.maximum,            # | on {0,1}
+    mul=lambda a, b: a * b,     # & on {0,1}
+)
+
+SELMAX = Semiring(
+    name="selmax", dtype=jnp.float32, zero=0.0, one=1.0,
+    add=jnp.maximum, mul=lambda a, b: a * b,
+)
+
+SEMIRINGS = {s.name: s for s in (TROPICAL, REAL, BOOLEAN, SELMAX)}
+
+
+def get(name: str) -> Semiring:
+    try:
+        return SEMIRINGS[name]
+    except KeyError:
+        raise KeyError(f"unknown semiring {name!r}; available: {sorted(SEMIRINGS)}")

@@ -1,0 +1,107 @@
+"""Semiring SpMV over the tiled SlimSell layout (pure-JAX reference path).
+
+This is the jnp oracle used by tests and by the fused BFS loop; the Pallas
+kernel in ``repro.kernels.slimsell_spmv`` computes the same function with
+explicit VMEM tiling. ``val`` is never materialized: an edge contributes
+``mul(one, x[col]) == x[col]`` (``one`` is the multiplicative identity) and a
+padding slot (col == -1) contributes the additive identity ``zero``
+(paper §III-B, Listing 5's CMP+BLEND pair).
+
+Optionally a per-edge weight can be *derived* (not stored): ``edge_weight(row
+vertex, col vertex) -> w`` keeps the Slim property for weighted operators such
+as GCN's D^-1/2 A D^-1/2 (SlimSell-W, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .semiring import Semiring
+
+Array = jax.Array
+
+
+def tile_contributions(sr: Semiring, cols: Array, x: Array,
+                       row_vertex_of_tile: Optional[Array] = None,
+                       edge_weight: Optional[Callable] = None) -> Array:
+    """[T, C, L] semiring contributions of each column slot."""
+    pad = cols < 0
+    safe = jnp.where(pad, 0, cols)
+    gathered = jnp.take(x, safe, axis=0)  # [T, C, L]
+    if edge_weight is not None:
+        w = edge_weight(row_vertex_of_tile, safe)  # [T, C, L]
+        contrib = sr.mul(w, gathered)
+    else:
+        # implicit edge value is 1 in every semiring: tropical -> x+1 (hop),
+        # real/boolean/selmax -> x. Derived in-register, never loaded (SlimSell).
+        contrib = sr.mul(jnp.asarray(1, gathered.dtype), gathered)
+    return jnp.where(pad, jnp.asarray(sr.zero, contrib.dtype), contrib)
+
+
+def reduce_tiles(sr: Semiring, contrib: Array) -> Array:
+    """Reduce the L (column-slot) axis with the semiring add. [T,C,L] -> [T,C]."""
+    if sr.name == "tropical":
+        return contrib.min(axis=-1)
+    if sr.name in ("boolean", "selmax"):
+        return contrib.max(axis=-1)
+    return contrib.sum(axis=-1)
+
+
+def slimsell_spmv(sr: Semiring, tiled, x: Array, *,
+                  edge_weight: Optional[Callable] = None,
+                  tile_mask: Optional[Array] = None) -> Array:
+    """y = A (x) over semiring ``sr``; returns y in original vertex space [n].
+
+    tile_mask: optional bool[T]; masked-out tiles contribute ``zero``
+    (SlimWork's skip criterion expressed as a mask in the fused loop).
+    """
+    cols = tiled.cols
+    rv_tile = None
+    if edge_weight is not None:
+        rv_tile = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)  # [T, C]
+        rv_tile = rv_tile[:, :, None]
+    contrib = tile_contributions(sr, cols, x, rv_tile, edge_weight)
+    tile_red = reduce_tiles(sr, contrib)  # [T, C]
+    if tile_mask is not None:
+        tile_red = jnp.where(tile_mask[:, None], tile_red,
+                             jnp.asarray(sr.zero, tile_red.dtype))
+    # combine SlimChunk tiles of the same chunk
+    y_blocks = sr.segment_reduce(tile_red, tiled.row_block,
+                                 num_segments=tiled.n_chunks)  # [n_chunks, C]
+    # scatter chunk rows back to original vertex ids (-1 padding -> bucket n)
+    rv = tiled.row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, tiled.n, rv)
+    y = sr.segment_reduce(y_blocks.reshape(-1), ids, num_segments=tiled.n + 1)
+    return y[: tiled.n]
+
+
+def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
+                  edge_weight: Optional[Callable] = None) -> Array:
+    """Matrix RHS generalization: X is [n, d]; returns [n, d] (DESIGN.md §2).
+
+    Used as the GNN aggregation backend (real semiring == sum aggregation).
+    """
+    pad = tiled.cols < 0
+    safe = jnp.where(pad, 0, tiled.cols)
+    gathered = jnp.take(X, safe, axis=0)  # [T, C, L, d]
+    if edge_weight is not None:
+        rv_tile = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)[:, :, None]
+        w = edge_weight(rv_tile, safe)
+        gathered = sr.mul(w[..., None], gathered)
+    else:
+        gathered = sr.mul(jnp.asarray(1, gathered.dtype), gathered)
+    contrib = jnp.where(pad[..., None], jnp.asarray(sr.zero, gathered.dtype), gathered)
+    if sr.name == "tropical":
+        tile_red = contrib.min(axis=2)
+    elif sr.name in ("boolean", "selmax"):
+        tile_red = contrib.max(axis=2)
+    else:
+        tile_red = contrib.sum(axis=2)  # [T, C, d]
+    y_blocks = sr.segment_reduce(tile_red, tiled.row_block, num_segments=tiled.n_chunks)
+    rv = tiled.row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, tiled.n, rv)
+    y = sr.segment_reduce(y_blocks.reshape(-1, y_blocks.shape[-1]), ids,
+                          num_segments=tiled.n + 1)
+    return y[: tiled.n]

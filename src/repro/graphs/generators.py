@@ -1,0 +1,64 @@
+"""Synthetic graph generators (paper §IV benchmark inputs).
+
+* Kronecker / R-MAT power-law graphs with Graph500 parameters
+  (a=0.57, b=0.19, c=0.19, d=0.05) — the paper's "K" family.
+* Erdős–Rényi G(n, p) uniform-degree graphs — the paper's "ER" family.
+
+All generators are deterministic in ``seed`` and return host-side CSR.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.formats import CSRGraph, build_csr
+
+
+def kronecker(scale: int, edge_factor: int = 16, *, seed: int = 0,
+              a: float = 0.57, b: float = 0.19, c: float = 0.19) -> CSRGraph:
+    """Graph500 R-MAT generator: n = 2**scale vertices, m ≈ edge_factor * n."""
+    n = 1 << scale
+    m = edge_factor * n
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    ab, abc = a + b, a + b + c
+    for bit in range(scale):
+        r = rng.random(m)
+        right = r > ab                      # chose one of the two right quadrants
+        r2 = rng.random(m)
+        # within-quadrant split (Graph500 reference formulation)
+        dst_bit = np.where(right, r2 < c / (c + (1 - abc)), r2 < b / (a + b))
+        src |= right.astype(np.int64) << bit
+        dst |= dst_bit.astype(np.int64) << bit
+    # Graph500 permutes vertex labels to kill locality artifacts
+    perm = rng.permutation(n)
+    edges = np.stack([perm[src], perm[dst]], axis=1)
+    return build_csr(edges, n)
+
+
+def erdos_renyi(n: int, avg_degree: float, *, seed: int = 0) -> CSRGraph:
+    """G(n, p) with p chosen so the expected (undirected) degree is avg_degree."""
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_degree / 2)
+    edges = rng.integers(0, n, size=(int(m * 1.05) + 8, 2))
+    return build_csr(edges, n)
+
+
+def ring_of_cliques(n_cliques: int, clique: int, *, seed: int = 0) -> CSRGraph:
+    """High-diameter structured graph (road-network stand-in, paper 'rca')."""
+    blocks = []
+    for i in range(n_cliques):
+        base = i * clique
+        idx = np.arange(base, base + clique)
+        u, v = np.meshgrid(idx, idx)
+        blocks.append(np.stack([u.ravel(), v.ravel()], axis=1))
+        nxt = ((i + 1) % n_cliques) * clique
+        blocks.append(np.array([[base, nxt]]))
+    edges = np.concatenate(blocks, axis=0)
+    return build_csr(edges, n_cliques * clique)
+
+
+def star(n: int) -> CSRGraph:
+    """Max-degree stress graph (worst case for the W = O(..+ DCρ̂) bound)."""
+    edges = np.stack([np.zeros(n - 1, np.int64), np.arange(1, n)], axis=1)
+    return build_csr(edges, n)

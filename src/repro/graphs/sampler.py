@@ -1,0 +1,70 @@
+"""GraphSAGE-style k-hop neighbor sampler (minibatch_lg shape).
+
+Samples a fixed-fanout computation block per hop from host CSR; output edge
+arrays are padded to static shapes so the jitted train step never retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.formats import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledBlock:
+    node_ids: np.ndarray     # int32[n_nodes_pad] global ids (-1 pad)
+    edge_index: np.ndarray   # int32[2, n_edges_pad] LOCAL ids (-1 pad)
+    n_seeds: int             # first n_seeds node slots are the seed nodes
+    n_nodes: int
+    n_edges: int
+
+
+def sample_block(csr: CSRGraph, seeds: np.ndarray, fanouts: tuple[int, ...],
+                 *, rng: np.random.Generator,
+                 n_nodes_pad: int, n_edges_pad: int) -> SampledBlock:
+    """Uniform neighbor sampling, hop by hop; returns a padded local block."""
+    seeds = np.asarray(seeds, np.int64)
+    local = {int(v): i for i, v in enumerate(seeds)}
+    nodes = list(seeds)
+    edges_src: list[int] = []
+    edges_dst: list[int] = []
+    frontier = seeds
+    for fan in fanouts:
+        nxt = []
+        for v in frontier:
+            nbr = csr.indices[csr.indptr[v]:csr.indptr[v + 1]]
+            if nbr.size == 0:
+                continue
+            take = nbr if nbr.size <= fan else rng.choice(nbr, fan, replace=False)
+            for u in take:
+                u = int(u)
+                if u not in local:
+                    local[u] = len(nodes)
+                    nodes.append(u)
+                    nxt.append(u)
+                edges_src.append(local[u])
+                edges_dst.append(local[int(v)])
+        frontier = np.asarray(nxt, np.int64)
+    n_nodes, n_edges = len(nodes), len(edges_src)
+    node_ids = np.full(n_nodes_pad, -1, np.int32)
+    node_ids[:min(n_nodes, n_nodes_pad)] = np.asarray(nodes[:n_nodes_pad], np.int32)
+    ei = np.full((2, n_edges_pad), -1, np.int32)
+    ne = min(n_edges, n_edges_pad)
+    ei[0, :ne] = np.asarray(edges_src[:ne], np.int32)
+    ei[1, :ne] = np.asarray(edges_dst[:ne], np.int32)
+    return SampledBlock(node_ids=node_ids, edge_index=ei,
+                        n_seeds=len(seeds), n_nodes=n_nodes, n_edges=n_edges)
+
+
+def expected_block_sizes(batch_nodes: int, fanouts: tuple[int, ...]):
+    """Static padded sizes for a fanout schedule (worst case, pre-dedup)."""
+    n_nodes = batch_nodes
+    n_edges = 0
+    frontier = batch_nodes
+    for fan in fanouts:
+        n_edges += frontier * fan
+        frontier *= fan
+        n_nodes += frontier
+    return n_nodes, n_edges

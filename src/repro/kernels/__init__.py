@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (VMEM-tiled) + jit wrappers (ops) + jnp oracles (ref)."""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,91 @@
+"""Jitted wrappers around the Pallas kernels.
+
+The wrappers own everything outside the hot loop: SlimWork tile-id
+compaction, chunk-row -> vertex-space scatter, padding, and the
+interpret-mode switch (True on CPU so the kernels are validated everywhere;
+False on a real TPU backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring as sm
+from .slimsell_spmv import slimsell_spmv_pallas, semiring_ops
+from .slimsell_spmm import slimsell_spmm_pallas
+from .embedding_bag import embedding_bag_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def compact_tile_ids(tile_mask):
+    """SlimWork compaction: active tile ids first, tail repeats the last one.
+
+    Repeated trailing ids revisit the same blocks -> no DMA on skipped steps.
+    """
+    T = tile_mask.shape[0]
+    idx = jnp.arange(T, dtype=jnp.int32)
+    order = jnp.argsort(~tile_mask, stable=True).astype(jnp.int32)
+    n_active = tile_mask.sum(dtype=jnp.int32)
+    last = order[jnp.maximum(n_active - 1, 0)]
+    ids = jnp.where(idx < n_active, order, last)
+    return ids, n_active.reshape(1)
+
+
+@functools.partial(jax.jit, static_argnames=("sr_name", "interpret"))
+def spmv(sr_name: str, tiled, x, tile_mask=None, interpret=None):
+    """SlimSell SpMV via the Pallas kernel; returns y [n] in vertex space."""
+    interpret = _default_interpret() if interpret is None else interpret
+    sr = sm.get(sr_name)
+    T = tiled.cols.shape[0]
+    if tile_mask is None:
+        tile_ids = jnp.arange(T, dtype=jnp.int32)
+        n_active = jnp.asarray([T], jnp.int32)
+    else:
+        tile_ids, n_active = compact_tile_ids(tile_mask)
+    x = x.astype(sr.dtype)
+    y_blocks = slimsell_spmv_pallas(
+        tiled.cols, tile_ids, tiled.row_block, n_active, x,
+        sr_name=sr_name, n_chunks=tiled.n_chunks, interpret=interpret)
+    y_blocks = y_blocks[: tiled.n_chunks]
+    if tile_mask is not None:
+        # blocks never visited by the compacted grid hold garbage; mask them
+        chunk_active = jax.ops.segment_max(tile_mask.astype(jnp.int32),
+                                           tiled.row_block,
+                                           num_segments=tiled.n_chunks) > 0
+        y_blocks = jnp.where(chunk_active[:, None],
+                             y_blocks, jnp.asarray(sr.zero, y_blocks.dtype))
+    rv = tiled.row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, tiled.n, rv)
+    y = sr.segment_reduce(y_blocks.reshape(-1), ids, num_segments=tiled.n + 1)
+    return y[: tiled.n]
+
+
+@functools.partial(jax.jit, static_argnames=("sr_name", "weighted", "interpret"))
+def spmm(sr_name: str, tiled, X, deg=None, weighted=False, interpret=None):
+    """SlimSell SpMM (feature aggregation); returns Y [n, d] in vertex space."""
+    interpret = _default_interpret() if interpret is None else interpret
+    sr = sm.get(sr_name)
+    rv_tiles = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)  # [T, C]
+    y_blocks = slimsell_spmm_pallas(
+        tiled.cols, tiled.row_block, rv_tiles, X,
+        deg if deg is not None else jnp.ones((tiled.n,), jnp.float32),
+        sr_name=sr_name, n_chunks=tiled.n_chunks, weighted=weighted,
+        interpret=interpret)
+    y_blocks = y_blocks[: tiled.n_chunks]                 # [n_chunks, C, d]
+    rv = tiled.row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, tiled.n, rv)
+    y = sr.segment_reduce(y_blocks.reshape(-1, y_blocks.shape[-1]), ids,
+                          num_segments=tiled.n + 1)
+    return y[: tiled.n]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag(table, bags, mode: str = "sum", interpret=None):
+    """SlimSell-layout embedding bag; bags int32[B, K], -1 pads; -> [B, d]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return embedding_bag_pallas(table, bags, mode=mode, interpret=interpret)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: SlimSell semiring SpMV (paper Listing 5, §III-B..D).
+
+TPU-native realization of the paper's AVX kernel (DESIGN.md §2):
+
+* one grid step processes one SlimSell tile — a dense (C, L) block of column
+  indices (sublane = chunk row, lane = column slot);
+* ``val`` is derived in-register from ``cols`` (compare + select), never
+  loaded from HBM — the SlimSell storage/bandwidth saving;
+* the frontier ``x`` is pinned in VMEM (block index constant across the grid,
+  so it is DMA'd exactly once);
+* **SlimChunk** is the 2D tiling itself: tiles of one chunk revisit the same
+  output block and accumulate with the semiring add (split-K analogue);
+* **SlimWork** is scalar-prefetch grid *indirection*: the wrapper compacts
+  active tile ids into ``tile_ids`` (inactive tail repeats the last active
+  id); repeated ids map to the same blocks, so skipped steps issue no DMA and
+  `pl.when` skips their compute. On a fixed TPU grid this — not predication —
+  is what removes the memory traffic of finished chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def semiring_ops(name: str):
+    """(add, edge_contrib, zero) — edge value is the implicit SlimSell 1."""
+    if name == "tropical":
+        return jnp.minimum, lambda x: x + 1.0, jnp.inf
+    if name == "real":
+        return (lambda a, b: a + b), (lambda x: x), 0.0
+    if name == "boolean":
+        return jnp.maximum, (lambda x: x), 0
+    if name == "selmax":
+        return jnp.maximum, (lambda x: x), 0.0
+    raise ValueError(name)
+
+
+def _reduce_l(add_name: str, contrib):
+    if add_name == "tropical":
+        return contrib.min(axis=-1)
+    if add_name == "real":
+        return contrib.sum(axis=-1)
+    return contrib.max(axis=-1)
+
+
+def _spmv_kernel(tile_ids_ref, row_block_ref, n_active_ref,
+                 cols_ref, x_ref, out_ref, *, sr_name: str, chunk_blk: int):
+    add, contrib_fn, zero = semiring_ops(sr_name)
+    t = pl.program_id(0)
+    tid = tile_ids_ref[t]
+    chunk = row_block_ref[tid]
+    blk = chunk // chunk_blk
+
+    prev_tid = tile_ids_ref[jnp.maximum(t - 1, 0)]
+    prev_blk = row_block_ref[prev_tid] // chunk_blk
+    first_visit = (t == 0) | (blk != prev_blk)
+
+    @pl.when(first_visit)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, zero)
+
+    @pl.when(t < n_active_ref[0])
+    def _work():
+        cols = cols_ref[0]                      # [C, L]
+        pad = cols < 0
+        safe = jnp.where(pad, 0, cols)
+        xv = x_ref[...]                         # frontier, VMEM-resident
+        g = jnp.take(xv, safe.reshape(-1), axis=0).reshape(cols.shape)
+        contrib = jnp.where(pad, jnp.asarray(zero, xv.dtype), contrib_fn(g))
+        red = _reduce_l(sr_name, contrib)       # [C]
+        row = chunk % chunk_blk
+        cur = pl.load(out_ref, (pl.ds(row, 1), slice(None)))
+        pl.store(out_ref, (pl.ds(row, 1), slice(None)), add(cur, red[None, :]))
+
+
+@functools.partial(jax.jit, static_argnames=("sr_name", "chunk_blk", "n_chunks",
+                                             "interpret"))
+def slimsell_spmv_pallas(cols, tile_ids, row_block, n_active, x, *,
+                         sr_name: str, n_chunks: int, chunk_blk: int = 8,
+                         interpret: bool = True):
+    """Tile-level SpMV.  Returns y_blocks [n_chunks_pad, C] (chunk-row space).
+
+    cols:      int32[T, C, L]
+    tile_ids:  int32[T]  grid order (SlimWork compaction; tail repeats last)
+    row_block: int32[T]  owning chunk per tile
+    n_active:  int32[1]  number of live grid steps
+    x:         frontier [n_pad]
+    """
+    T, C, L = cols.shape
+    n_blk = -(-n_chunks // chunk_blk)
+    _, _, zero = semiring_ops(sr_name)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, C, L), lambda t, tids, rb, na: (tids[t], 0, 0)),
+            pl.BlockSpec(x.shape, lambda t, tids, rb, na: (0,)),
+        ],
+        out_specs=pl.BlockSpec((chunk_blk, C),
+                               lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
+    )
+    kernel = functools.partial(_spmv_kernel, sr_name=sr_name, chunk_blk=chunk_blk)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blk * chunk_blk, C), x.dtype),
+        interpret=interpret,
+    )(tile_ids, row_block, n_active, cols, x)

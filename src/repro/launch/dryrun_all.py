@@ -1,0 +1,81 @@
+"""Run the full dry-run matrix (every arch x shape x {single-pod, multi-pod})
+as subprocesses (each needs a fresh XLA with 512 host devices).
+
+    PYTHONPATH=src python -m repro.launch.dryrun_all [--only-failed]
+
+Results land in results/dryrun/<arch>__<shape>__{sp,mp}.json; existing OK
+results are skipped, so the runner is resumable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+RESULTS = "results/dryrun"
+
+
+def cell_list():
+    # defer to the registry without importing jax at 512 devices here
+    code = ("from repro.configs import all_cells; import json; "
+            "print(json.dumps(all_cells()))")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=dict(os.environ, PYTHONPATH="src"))
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def status_of(arch, shape, tag):
+    path = os.path.join(RESULTS, f"{arch}__{shape}__{tag}.json")
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f).get("status")
+    except Exception:
+        return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--rerun-failed", action="store_true")
+    ap.add_argument("--filter", default="")
+    args = ap.parse_args()
+    cells = cell_list()
+    todo = []
+    for arch, shape in cells:
+        for tag, mp in (("sp", False), ("mp", True)):
+            if args.filter and args.filter not in f"{arch}:{shape}":
+                continue
+            st = status_of(arch, shape, tag)
+            if st == "ok" or (st == "error" and not args.rerun_failed):
+                continue
+            todo.append((arch, shape, mp))
+    print(f"{len(todo)} runs to do", flush=True)
+    n_ok = n_err = 0
+    for i, (arch, shape, mp) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", RESULTS]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env=dict(os.environ, PYTHONPATH="src"))
+            ok = r.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok = False
+        n_ok += ok
+        n_err += (not ok)
+        print(f"[{i+1}/{len(todo)}] {'OK ' if ok else 'ERR'} "
+              f"{arch}:{shape}:{'mp' if mp else 'sp'} "
+              f"({time.time()-t0:.0f}s)  ok={n_ok} err={n_err}", flush=True)
+    print("done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

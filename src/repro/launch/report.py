@@ -1,0 +1,143 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Dry-run / §Roofline
+tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_si(x: float, unit: str = "") -> str:
+    for thresh, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "K")):
+        if abs(x) >= thresh:
+            return f"{x/thresh:.2f}{suf}{unit}"
+    return f"{x:.2f}{unit}"
+
+
+def dryrun_table(recs) -> str:
+    lines = ["| arch | shape | mesh | kind | status | peak GiB/chip | "
+             "compile s |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        mem = r.get("memory", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('kind','-')} | {r['status']} | "
+            f"{mem.get('peak_gib', float('nan')):.2f} | "
+            f"{r.get('compile_s','-')} |")
+    return "\n".join(lines)
+
+
+def lever(r) -> str:
+    """One sentence: what would move the dominant term down (§Roofline)."""
+    dom = r["roofline"]["dominant"]
+    kind = r.get("kind", "")
+    arch = r["arch"]
+    shape = r["shape"]
+    if arch == "bfs-graph500":
+        if "sliced" in shape:
+            return ("cols-array reads are the floor; next: fuse gather+min "
+                    "in the Pallas kernel (single HBM pass)")
+        return ("replace the replicated-frontier all-reduce with the "
+                "slot-space sliced exchange (see kron_s26_sliced: 16x)")
+    if arch == "dlrm-mlperf":
+        if kind == "train":
+            return ("sparse/segment embedding-gradient aggregation (dense "
+                    "table-shaped grad partials dominate, §Perf h3)")
+        if dom == "memory_s":
+            return ("memory term is a gather artifact; real lever: hybrid "
+                    "table placement (serve AR 4.4x, *_hybrid)")
+        return "batch lookups per table shard (all-to-all EP lookup)"
+    if kind == "decode":
+        return ("weight+KV reads are the decode floor: int8 KV cache or "
+                "larger serving batch to amortize")
+    if kind in ("train", "prefill") and dom == "collective_s":
+        return ("overlap FSDP/SP gathers with compute (latency-hiding "
+                "scheduler) and int8-EF compress the gradient leg")
+    if kind in ("train", "prefill") and dom == "memory_s":
+        return ("memory term carries the score-materialization caveat; "
+                "real lever: remat policy (save attention outputs)")
+    if dom == "memory_s":
+        return "bf16 features + feature-dim tiling to cut gather traffic"
+    return ("localize the scatter: partition edges by destination "
+            "(SlimSell 2D layout) so partial sums stay on-device")
+
+
+def roofline_table(recs, mesh="16x16") -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO flops | roofline frac | "
+             "what moves the dominant term |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+            f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+            f"{rl['dominant'].replace('_s','')} | "
+            f"{rl['useful_flops_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} | {lever(r)} |")
+    return "\n".join(lines)
+
+
+def summary(recs) -> str:
+    ok = [r for r in recs if r["status"] == "ok"]
+    err = [r for r in recs if r["status"] != "ok"]
+    out = [f"{len(ok)} ok / {len(err)} failed of {len(recs)} runs"]
+    for r in err:
+        out.append(f"  FAIL {r['arch']}:{r['shape']}:{r['mesh']} — "
+                   f"{r.get('error','?')[:100]}")
+    return "\n".join(out)
+
+
+def _splice(doc: str, tag: str, content: str) -> str:
+    start, end = f"<!-- {tag} -->", f"<!-- /{tag} -->"
+    pre = doc.split(start)[0]
+    post = doc.split(end)[1]
+    return pre + start + "\n\n" + content + "\n\n" + end + post
+
+
+def write_experiments(recs, path="EXPERIMENTS.md"):
+    """Regenerate the tables between the paired markers in EXPERIMENTS.md."""
+    with open(path) as f:
+        doc = f.read()
+    doc = _splice(doc, "DRYRUN_TABLE", summary(recs) + "\n\n"
+                  + dryrun_table(recs))
+    doc = _splice(doc, "ROOFLINE_TABLE", roofline_table(recs, "16x16"))
+    with open(path, "w") as f:
+        f.write(doc)
+    print(f"wrote tables into {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--write-experiments", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.write_experiments:
+        write_experiments(recs)
+        return
+    print(summary(recs))
+    print("\n### Dry-run matrix\n")
+    print(dryrun_table(recs))
+    print(f"\n### Roofline ({args.mesh})\n")
+    print(roofline_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Roofline-term extraction from a compiled dry-run artifact (§Roofline).
+
+Hardware constants (TPU v5e target):
+  peak bf16 compute  197 TFLOP/s / chip
+  HBM bandwidth      819 GB/s / chip
+  ICI bandwidth      ~50 GB/s / link
+
+Terms (per executed step, per chip — the SPMD module IS the per-chip program):
+  compute    = HLO_FLOPs / peak
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / link_bw
+
+``collective_bytes`` is parsed from the post-SPMD HLO text: for each
+all-gather / reduce-scatter / all-to-all / collective-permute we count the
+op's output bytes; all-reduce counts 2x its size (ring = reduce-scatter +
+all-gather). cost_analysis() does not include collectives, so this parse is
+the only source for the third term.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  %all-gather.3 = bf16[4,1024,512]{2,1,0} all-gather(...)
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\(([^)]*)\)[^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind byte totals (per device) from the SPMD module text."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:  # async pairs: count the start only
+            continue
+        m = _COLL_RE.search(line)
+        kinds = []
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            b = _shape_bytes(dtype, dims)
+            kinds.append((kind, b))
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                b = sum(_shape_bytes(d, s) for d, s in
+                        _SHAPE_RE.findall(mt.group(1)))
+                kinds.append((kind, b))
+        for kind, b in kinds:
+            if kind == "all-reduce":
+                b *= 2  # ring AR = RS + AG
+            out[kind] = out.get(kind, 0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def roofline(cost: dict, coll: dict, n_devices: int, model_flops: float) -> dict:
+    """Assemble the three terms + the useful-compute ratio."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(coll.get("total", 0.0))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll_dev,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / (flops_dev * n_devices)
+                               if flops_dev else 0.0),
+        # fraction of roofline-optimal time spent on the compute term: how
+        # close the step is to being compute-bound at peak
+        "roofline_fraction": (t_compute / bound) if bound > 0 else 0.0,
+    }

@@ -1,0 +1,314 @@
+"""GNN architectures: GCN, GIN, EGNN, NequIP (assigned pool, 4 archs).
+
+Message passing is built on ``jax.ops.segment_sum`` over an edge-index list
+(-1-padded edges are dropped) — the JAX-native scatter path — with the
+paper's SlimSell layout available as an alternative aggregation backend for
+the SpMM-regime models (GCN/GIN): ``aggregation="slimsell"`` routes
+neighborhood sums through core.spmv.slimsell_spmm / the Pallas kernel
+(DESIGN.md §5 Arch-applicability).
+
+NequIP's E(3)-equivariant tensor products use the Cartesian form of the
+l<=2 irreps (scalars; vectors; traceless-symmetric rank-2 tensors) instead of
+an e3nn CG table — products are dot/cross/symmetric-outer contractions, which
+map onto TPU einsums directly. Equivariance is asserted by tests (rotate
+inputs -> outputs co-rotate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------- primitives
+
+
+def seg_sum(data: Array, ids: Array, n: int) -> Array:
+    """segment_sum with -1-padded ids dropped (bucket n, sliced off)."""
+    safe = jnp.where(ids < 0, n, ids)
+    return jax.ops.segment_sum(data, safe, num_segments=n + 1)[:n]
+
+
+def gather_nodes(x: Array, ids: Array) -> Array:
+    return jnp.take(x, jnp.maximum(ids, 0), axis=0)
+
+
+def mlp_init(key, sizes, dtype=jnp.float32):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [{"w": (jax.random.normal(k, (a, b), jnp.float32)
+                   * (2.0 / a) ** 0.5).astype(dtype),
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(layers, x, act=jax.nn.silu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ------------------------------------------------------------------------ GCN
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_in: int = 1433
+    n_classes: int = 7
+    aggregation: str = "segment"    # "segment" | "slimsell"
+    dtype: Any = jnp.float32
+
+
+def gcn_init(cfg: GCNConfig, key):
+    sizes = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = jax.random.split(key, cfg.n_layers)
+    return {"w": [
+        (jax.random.normal(k, (a, b), jnp.float32) * (1.0 / a) ** 0.5
+         ).astype(cfg.dtype)
+        for k, a, b in zip(ks, sizes[:-1], sizes[1:])]}
+
+
+def _gcn_aggregate(x, batch, n, aggregation):
+    if aggregation == "slimsell":
+        from repro.core import semiring as sm
+        from repro.core.spmv import slimsell_spmm
+        from repro.kernels.ref import gcn_edge_weight
+        return slimsell_spmm(sm.REAL, batch["tiled"], x,
+                             edge_weight=gcn_edge_weight(batch["deg"]))
+    src, dst = batch["edge_index"]
+    deg = jnp.maximum(batch["deg"].astype(jnp.float32), 1.0)
+    w = (jax.lax.rsqrt(gather_nodes(deg, src))
+         * jax.lax.rsqrt(gather_nodes(deg, dst)))
+    w = jnp.where(src < 0, 0.0, w)
+    msg = gather_nodes(x, src) * w[:, None]
+    return seg_sum(msg, dst, n)
+
+
+def gcn_forward(params, batch, cfg: GCNConfig):
+    """batch: node_feat [N,F], edge_index int32[2,E] (-1 pad), deg [N]."""
+    x = batch["node_feat"].astype(cfg.dtype)
+    n = x.shape[0]
+    for i, w in enumerate(params["w"]):
+        x = _gcn_aggregate(x @ w, batch, n, cfg.aggregation)
+        if i < len(params["w"]) - 1:
+            x = jax.nn.relu(x)
+    return x  # logits [N, n_classes]
+
+
+# ------------------------------------------------------------------------ GIN
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str = "gin-tu"
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_in: int = 64
+    n_classes: int = 2
+    aggregation: str = "segment"
+    dtype: Any = jnp.float32
+
+
+def gin_init(cfg: GINConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    d = cfg.d_in
+    for i in range(cfg.n_layers):
+        layers.append({
+            "mlp": mlp_init(ks[i], [d, cfg.d_hidden, cfg.d_hidden], cfg.dtype),
+            "eps": jnp.zeros((), jnp.float32),
+        })
+        d = cfg.d_hidden
+    return {"layers": layers,
+            "readout": mlp_init(ks[-1], [cfg.d_hidden, cfg.n_classes], cfg.dtype)}
+
+
+def gin_forward(params, batch, cfg: GINConfig):
+    """Graph classification: graph_ids [N] pools node states per graph."""
+    x = batch["node_feat"].astype(cfg.dtype)
+    n = x.shape[0]
+    src, dst = batch["edge_index"]
+    for lp in params["layers"]:
+        if cfg.aggregation == "slimsell":
+            from repro.core import semiring as sm
+            from repro.core.spmv import slimsell_spmm
+            agg = slimsell_spmm(sm.REAL, batch["tiled"], x)
+        else:
+            agg = seg_sum(gather_nodes(x, src), dst, n)
+        x = mlp_apply(lp["mlp"], (1.0 + lp["eps"]) * x + agg, act=jax.nn.relu,
+                      final_act=True)
+    g = seg_sum(x, batch["graph_ids"], batch["n_graphs"])
+    return mlp_apply(params["readout"], g)  # [n_graphs, n_classes]
+
+
+# ----------------------------------------------------------------------- EGNN
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    dtype: Any = jnp.float32
+
+
+def egnn_init(cfg: EGNNConfig, key):
+    ks = jax.random.split(key, 4 * cfg.n_layers + 2)
+    h = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "phi_e": mlp_init(ks[4 * i], [2 * h + 1, h, h], cfg.dtype),
+            "phi_x": mlp_init(ks[4 * i + 1], [h, h, 1], cfg.dtype),
+            "phi_h": mlp_init(ks[4 * i + 2], [2 * h, h, h], cfg.dtype),
+        })
+    return {"embed": mlp_init(ks[-2], [cfg.d_in, h], cfg.dtype),
+            "layers": layers,
+            "readout": mlp_init(ks[-1], [h, h, 1], cfg.dtype)}
+
+
+def egnn_forward(params, batch, cfg: EGNNConfig):
+    """E(n)-equivariant: returns (energy [n_graphs], coords [N,3])."""
+    h = mlp_apply(params["embed"], batch["node_feat"].astype(cfg.dtype))
+    x = batch["pos"].astype(cfg.dtype)
+    n = h.shape[0]
+    src, dst = batch["edge_index"]
+    valid = (src >= 0)[:, None]
+    deg = jnp.maximum(seg_sum(valid.astype(jnp.float32), dst, n), 1.0)
+    for lp in params["layers"]:
+        xi, xj = gather_nodes(x, dst), gather_nodes(x, src)
+        hi, hj = gather_nodes(h, dst), gather_nodes(h, src)
+        d2 = jnp.sum((xi - xj) ** 2, axis=-1, keepdims=True)
+        m = mlp_apply(lp["phi_e"], jnp.concatenate([hi, hj, jnp.log1p(d2)], -1),
+                      final_act=True) * valid
+        coef = jnp.tanh(mlp_apply(lp["phi_x"], m)) * valid
+        # normalized relative vector + mean-aggregation keep updates stable
+        rel = (xi - xj) / (jnp.sqrt(d2) + 1.0)
+        x = x + seg_sum(rel * coef, dst, n) / deg
+        agg = seg_sum(m, dst, n)
+        h = h + mlp_apply(lp["phi_h"], jnp.concatenate([h, agg], -1))
+    e = seg_sum(mlp_apply(params["readout"], h), batch["graph_ids"],
+                batch["n_graphs"])[:, 0]
+    return e, x
+
+
+# --------------------------------------------------------------------- NequIP
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32      # channels per irrep order
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 4
+    dtype: Any = jnp.float32
+
+
+def _rbf(r, n_rbf, cutoff):
+    mu = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(r / cutoff, 0, 1)) + 1.0)
+    return jnp.exp(-gamma * (r[..., None] - mu) ** 2) * env[..., None]
+
+
+def _y2(rhat):
+    """Traceless symmetric rank-2 SH in Cartesian form: r̂r̂ᵀ − I/3."""
+    outer = rhat[..., :, None] * rhat[..., None, :]
+    return outer - jnp.eye(3) / 3.0
+
+
+def nequip_init(cfg: NequIPConfig, key):
+    c = cfg.d_hidden
+    ks = jax.random.split(key, 3 * cfg.n_layers + 2)
+    layers = []
+    n_paths = 9
+    for i in range(cfg.n_layers):
+        layers.append({
+            # radial MLP -> per-path, per-channel tensor-product weights
+            "radial": mlp_init(ks[3 * i], [cfg.n_rbf, 32, n_paths * c], cfg.dtype),
+            # equivariant channel mixers (per irrep order)
+            "mix0": (jax.random.normal(ks[3 * i + 1], (2 * c, c)) / (2 * c) ** 0.5
+                     ).astype(cfg.dtype),
+            "mix1": (jax.random.normal(ks[3 * i + 2], (2 * c, c)) / (2 * c) ** 0.5
+                     ).astype(cfg.dtype),
+            "mix2": (jax.random.normal(ks[3 * i + 2], (2 * c, c)) / (2 * c) ** 0.5
+                     ).astype(cfg.dtype),
+            "gate": mlp_init(ks[3 * i + 1], [c, 2 * c], cfg.dtype),
+        })
+    return {"embed": (jax.random.normal(ks[-2], (cfg.n_species, c)) * 0.5
+                      ).astype(cfg.dtype),
+            "layers": layers,
+            "readout": mlp_init(ks[-1], [c, 16, 1], cfg.dtype)}
+
+
+def nequip_forward(params, batch, cfg: NequIPConfig):
+    """Interatomic potential: species int32[N], pos [N,3] -> energy [n_graphs].
+
+    Feature irreps: h0 [N,c] scalars, h1 [N,c,3] vectors, h2 [N,c,3,3]
+    traceless-symmetric tensors. Each layer: per-edge tensor products of
+    sender irreps with edge SH (Y0=1, Y1=r̂, Y2=r̂r̂ᵀ−I/3) weighted by a radial
+    MLP; scatter-sum; channel mix; gated nonlinearity.
+    """
+    c = cfg.d_hidden
+    n = batch["pos"].shape[0]
+    src, dst = batch["edge_index"]
+    valid = (src >= 0)
+    h0 = jnp.take(params["embed"], jnp.maximum(batch["species"], 0), axis=0)
+    h1 = jnp.zeros((n, c, 3), cfg.dtype)
+    h2 = jnp.zeros((n, c, 3, 3), cfg.dtype)
+
+    xi = gather_nodes(batch["pos"], dst)
+    xj = gather_nodes(batch["pos"], src)
+    rvec = xi - xj
+    r = jnp.sqrt(jnp.sum(rvec ** 2, -1) + 1e-12)
+    rhat = rvec / r[..., None]
+    y1 = rhat                                 # [E, 3]
+    y2 = _y2(rhat)                            # [E, 3, 3]
+    rb = _rbf(r, cfg.n_rbf, cfg.cutoff) * valid[:, None]
+
+    for lp in params["layers"]:
+        w = mlp_apply(lp["radial"], rb).reshape(-1, 9, c)  # [E, path, c]
+        s0, s1, s2 = gather_nodes(h0, src), gather_nodes(h1, src), gather_nodes(h2, src)
+        # --- tensor-product paths (sender ⊗ Y -> receiver irrep)
+        m0 = (w[:, 0] * s0                                        # 0x0->0
+              + w[:, 1] * jnp.einsum("eci,ei->ec", s1, y1)        # 1x1->0
+              + w[:, 2] * jnp.einsum("ecij,eij->ec", s2, y2))     # 2x2->0
+        m1 = (w[:, 3, :, None] * s0[..., None] * y1[:, None, :]   # 0x1->1
+              + w[:, 4, :, None] * s1                             # 1x0->1
+              + w[:, 5, :, None] * jnp.cross(s1, y1[:, None, :])  # 1x1->1
+              + w[:, 6, :, None] * jnp.einsum("ecij,ej->eci", s2, y1))  # 2x1->1
+        outer = 0.5 * (s1[..., :, None] * y1[:, None, None, :]
+                       + s1[..., None, :] * y1[:, None, :, None])
+        tr = jnp.einsum("ecii->ec", outer)
+        sym = outer - tr[..., None, None] * jnp.eye(3) / 3.0      # 1x1->2
+        m2 = (w[:, 7, :, None, None] * s0[..., None, None] * y2[:, None]  # 0x2->2
+              + w[:, 8, :, None, None] * sym)
+        vmask = valid[:, None]
+        a0 = seg_sum(m0 * vmask, dst, n)
+        a1 = seg_sum(m1 * vmask[..., None], dst, n)
+        a2 = seg_sum(m2 * vmask[..., None, None], dst, n)
+        # --- equivariant channel mixing (concat self + aggregated)
+        h0n = jnp.concatenate([h0, a0], -1) @ lp["mix0"]
+        h1n = jnp.einsum("ncx,cd->ndx", jnp.concatenate([h1, a1], 1), lp["mix1"]
+                         .reshape(2 * c, c))
+        h2n = jnp.einsum("ncxy,cd->ndxy", jnp.concatenate([h2, a2], 1),
+                         lp["mix2"].reshape(2 * c, c))
+        # --- gated nonlinearity: scalars via silu, l>0 via scalar sigmoids
+        gates = mlp_apply(lp["gate"], h0n)
+        g1, g2 = jnp.split(jax.nn.sigmoid(gates), 2, axis=-1)
+        h0 = jax.nn.silu(h0n)
+        h1 = h1n * g1[..., None]
+        h2 = h2n * g2[..., None, None]
+    e_atom = mlp_apply(params["readout"], h0)[:, 0]
+    return seg_sum(e_atom, batch["graph_ids"], batch["n_graphs"])

@@ -1,0 +1,155 @@
+"""Transformer building blocks: RMSNorm, RoPE, flash-style attention.
+
+Attention is implemented as a pure-JAX flash algorithm (nested scans over
+query/key chunks with a running max/sum), which bounds the lowered HLO's
+temporaries to O(S * chunk) instead of O(S^2) — this is what lets the 32k
+prefill cells compile within per-chip HBM at 512 devices. ``chunked``
+attention (llama4 iRoPE-style local attention) reuses the same loop with an
+extra window mask.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_freqs(positions: Array, d_head: int, theta: float = 10000.0) -> tuple[Array, Array]:
+    """positions int32[...]; returns (cos, sin) [..., d_head//2] fp32."""
+    half = d_head // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array, *, style: str = "half") -> Array:
+    """x [..., S, H, Dh]; cos/sin [..., S, Dh//2].
+
+    style="half": llama rotate-half pairing (i, i+Dh/2).
+    style="interleaved": GPT-NeoX pairing (2i, 2i+1) — pairs stay inside a
+      head_dim shard, so archs whose head count is not divisible by the tp
+      extent can shard Dh instead with zero resharding (DESIGN.md §3).
+    """
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    if style == "half":
+        x1, x2 = jnp.split(x, 2, axis=-1)
+        r1 = x1 * cos - x2 * sin
+        r2 = x2 * cos + x1 * sin
+        return jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def _chunk_mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:  # iRoPE-style local attention within chunks
+        m &= (q_pos[:, None] // window) == (k_pos[None, :] // window)
+    return m
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: Optional[int] = None, q_chunk: int = 1024,
+                    kv_chunk: int = 1024) -> Array:
+    """q [B,Sq,H,Dh], k/v [B,Skv,KV,Dh] (GQA: H = KV*G). Returns [B,Sq,H,Dh].
+
+    Online-softmax over kv chunks, scanned over q chunks; all intermediates
+    are [B, KV, G, q_chunk, kv_chunk].
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    Sq0, Skv0 = Sq, Skv
+    if Sq % q_chunk:  # pad; padded q rows are sliced off at the end
+        q = jnp.pad(q, ((0, 0), (0, -Sq % q_chunk), (0, 0), (0, 0)))
+        Sq = q.shape[1]
+    if Skv % kv_chunk:  # pad; padded keys are masked via k_pos >= Skv0
+        k = jnp.pad(k, ((0, 0), (0, -Skv % kv_chunk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, -Skv % kv_chunk), (0, 0), (0, 0)))
+        Skv = k.shape[1]
+    scale = Dh ** -0.5
+
+    qr = q.reshape(B, Sq // q_chunk, q_chunk, KV, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(B, Skv // kv_chunk, kv_chunk, KV, Dh).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, Skv // kv_chunk, kv_chunk, KV, Dh).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx
+        q_pos = iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kv_idx):
+            m, l, acc = carry
+            kj, vj, jk = kv_idx
+            k_pos = jk * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _chunk_mask(q_pos, k_pos, causal=causal, window=window)
+            mask &= (k_pos < Skv0)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk, Dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (kr, vr, jnp.arange(Skv // kv_chunk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, o = jax.lax.scan(q_step, None, (qr, jnp.arange(Sq // q_chunk)))
+    # o: [nq, B, KV, G, q_chunk, Dh] -> [B, Sq, H, Dh]
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, Dh)
+    return o[:, :Sq0].astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, pos: Array,
+                     *, window: Optional[int] = None) -> Array:
+    """One-token attention against a cache.
+
+    q [B,1,H,Dh], caches [B,S,KV,Dh], pos int32[B] (entries <= written length).
+    Softmax runs in fp32 over the (possibly `data`-sharded, long_500k) cache
+    axis; GSPMD turns the max/sum into all-reduces — a flash-decoding-style
+    distributed LSE combine.
+    """
+    B, S, KV, Dh = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * (Dh ** -0.5)
+    k_pos = jnp.arange(S)
+    valid = k_pos[None] < pos[:, None] + 1
+    if window is not None:
+        valid &= (k_pos[None] // window) == (pos[:, None] // window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                   v_cache, preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)

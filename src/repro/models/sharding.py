@@ -1,0 +1,60 @@
+"""Logical -> mesh axis mapping and divisibility-aware PartitionSpecs.
+
+The production mesh is (data=16, model=16), optionally with a leading
+pod axis (DESIGN.md §3):
+  dp   — batch/token parallelism          -> ('pod', 'data')
+  fsdp — ZeRO-3 weight/optimizer sharding -> ('pod', 'data')
+  tp   — tensor/expert/sequence parallel  -> 'model'
+
+``shard_dim`` falls back to replication whenever a dimension is not divisible
+by the mapped mesh extent (e.g. smollm's 9 heads over model=16), so every
+assigned architecture lowers on the same mesh without bespoke hacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    dp: tuple[str, ...] = ("data",)
+    fsdp: tuple[str, ...] = ("data",)
+    tp: str = "model"
+
+    @staticmethod
+    def for_mesh(mesh: Mesh) -> "AxisRules":
+        names = mesh.axis_names
+        if "pod" in names:
+            return AxisRules(dp=("pod", "data"), fsdp=("pod", "data"), tp="model")
+        return AxisRules(dp=("data",), fsdp=("data",), tp="model")
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def shard_dim(mesh: Mesh, dim: int, axes) -> Optional[tuple | str]:
+    """Return the P() entry for a dim of given size: axes if divisible, else None."""
+    if axes is None:
+        return None
+    size = axis_size(mesh, axes)
+    if size > 1 and dim % size == 0:
+        return tuple(axes) if not isinstance(axes, str) else axes
+    return None
+
+
+def spec(mesh: Mesh, shape: Sequence[int], axes: Sequence) -> P:
+    """Build a PartitionSpec, silently replicating non-divisible dims."""
+    return P(*[shard_dim(mesh, d, a) for d, a in zip(shape, axes)])
+
+
+def named(mesh: Mesh, shape, axes) -> NamedSharding:
+    return NamedSharding(mesh, spec(mesh, shape, axes))

@@ -1,0 +1,4 @@
+"""Optimizers (pure JAX, optax-free): AdamW, Muon, SGD + grad utilities."""
+from .optimizers import (adamw, muon, sgd, Optimizer, clip_by_global_norm,
+                         global_norm)
+from .compress import int8_compress_ef  # noqa: F401

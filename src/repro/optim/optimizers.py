@@ -1,0 +1,174 @@
+"""Optimizers as (init, update) pairs over arbitrary param pytrees.
+
+* ``adamw`` — fp32 moments (ZeRO-sharded like the params they track).
+* ``muon``  — momentum + Newton–Schulz orthogonalization on >=2D weights
+  (Kimi K2 trains with a Muon variant; a single bf16 momentum state is what
+  makes the 1T-param config fit the 512-chip optimizer-memory budget,
+  DESIGN.md §3). Non-matrix leaves (norms, embeddings) fall back to AdamW.
+* ``sgd`` — momentum SGD, used by the GNN examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda l: (l * scale).astype(l.dtype), tree), g
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def _newton_schulz(G: jax.Array, steps: int = 5, eps: float = 1e-7) -> jax.Array:
+    """Orthogonalize the trailing-2D matrix (Muon's NS5 iteration)."""
+    a, b, c = 3.4445, -4.7750, 2.0315
+    X = G.astype(jnp.bfloat16)
+    transpose = G.shape[-2] > G.shape[-1]
+    if transpose:
+        X = X.swapaxes(-1, -2)
+    X = X / (jnp.linalg.norm(X, axis=(-2, -1), keepdims=True) + eps)
+
+    def body(X, _):
+        A = X @ X.swapaxes(-1, -2)
+        B = b * A + c * A @ A
+        return a * X + B @ X, None
+
+    X, _ = jax.lax.scan(body, X, None, length=steps)
+    if transpose:
+        X = X.swapaxes(-1, -2)
+    return X.astype(jnp.float32)
+
+
+def _map_with_state(fn, grads, params, state):
+    """tree.map over (g, p, st) where state leaves are {mom, m, v} dicts."""
+    g_flat, treedef = jax.tree_util.tree_flatten(grads)
+    p_flat = jax.tree_util.tree_leaves(params)
+    s_flat = jax.tree_util.tree_leaves(
+        state, is_leaf=lambda x: isinstance(x, dict) and set(x) == {"mom", "m", "v"})
+    out = [fn(g, p, s) for g, p, s in zip(g_flat, p_flat, s_flat)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def muon(lr: float = 0.02, momentum: float = 0.95, ns_steps: int = 5,
+         adam_lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+         eps: float = 1e-8) -> Optimizer:
+    """Muon on stacked layer weights (ndim >= 3), AdamW on the rest
+    (embeddings/norms — standard Muon practice).
+
+    Memory discipline for 1T-param models (EXPERIMENTS.md §Perf, kimi):
+    * muon leaves keep ONE bf16 momentum buffer — no fp32 AdamW moments
+      (16 bytes/param -> 2 bytes/param of optimizer state);
+    * the fp32 momentum math + Newton-Schulz run per-layer via ``lax.map``
+      over the stacked leading axis, so optimizer temporaries are one layer
+      slice, not the whole [L, E, D, F] tensor (27 GiB/layer -> <1 GiB).
+    """
+
+    def is_muon(p):
+        return p.ndim >= 3
+
+    def init(params):
+        def st(p):
+            if is_muon(p):
+                return {"mom": jnp.zeros(p.shape, jnp.bfloat16),
+                        "m": jnp.zeros((0,), jnp.float32),
+                        "v": jnp.zeros((0,), jnp.float32)}
+            return {"mom": jnp.zeros((0,), jnp.bfloat16),
+                    "m": jnp.zeros(p.shape, jnp.float32),
+                    "v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(st, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, p, st):
+            if is_muon(p):
+                def one_layer(args):
+                    gl, moml, pl = args
+                    m = momentum * moml.astype(jnp.float32) \
+                        + gl.astype(jnp.float32)
+                    sh = m.shape
+                    o = _newton_schulz(m.reshape(-1, *sh[-2:]),
+                                       ns_steps).reshape(sh)
+                    scale = (max(1.0, sh[-2] / sh[-1])) ** 0.5
+                    return ((pl.astype(jnp.float32) - lr * scale * o
+                             ).astype(pl.dtype), m.astype(jnp.bfloat16))
+                new_p, new_mom = jax.lax.map(one_layer, (g, st["mom"], p))
+                return new_p, {"mom": new_mom, "m": st["m"], "v": st["v"]}
+            g32 = g.astype(jnp.float32)
+            m = b1 * st["m"] + (1 - b1) * g32
+            v = b2 * st["v"] + (1 - b2) * g32 * g32
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return ((p.astype(jnp.float32) - adam_lr * u).astype(p.dtype),
+                    {"mom": st["mom"], "m": m, "v": v})
+
+        # grads/params are the structure; state leaves are {mom, m, v} dicts
+        out = _map_with_state(upd, grads, params, state)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+        out = jax.tree.map(upd, grads, state, params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_m
+
+    return Optimizer(init, update)

@@ -1,0 +1,105 @@
+"""BFS engine vs the queue-based oracle (and networkx) on all semirings."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bfs import bfs
+from repro.core.bfs_traditional import bfs_traditional
+from repro.core.formats import build_csr, build_slimsell
+from repro.graphs.generators import erdos_renyi, kronecker, ring_of_cliques
+
+SEMIRINGS = ["tropical", "real", "boolean", "selmax"]
+
+
+def _check_parents(d, p, csr, root):
+    reach = d > 0
+    assert p[root] == root
+    assert (p[d < 0] == -1).all()
+    pv = p[reach]
+    assert (d[pv] == d[reach] - 1).all()
+    # parent must be a real neighbor
+    for v in np.nonzero(reach)[0][:50]:
+        assert p[v] in csr.neighbors(v)
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("mode", ["fused", "hostloop"])
+def test_bfs_matches_oracle(semiring, mode):
+    csr = kronecker(9, 8, seed=1)
+    tiled = build_slimsell(csr, C=8, L=32).to_jax()
+    root = int(np.argmax(csr.deg))
+    d_ref, _ = bfs_traditional(csr, root)
+    res = bfs(tiled, root, semiring, need_parents=True, mode=mode)
+    assert np.array_equal(res.distances, d_ref)
+    _check_parents(res.distances, res.parents, csr, root)
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+def test_bfs_disconnected_and_high_diameter(semiring):
+    csr = ring_of_cliques(16, 4)
+    tiled = build_slimsell(csr, C=8, L=8).to_jax()
+    d_ref, _ = bfs_traditional(csr, 0)
+    res = bfs(tiled, 0, semiring)
+    assert np.array_equal(res.distances, d_ref)
+    assert res.iterations >= 8  # ring: D ~ n_cliques/2
+
+
+def test_bfs_against_networkx():
+    nx = pytest.importorskip("networkx")
+    csr = erdos_renyi(300, 5, seed=7)
+    g = nx.Graph()
+    g.add_nodes_from(range(csr.n))
+    for v in range(csr.n):
+        for u in csr.neighbors(v):
+            g.add_edge(v, int(u))
+    tiled = build_slimsell(csr, C=8, L=16).to_jax()
+    lengths = nx.single_source_shortest_path_length(g, 0)
+    res = bfs(tiled, 0, "tropical")
+    for v in range(csr.n):
+        assert res.distances[v] == lengths.get(v, -1)
+
+
+def test_slimwork_reduces_work():
+    csr = kronecker(10, 16, seed=3)
+    tiled = build_slimsell(csr, C=8, L=32).to_jax()
+    root = int(np.argmax(csr.deg))
+    res = bfs(tiled, root, "tropical", mode="hostloop", slimwork=True)
+    full = bfs(tiled, root, "tropical", mode="hostloop", slimwork=False)
+    assert np.array_equal(res.distances, full.distances)
+    assert res.work_log.sum() < full.work_log.sum()
+    # late iterations should collapse (paper Fig. 5d)
+    assert res.work_log[-1] < res.work_log.max()
+
+
+def test_direction_optimizing_oracle_agrees():
+    csr = kronecker(9, 16, seed=5)
+    root = int(np.argmax(csr.deg))
+    d1, _ = bfs_traditional(csr, root)
+    d2, p2 = bfs_traditional(csr, root, direction_optimizing=True)
+    assert np.array_equal(d1, d2)
+    _check_parents(d2, p2, csr, root)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 150), avg=st.integers(1, 8), seed=st.integers(0, 99),
+       semiring=st.sampled_from(SEMIRINGS))
+def test_bfs_property_random_graphs(n, avg, seed, semiring):
+    csr = erdos_renyi(n, avg, seed=seed)
+    tiled = build_slimsell(csr, C=4, L=8).to_jax()
+    rng = np.random.default_rng(seed)
+    root = int(rng.integers(0, n))
+    d_ref, _ = bfs_traditional(csr, root)
+    res = bfs(tiled, root, semiring)
+    assert np.array_equal(res.distances, d_ref)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sigma=st.sampled_from([1, 4, 64, 10_000]), C=st.sampled_from([4, 8, 16]),
+       L=st.sampled_from([8, 32]))
+def test_bfs_invariant_to_layout_params(sigma, C, L):
+    """Distances must not depend on sigma/C/L (pure layout choices)."""
+    csr = kronecker(8, 8, seed=2)
+    tiled = build_slimsell(csr, C=C, L=L, sigma=sigma).to_jax()
+    d_ref, _ = bfs_traditional(csr, 3)
+    res = bfs(tiled, 3, "tropical")
+    assert np.array_equal(res.distances, d_ref)

@@ -1,0 +1,81 @@
+"""Graph representation tests: builders + paper Table III storage identities."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (build_csr, build_slimsell, sellcs_order,
+                                storage_summary)
+from repro.graphs.generators import erdos_renyi, kronecker, ring_of_cliques, star
+
+
+def test_csr_build_dedup_undirected():
+    edges = np.array([[0, 1], [1, 0], [0, 1], [2, 2], [1, 2]])
+    csr = build_csr(edges, 3)
+    assert csr.m_undirected == 2
+    assert csr.nnz == 4
+    assert list(csr.neighbors(1)) == [0, 2]
+
+
+def test_sellcs_order_sorts_within_sigma():
+    deg = np.array([5, 1, 9, 3, 7, 2, 8, 4])
+    perm = sellcs_order(deg, sigma=4)
+    # each window of 4 is internally degree-descending
+    for w in range(0, 8, 4):
+        win = deg[perm[w:w + 4]]
+        assert (np.diff(win) <= 0).all()
+    assert sorted(perm.tolist()) == list(range(8))
+
+
+def test_tiled_layout_roundtrip():
+    csr = kronecker(8, 8, seed=0)
+    t = build_slimsell(csr, C=8, L=16)
+    # every (row_vertex, col) pair with col >= 0 must be a real edge
+    edges = set()
+    for c in range(t.n_chunks):
+        for r in range(t.C):
+            v = t.row_vertex[c, r]
+            if v < 0:
+                continue
+            tiles = np.nonzero(t.row_block == c)[0]
+            cols = t.cols[tiles, r, :].ravel()
+            cols = cols[cols >= 0]
+            assert sorted(cols.tolist()) == sorted(csr.neighbors(v).tolist())
+            edges.update((int(v), int(u)) for u in cols)
+    assert len(edges) == csr.nnz
+
+
+@pytest.mark.parametrize("gen", ["kron", "er", "ring", "star"])
+def test_storage_table_iii(gen):
+    csr = {"kron": lambda: kronecker(9, 8),
+           "er": lambda: erdos_renyi(512, 8),
+           "ring": lambda: ring_of_cliques(32, 8),
+           "star": lambda: star(512)}[gen]()
+    s = storage_summary(csr, C=8, sigma=csr.n)
+    m, n = s.m, s.n
+    assert s.csr == 4 * m + n
+    assert s.al == 2 * m + n
+    # SlimSell = col(2m+P) + cs/cl; Sell-C-sigma doubles the col part
+    assert s.slimsell == 2 * m + s.padding_flat + 2 * ((n + 7) // 8)
+    assert s.sell_c_sigma - s.slimsell == 2 * m + s.padding_flat
+    # paper claim: ~50% of Sell-C-sigma
+    assert s.slimsell_vs_sellcs < 0.55
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 120), seed=st.integers(0, 5),
+       C=st.sampled_from([4, 8]), sigma=st.integers(1, 128))
+def test_slimsell_properties(n, seed, C, sigma):
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(3 * n, 2))
+    csr = build_csr(edges, n)
+    t = build_slimsell(csr, C=C, L=8, sigma=sigma)
+    # every vertex appears exactly once in row_vertex
+    rv = t.row_vertex.ravel()
+    assert sorted(rv[rv >= 0].tolist()) == list(range(n))
+    # padding never negative; all real cols in range
+    cols = t.cols.ravel()
+    assert cols.min() >= -1 and cols.max() < n
+    # storage monotonicity: larger sigma never increases padding
+    s_small = storage_summary(csr, C=C, sigma=max(1, sigma // 2))
+    s_big = storage_summary(csr, C=C, sigma=csr.n)
+    assert s_big.padding_flat <= s_small.padding_flat

@@ -1,0 +1,120 @@
+"""Optimizer + substrate unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import TokenPipeline
+from repro.graphs.sampler import expected_block_sizes, sample_block
+from repro.graphs.generators import erdos_renyi
+from repro.optim import adamw, muon, sgd, clip_by_global_norm, int8_compress_ef
+from repro.optim.optimizers import _newton_schulz
+
+
+def _converges(opt, steps=200):
+    target = jnp.asarray([[1.0, -2.0], [3.0, 0.5]])
+    params = {"w": jnp.zeros((2, 2))}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for i in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(i))
+    return float(loss(params))
+
+
+def test_adamw_converges():
+    assert _converges(adamw(lr=0.05)) < 1e-2
+
+
+def test_muon_converges():
+    # 2D/1D leaves take the AdamW path inside muon
+    assert _converges(muon(lr=0.05, adam_lr=0.05)) < 1e-2
+
+
+def test_muon_matrix_path_converges():
+    """ndim>=3 (stacked layers) leaves take the Newton-Schulz path."""
+    opt = muon(lr=0.05)
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((3, 4, 4)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((3, 4, 4))}
+    state = opt.init(params)
+    assert state["w"]["mom"].shape == (3, 4, 4)   # single bf16 momentum
+    assert state["w"]["m"].shape == (0,)          # no AdamW moments
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for i in range(300):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(i))
+    assert float(loss(params)) < 0.05
+
+
+def test_sgd_converges():
+    assert _converges(sgd(lr=0.05)) < 1e-2
+
+
+def test_newton_schulz_flattens_spectrum():
+    """Muon's NS5 is an approximate orthogonalizer by design: it drives all
+    singular values into a band around 1 (not exactly 1)."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    g = g * jnp.logspace(0, 2, 8)[None, :]   # condition number ~100
+    s_in = np.linalg.svd(np.asarray(g), compute_uv=False)
+    o = _newton_schulz(g, steps=8)
+    s = np.linalg.svd(np.asarray(o), compute_uv=False)
+    assert s_in.max() / s_in.min() > 20      # input is ill-conditioned
+    assert 0.3 < s.min() and s.max() < 1.6   # output spectrum is flat-ish
+    assert s.max() / s.min() < 4
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+
+
+def test_int8_error_feedback_unbiased_over_steps():
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+    err = None
+    acc = jnp.zeros_like(g_true)
+    for _ in range(50):
+        deq, err = int8_compress_ef({"g": g_true}, err)
+        err = err if isinstance(err, dict) else err
+        acc = acc + deq["g"]
+        err = {"g": err["g"]}
+    # error feedback: accumulated compressed grads track the true sum
+    np.testing.assert_allclose(np.asarray(acc) / 50, np.asarray(g_true),
+                               atol=0.02)
+
+
+def test_token_pipeline_deterministic_and_disjoint():
+    pipe = TokenPipeline(vocab=1000, batch=8, seq=16, seed=1)
+    a = pipe.get_batch(3)
+    b = pipe.get_batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = pipe.get_batch(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    h0 = pipe.get_batch(3, host_id=0, n_hosts=2)
+    h1 = pipe.get_batch(3, host_id=1, n_hosts=2)
+    assert h0["tokens"].shape[0] == 4
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.integers(2, 16), f1=st.integers(2, 6), f2=st.integers(2, 6))
+def test_neighbor_sampler_block_valid(batch, f1, f2):
+    csr = erdos_renyi(200, 8, seed=5)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(200, batch, replace=False)
+    n_pad, e_pad = expected_block_sizes(batch, (f1, f2))
+    blk = sample_block(csr, seeds, (f1, f2), rng=rng,
+                       n_nodes_pad=n_pad, n_edges_pad=e_pad)
+    assert blk.n_nodes <= n_pad and blk.n_edges <= e_pad
+    # every sampled edge is a real edge in the original graph
+    gids = blk.node_ids
+    for s_loc, d_loc in blk.edge_index.T[:100]:
+        if s_loc < 0:
+            continue
+        u, v = int(gids[s_loc]), int(gids[d_loc])
+        assert u in csr.neighbors(v) or v in csr.neighbors(u)
+    # seeds are the first slots
+    np.testing.assert_array_equal(gids[:batch], seeds)

@@ -1,0 +1,101 @@
+"""Algebraic invariants of the SlimSell SpMV (hypothesis property tests).
+
+These are the properties the paper's formulation rests on: the SpMV is a
+linear map over each semiring, so BFS iterations compose correctly.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import semiring as sm
+from repro.core.formats import build_csr, build_slimsell
+from repro.core.spmv import slimsell_spmv
+
+
+def _graph(n, seed):
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(3 * n, 2))
+    return build_slimsell(build_csr(edges, n), C=4, L=8).to_jax()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 64), seed=st.integers(0, 20))
+def test_tropical_min_plus_linearity(n, seed):
+    """A (x min y) == (A x) min (A y)  and  A (x + c) == (A x) + c."""
+    t = _graph(n, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.integers(0, 50, n), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 50, n), jnp.float32)
+    sr = sm.TROPICAL
+    lhs = slimsell_spmv(sr, t, jnp.minimum(x, y))
+    rhs = jnp.minimum(slimsell_spmv(sr, t, x), slimsell_spmv(sr, t, y))
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+    c = 7.0
+    np.testing.assert_allclose(np.asarray(slimsell_spmv(sr, t, x + c)),
+                               np.asarray(slimsell_spmv(sr, t, x) + c))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 64), seed=st.integers(0, 20))
+def test_real_linearity(n, seed):
+    """A (a x + b y) == a (A x) + b (A y)."""
+    t = _graph(n, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    sr = sm.REAL
+    lhs = slimsell_spmv(sr, t, 2.0 * x - 3.0 * y)
+    rhs = 2.0 * slimsell_spmv(sr, t, x) - 3.0 * slimsell_spmv(sr, t, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 64), seed=st.integers(0, 20))
+def test_boolean_monotonicity_and_union(n, seed):
+    """A (x | y) == (A x) | (A y); frontier growth is monotone."""
+    t = _graph(n, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    sr = sm.BOOLEAN
+    lhs = slimsell_spmv(sr, t, jnp.maximum(x, y))
+    rhs = jnp.maximum(slimsell_spmv(sr, t, x), slimsell_spmv(sr, t, y))
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 64), seed=st.integers(0, 20))
+def test_real_spmv_equals_dense_matvec(n, seed):
+    """The SlimSell layout encodes exactly the adjacency matrix."""
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(3 * n, 2))
+    csr = build_csr(edges, n)
+    t = build_slimsell(csr, C=4, L=8).to_jax()
+    A = np.zeros((n, n), np.float32)
+    for v in range(n):
+        A[v, csr.neighbors(v)] = 1.0
+    x = rng.standard_normal(n).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(slimsell_spmv(sm.REAL, t, jnp.asarray(x))), A @ x,
+        rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 48), seed=st.integers(0, 10),
+       semiring=st.sampled_from(["tropical", "real", "boolean", "selmax"]))
+def test_spmv_invariant_to_tiling(n, seed, semiring):
+    """C/L/sigma are layout choices: the operator must not change."""
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(3 * n, 2))
+    csr = build_csr(edges, n)
+    sr = sm.get(semiring)
+    x = jnp.asarray(rng.integers(0, 9, n), sr.dtype)
+    ref = None
+    for C, L, sigma in [(4, 8, 1), (8, 4, 7), (16, 16, n)]:
+        t = build_slimsell(csr, C=C, L=L, sigma=sigma).to_jax()
+        y = np.asarray(slimsell_spmv(sr, t, x))
+        if ref is None:
+            ref = y
+        else:
+            np.testing.assert_allclose(y, ref, rtol=1e-5)
