@@ -1,0 +1,70 @@
+"""Batched multi-source BFS vs per-root BFS: TEPS at several batch widths.
+
+The paper's Graph500 protocol amortizes graph construction over 64 BFS runs;
+the multi-source engine goes further and amortizes the *adjacency reads*:
+one semiring SpMM sweep advances every root in the batch. This benchmark
+quantifies the trade — batching reuses structure but unions the SlimWork
+masks (less work-skipping per root).
+
+    PYTHONPATH=src python benchmarks/bench_multisource.py [--scale 9]
+"""
+import argparse
+import time
+
+import numpy as np
+
+import common
+from repro.core.bfs import bfs
+from repro.core.multi_bfs import multi_source_bfs
+from repro.graph500 import sample_roots
+
+
+def _teps(csr, distances, seconds, n_runs):
+    edges = sum(max(1, int(csr.deg[d >= 0].sum()) // 2) for d in distances)
+    return edges / seconds, edges / n_runs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=9)
+    ap.add_argument("--ef", type=int, default=8)
+    ap.add_argument("--roots", type=int, default=16)
+    ap.add_argument("--semiring", default="tropical")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--batches", type=int, nargs="+", default=[4, 8, 16])
+    args = ap.parse_args()
+
+    csr = common.graph("kron", args.scale, args.ef)
+    tiled = common.tiled("kron", args.scale, args.ef, C=8, L=32)
+    roots = sample_roots(csr, args.roots)
+    print(f"# n={csr.n} m={csr.m_undirected} roots={roots.size} "
+          f"semiring={args.semiring} backend={args.backend}")
+
+    # baseline: one bfs() per root (warm up the jit on the first root first)
+    bfs(tiled, int(roots[0]), args.semiring, backend=args.backend)
+    t0 = time.perf_counter()
+    base_d = [bfs(tiled, int(r), args.semiring, backend=args.backend).distances
+              for r in roots]
+    base_s = time.perf_counter() - t0
+    teps, _ = _teps(csr, base_d, base_s, roots.size)
+    common.emit(f"per_root/{args.semiring}/{args.backend}",
+                base_s / roots.size * 1e6, f"TEPS={teps:.3e}")
+
+    for B in args.batches:
+        # warm up this batch width's compiled loop, then time steady-state
+        multi_source_bfs(tiled, roots[:B], args.semiring, batch_size=B,
+                         backend=args.backend)
+        t0 = time.perf_counter()
+        res = multi_source_bfs(tiled, roots, args.semiring, batch_size=B,
+                               backend=args.backend)
+        dt = time.perf_counter() - t0
+        assert all(np.array_equal(res.distances[i], base_d[i])
+                   for i in range(roots.size)), f"batched != per-root at B={B}"
+        teps, _ = _teps(csr, res.distances, dt, roots.size)
+        common.emit(f"multisource/B={B}/{args.semiring}/{args.backend}",
+                    dt / roots.size * 1e6,
+                    f"TEPS={teps:.3e} speedup={base_s / dt:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,14 @@
 """End-to-end driver (the paper's workload): Graph500-style BFS benchmark.
 
-Builds a Kronecker graph, runs BFS from 16 sampled roots with SlimSell +
-SlimWork, validates every result against the queue-based oracle, and reports
-mean GTEPS — the Graph500 metric. With >1 device it also runs the
+Builds a Kronecker graph, runs BFS from the spec's 64 sampled roots in
+*batches* through the multi-source semiring-SpMM engine, validates every
+tree against the queue-based oracle, and reports harmonic-mean TEPS — the
+Graph500 metric. ``--backend pallas`` routes every sweep through the SlimSell
+Pallas kernels (interpret mode off-TPU). With >1 device it also runs the
 2D-distributed engine.
 
-    PYTHONPATH=src python examples/graph500_driver.py --scale 13 --ef 16
+    PYTHONPATH=src python examples/graph500_driver.py --scale 13 --ef 16 \
+        --roots 64 --batch 16 --backend pallas
 """
 import argparse
 import time
@@ -13,9 +16,11 @@ import time
 import jax
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.core.bfs import bfs
 from repro.core.bfs_traditional import bfs_traditional
 from repro.core.formats import build_slimsell
+from repro.graph500 import run_graph500
 from repro.graphs.generators import kronecker
 
 
@@ -23,8 +28,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=13)
     ap.add_argument("--ef", type=int, default=16)
-    ap.add_argument("--roots", type=int, default=16)
+    ap.add_argument("--roots", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--semiring", default="tropical")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--no-validate", action="store_true")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -33,32 +41,21 @@ def main():
     print(f"built n={csr.n} m={csr.m_undirected} in {time.time()-t0:.1f}s "
           f"(amortized over {args.roots} BFS runs, paper §IV-D)")
 
-    rng = np.random.default_rng(0)
-    roots = rng.choice(csr.n, args.roots, replace=False)
-    teps = []
-    for r in roots:
-        r = int(r)
-        t0 = time.time()
-        res = bfs(tiled, r, args.semiring, need_parents=True, mode="hostloop")
-        dt = time.time() - t0
-        d_ref, _ = bfs_traditional(csr, r)
-        assert np.array_equal(res.distances, d_ref), f"validation failed @{r}"
-        reached_edges = int(csr.deg[res.distances >= 0].sum())
-        teps.append(reached_edges / dt)
-    teps = np.asarray(teps)
-    print(f"validated {args.roots}/{args.roots} roots   "
-          f"harmonic-mean TEPS={1/np.mean(1/teps):.3e}  "
-          f"max={teps.max():.3e}")
+    rep = run_graph500(scale=args.scale, edge_factor=args.ef,
+                       n_roots=args.roots, batch_size=args.batch,
+                       semiring=args.semiring, backend=args.backend,
+                       validate=not args.no_validate, csr=csr, tiled=tiled)
+    print(rep.summary())
 
     if len(jax.devices()) >= 4:
         from repro.core.dist_bfs import make_dist_bfs, partition_slimsell
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 2), ("data", "model"))
         dist = partition_slimsell(csr, R=2, Co=2)
-        fn = make_dist_bfs(mesh, dist, args.semiring)
+        fn = make_dist_bfs(mesh, dist, args.semiring, backend=args.backend)
+        root = int(rep.roots[0])
         d, iters = fn(dist.cols, dist.row_block, dist.row_vertex,
-                      np.int32(roots[0]))
-        d_ref, _ = bfs_traditional(csr, int(roots[0]))
+                      np.int32(root))
+        d_ref, _ = bfs_traditional(csr, root)
         print("distributed 2D BFS matches:",
               np.array_equal(np.asarray(d), d_ref), f"iters={int(iters)}")
 

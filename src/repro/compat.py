@@ -1,0 +1,76 @@
+"""Version-tolerant shims over the moving parts of the JAX API.
+
+The repo is developed against more than one JAX release: the pinned CI image
+carries 0.4.x while newer toolchains expose the 0.5+/0.6+ surface. Every
+call site that touches an API renamed between those lines goes through this
+module so the rest of the codebase reads as if it targeted one JAX.
+
+Covered renames:
+  * ``jax.sharding.AxisType`` / ``axis_types=`` on mesh constructors
+    (0.5+) vs. plain ``jax.make_mesh(shape, axes)`` (0.4.x);
+  * ``jax.set_mesh`` (0.5+) vs. the ``Mesh`` context manager (0.4.x);
+  * ``jax.shard_map(..., check_vma=...)`` (0.5+) vs.
+    ``jax.experimental.shard_map.shard_map(..., check_rep=...)`` (0.4.x);
+  * ``pltpu.MemorySpace`` (0.5+) vs. ``pltpu.TPUMemorySpace`` (0.4.x).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh", "mesh_from_devices", "set_mesh", "shard_map",
+           "tpu_memory_space"]
+
+
+def _auto_axis_types(n: int):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return None if axis_type is None else (axis_type.Auto,) * n
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_types = _auto_axis_types(len(axis_names))
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, **kwargs)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def mesh_from_devices(device_grid, axis_names):
+    """``jax.sharding.Mesh`` from an explicit device grid (elastic remesh)."""
+    from jax.sharding import Mesh
+    axis_types = _auto_axis_types(len(axis_names))
+    if axis_types is not None:
+        try:
+            return Mesh(device_grid, axis_names, axis_types=axis_types)
+        except TypeError:
+            pass
+    return Mesh(device_grid, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # 0.4.x: Mesh is itself the resource-env context manager
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def tpu_memory_space():
+    """The Pallas-TPU memory-space enum (``.ANY``, ``.SMEM``, ...)."""
+    from jax.experimental.pallas import tpu as pltpu
+    space = getattr(pltpu, "MemorySpace", None)
+    return space if space is not None else pltpu.TPUMemorySpace

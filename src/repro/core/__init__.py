@@ -1,2 +1,3 @@
 """Core: the paper's contribution — SlimSell + semiring BFS-SpMV."""
-from . import semiring, formats, spmv, bfs, bfs_traditional, dist_bfs, complexity  # noqa: F401
+from . import (semiring, formats, spmv, bfs, bfs_traditional, dist_bfs,  # noqa: F401
+               multi_bfs, complexity)

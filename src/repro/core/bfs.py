@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import semiring as sm
-from .spmv import slimsell_spmv
+from .spmv import resolve_backend, slimsell_spmv
 
 Array = jax.Array
 WORK_LOG = 512  # max logged iterations
@@ -76,31 +76,42 @@ def _chunk_active(sr_name: str, state, row_vertex: Array, n: int) -> Array:
     return per_row.any(axis=1)  # bool[n_chunks]
 
 
-def _step(sr_name: str, tiled, state, k: Array, tile_mask):
-    """One frontier expansion; k is the 1-based iteration (== distance)."""
-    sr = sm.get(sr_name)
+def semiring_update(sr_name: str, state, y: Array, k: Array, ids1: Array):
+    """Per-semiring state update given the SpMV/SpMM result ``y``.
+
+    Shape-agnostic: shared by the single-source engine (y [n], ids1 [n]),
+    the batched multi-source engine (y [n, B], ids1 [n, 1]) and the
+    distributed engine (replicated y [n]).
+    """
     if sr_name == "tropical":
-        y = slimsell_spmv(sr, tiled, state["f"], tile_mask=tile_mask)
         f_new = jnp.minimum(state["f"], y)  # accumulator init == implicit diagonal
         changed = jnp.any(f_new < state["f"])
         d = jnp.where(jnp.isfinite(f_new), f_new.astype(jnp.int32), -1)
         return {"d": d, "f": f_new}, changed
     if sr_name in ("real", "boolean"):
-        y = slimsell_spmv(sr, tiled, state["f"], tile_mask=tile_mask)
         new = (y > 0) & ~state["visited"]
         d = jnp.where(new, k.astype(jnp.int32), state["d"])
         visited = state["visited"] | new
         f = new.astype(state["f"].dtype)
         return {"d": d, "f": f, "visited": visited}, jnp.any(new)
     if sr_name == "selmax":
-        y = slimsell_spmv(sr, tiled, state["x"], tile_mask=tile_mask)
         new = (y > 0) & (state["p"] == 0.0)
         p = jnp.where(new, y, state["p"])
         d = jnp.where(new, k.astype(jnp.int32), state["d"])
-        ids1 = jnp.arange(tiled.n, dtype=jnp.float32) + 1.0
         x = jnp.where(new, ids1, 0.0)
         return {"d": d, "x": x, "p": p}, jnp.any(new)
     raise ValueError(sr_name)
+
+
+def _step(sr_name: str, tiled, state, k: Array, tile_mask,
+          backend: str = "jnp"):
+    """One frontier expansion; k is the 1-based iteration (== distance)."""
+    sr = sm.get(sr_name)
+    frontier = state["x"] if sr_name == "selmax" else state["f"]
+    y = slimsell_spmv(sr, tiled, frontier, tile_mask=tile_mask,
+                      backend=backend)
+    ids1 = jnp.arange(tiled.n, dtype=jnp.float32) + 1.0
+    return semiring_update(sr_name, state, y, k, ids1)
 
 
 # ---------------------------------------------------------------- DP transform
@@ -132,9 +143,10 @@ def dp_transform(tiled, d: Array, root) -> Array:
 # -------------------------------------------------------------------- fused
 
 
-@partial(jax.jit, static_argnames=("sr_name", "slimwork", "max_iters", "log_work"))
+@partial(jax.jit, static_argnames=("sr_name", "slimwork", "max_iters",
+                                   "log_work", "backend"))
 def _bfs_fused(tiled, root, *, sr_name: str, slimwork: bool,
-               max_iters: int, log_work: bool):
+               max_iters: int, log_work: bool, backend: str = "jnp"):
     n = tiled.n
     state = _init_state(sr_name, n, root)
     work = jnp.zeros((WORK_LOG,), jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
@@ -152,7 +164,7 @@ def _bfs_fused(tiled, root, *, sr_name: str, slimwork: bool,
             if log_work:
                 idx = jnp.minimum(k - 1, WORK_LOG - 1)
                 work = work.at[idx].set(tile_mask.sum(dtype=jnp.int32))
-        state, changed = _step(sr_name, tiled, state, k, tile_mask)
+        state, changed = _step(sr_name, tiled, state, k, tile_mask, backend)
         return state, k + 1, changed, work
 
     state, k, _, work = jax.lax.while_loop(
@@ -173,9 +185,19 @@ class _SubsetTiled:
     n_chunks: int
 
 
-@partial(jax.jit, static_argnames=("sr_name", "n_active", "n", "n_chunks"))
+jax.tree_util.register_pytree_node(
+    _SubsetTiled,
+    lambda t: ((t.cols, t.row_block, t.row_vertex), (t.n, t.n_chunks)),
+    lambda aux, ch: _SubsetTiled(cols=ch[0], row_block=ch[1],
+                                 row_vertex=ch[2], n=aux[0], n_chunks=aux[1]),
+)
+
+
+@partial(jax.jit, static_argnames=("sr_name", "n_active", "n", "n_chunks",
+                                   "backend"))
 def _subset_step(sr_name: str, tiled_cols, tiled_row_block, row_vertex,
-                 n: int, n_chunks: int, tile_ids, n_active: int, state, k):
+                 n: int, n_chunks: int, tile_ids, n_active: int, state, k,
+                 backend: str = "jnp"):
     """Gather the active tiles (bucketed size) and run one step on them only."""
     ids = tile_ids[:n_active]
     sub = _SubsetTiled(
@@ -183,7 +205,7 @@ def _subset_step(sr_name: str, tiled_cols, tiled_row_block, row_vertex,
         row_block=jnp.take(tiled_row_block, ids, axis=0),
         row_vertex=row_vertex, n=n, n_chunks=n_chunks,
     )
-    return _step(sr_name, sub, state, k, None)
+    return _step(sr_name, sub, state, k, None, backend)
 
 
 def _bucket(x: int) -> int:
@@ -196,10 +218,14 @@ def _bucket(x: int) -> int:
 def bfs(tiled, root: int, semiring: str = "tropical", *,
         need_parents: bool = False, slimwork: bool = True,
         mode: str = "fused", max_iters: Optional[int] = None,
-        log_work: bool = False) -> BFSResult:
-    """Run BFS from ``root``; returns distances (+parents) in vertex space."""
+        log_work: bool = False, backend: Optional[str] = None) -> BFSResult:
+    """Run BFS from ``root``; returns distances (+parents) in vertex space.
+
+    backend: "jnp" (reference) or "pallas" (SlimSell TPU kernel engine).
+    """
     if semiring not in sm.SEMIRINGS:
         raise KeyError(semiring)
+    backend = resolve_backend(backend)
     n = tiled.n
     max_iters = int(max_iters) if max_iters is not None else n
     root = jnp.asarray(root, jnp.int32)
@@ -207,7 +233,7 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
     if mode == "fused":
         state, iters, work = _bfs_fused(
             tiled, root, sr_name=semiring, slimwork=slimwork,
-            max_iters=max_iters, log_work=log_work)
+            max_iters=max_iters, log_work=log_work, backend=backend)
         iters = int(iters)
     elif mode == "hostloop":
         state = _init_state(semiring, n, root)
@@ -225,16 +251,20 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
                 bucket = min(_bucket(ids.size), n_tiles)
                 ids_p = np.zeros(bucket, np.int32)
                 ids_p[: ids.size] = ids
-                if ids.size < bucket:       # pad with repeats of the first id
-                    ids_p[ids.size:] = ids[0]
+                if ids.size < bucket:
+                    # pad with repeats of the LAST id: the tail then stays on
+                    # the final output block, so the pallas kernel's
+                    # first-visit re-init never revisits an earlier block
+                    ids_p[ids.size:] = ids[-1]
                 state, changed = _subset_step(
                     semiring, tiled.cols, tiled.row_block, tiled.row_vertex,
                     n, tiled.n_chunks, jnp.asarray(ids_p), bucket,
-                    state, jnp.asarray(k, jnp.int32))
+                    state, jnp.asarray(k, jnp.int32), backend)
             else:
                 work_list.append(n_tiles)
                 state, changed = _step(semiring, tiled, state,
-                                       jnp.asarray(k, jnp.int32), None)
+                                       jnp.asarray(k, jnp.int32), None,
+                                       backend)
             iters = k
             k += 1
             if not bool(changed):

@@ -29,8 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from . import semiring as sm
 from .formats import CSRGraph, sellcs_order
+from .spmv import resolve_backend
 
 Array = jax.Array
 
@@ -126,6 +128,13 @@ def partition_slimsell(csr: CSRGraph, R: int, Co: int, *, C: int = 8,
             for t, (cl, buf) in enumerate(per_shard_tiles[i][j]):
                 cols[i, j, t] = buf
                 row_block[i, j, t] = cl
+            # padding tiles (all cols == -1) keep the last real chunk id so
+            # grid order stays non-decreasing: the pallas kernel re-inits an
+            # output block on every chunk-block change, and a tail that
+            # jumped back to chunk 0 would wipe its accumulated values
+            n_real = len(per_shard_tiles[i][j])
+            if n_real and n_real < t_max:
+                row_block[i, j, n_real:] = per_shard_tiles[i][j][-1][0]
     return DistSlimSell(n=n, C=C, L=L, R=R, Co=Co, n_col=n_col,
                         chunks_per_shard=cps, t_max=t_max, cols=cols,
                         row_block=row_block, row_vertex=row_vertex)
@@ -216,7 +225,7 @@ def make_dist_bfs_sliced(mesh: Mesh, meta: DistSlimSell, *,
         if pod_axis else P(row_axis, col_axis, None, None, None)
     rb_spec = P(*(lead + (row_axis, col_axis, None))) \
         if pod_axis else P(row_axis, col_axis, None)
-    sharded = jax.shard_map(
+    sharded = shard_map(
         lambda c, rb, r: bfs_shard(c, rb, r), mesh=mesh,
         in_specs=(cols_spec, rb_spec, P()),
         out_specs=(P(row_axis, None), P()),
@@ -229,8 +238,27 @@ def make_dist_bfs_sliced(mesh: Mesh, meta: DistSlimSell, *,
 
 
 def _local_spmv(sr: sm.Semiring, cols, row_block, row_vertex, x_local, n: int,
-                cps: int):
+                cps: int, backend: str = "jnp"):
     """SpMV over this device's tiles; returns full-length partial y."""
+    if backend == "pallas":
+        from repro.kernels.slimsell_spmv import slimsell_spmv_pallas
+        T = cols.shape[0]
+        y_blocks = slimsell_spmv_pallas(
+            cols, jnp.arange(T, dtype=jnp.int32), row_block,
+            jnp.asarray([T], jnp.int32), x_local.astype(sr.dtype),
+            sr_name=sr.name, n_chunks=cps,
+            interpret=jax.default_backend() != "tpu")[:cps]
+        # chunks with no tiles in this column shard are never visited by the
+        # kernel grid and hold garbage; mask them to the semiring zero (the
+        # jnp segment_reduce below does this implicitly)
+        covered = jax.ops.segment_max(jnp.ones_like(row_block), row_block,
+                                      num_segments=cps) > 0
+        y_blocks = jnp.where(covered[:, None], y_blocks,
+                             jnp.asarray(sr.zero, y_blocks.dtype))
+        rv = row_vertex.reshape(-1)
+        ids = jnp.where(rv < 0, n, rv)
+        y = sr.segment_reduce(y_blocks.reshape(-1), ids, num_segments=n + 1)
+        return y[:n]
     pad = cols < 0
     safe = jnp.where(pad, 0, cols)
     gathered = jnp.take(x_local, safe, axis=0)
@@ -251,7 +279,7 @@ def _local_spmv(sr: sm.Semiring, cols, row_block, row_vertex, x_local, n: int,
 
 def dist_bfs_step(sr_name: str, dist: DistSlimSell, state: dict, k: Array,
                   row_axes: Sequence[str], col_axes: Sequence[str],
-                  comm: str = "allreduce"):
+                  comm: str = "allreduce", backend: str = "jnp"):
     """One frontier expansion inside shard_map. State is replicated."""
     sr = sm.get(sr_name)
     n, Co, n_col = dist.n, dist.Co, dist.n_col
@@ -265,7 +293,7 @@ def dist_bfs_step(sr_name: str, dist: DistSlimSell, state: dict, k: Array,
     row_block = dist.row_block.reshape(dist.t_max)
     row_vertex = dist.row_vertex.reshape(dist.chunks_per_shard, dist.C)
     y = _local_spmv(sr, cols, row_block, row_vertex, x_local, n,
-                    dist.chunks_per_shard)
+                    dist.chunks_per_shard, backend)
     axes = tuple(col_axes) + tuple(row_axes)
     if comm == "allreduce":
         y = sr.pall(y, axes)
@@ -274,32 +302,23 @@ def dist_bfs_step(sr_name: str, dist: DistSlimSell, state: dict, k: Array,
         # each row shard holds valid y only for its own rows -> combine over rows
         y = sr.pall(y, tuple(row_axes))
 
-    # replicated state update (same math as bfs._step)
-    if sr_name == "tropical":
-        f_new = jnp.minimum(state["f"], y)
-        changed = jnp.any(f_new < state["f"])
-        d = jnp.where(jnp.isfinite(f_new), f_new.astype(jnp.int32), -1)
-        return {"d": d, "f": f_new}, changed
-    if sr_name in ("real", "boolean"):
-        new = (y > 0) & ~state["visited"]
-        d = jnp.where(new, k.astype(jnp.int32), state["d"])
-        return {"d": d, "f": new.astype(state["f"].dtype),
-                "visited": state["visited"] | new}, jnp.any(new)
-    new = (y > 0) & (state["p"] == 0.0)
-    p = jnp.where(new, y, state["p"])
-    d = jnp.where(new, k.astype(jnp.int32), state["d"])
-    x = jnp.where(new, jnp.arange(n, dtype=jnp.float32) + 1.0, 0.0)
-    return {"d": d, "x": x, "p": p}, jnp.any(new)
+    # replicated state update, shared with the single-source engine
+    from .bfs import semiring_update
+    return semiring_update(sr_name, state, y, k,
+                           jnp.arange(n, dtype=jnp.float32) + 1.0)
 
 
 def make_dist_bfs(mesh: Mesh, meta: DistSlimSell, sr_name: str = "tropical", *,
                   row_axes: Sequence[str] = ("data",),
                   col_axes: Sequence[str] = ("model",),
-                  max_iters: int = 64, comm: str = "allreduce"):
+                  max_iters: int = 64, comm: str = "allreduce",
+                  backend: Optional[str] = None):
     """Returns a jitted distributed BFS: (cols, row_block, row_vertex, root)
     -> (distances, iterations). ``meta`` provides the static layout fields
     (arrays in it may be ShapeDtypeStructs for AOT lowering)."""
     from .bfs import _init_state  # replicated init, reused verbatim
+
+    backend = resolve_backend(backend)
 
     def bfs_shard(cols, row_block, row_vertex, root):
         dist = dataclasses.replace(
@@ -317,7 +336,7 @@ def make_dist_bfs(mesh: Mesh, meta: DistSlimSell, sr_name: str = "tropical", *,
         def body(carry):
             state, k, _ = carry
             state, changed = dist_bfs_step(sr_name, dist, state, k,
-                                           row_axes, col_axes, comm)
+                                           row_axes, col_axes, comm, backend)
             return state, k + 1, changed
 
         state, k, _ = jax.lax.while_loop(
@@ -325,7 +344,7 @@ def make_dist_bfs(mesh: Mesh, meta: DistSlimSell, sr_name: str = "tropical", *,
         return state["d"], k - 1
 
     row = tuple(row_axes) if len(row_axes) > 1 else row_axes[0]
-    sharded = jax.shard_map(
+    sharded = shard_map(
         bfs_shard, mesh=mesh,
         in_specs=(P(row, col_axes[0], None, None, None),
                   P(row, col_axes[0], None),

@@ -1,0 +1,191 @@
+"""Batched multi-source algebraic BFS: many roots as one semiring SpMM.
+
+Graph500 runs BFS from 64 sampled roots over the same graph. Running them
+one at a time leaves the vector units underfilled — each SpMV gathers one
+scalar per edge. Batching B roots turns the frontier vector [n] into a
+frontier *matrix* [n, B] and every iteration into a semiring SpMM
+(matrix-centric traversal, cf. Graph Traversal on Tensor Cores /
+Bit-GraphBLAS): one gather of ``X[col, :]`` now advances B traversals, the
+adjacency structure is read once per iteration instead of once per root, and
+on TPU the B axis maps onto the lane dimension of the SlimSell SpMM kernel.
+
+All four paper semirings are supported; the per-column math is identical to
+``bfs._step``. SlimWork generalizes column-wise: a chunk is active if ANY
+root can still improve one of its rows, so the batch shares one tile mask
+(the union of per-root masks — batching trades some work-skipping for
+structure reuse; the crossover is measured by benchmarks/bench_multisource.py).
+
+Iterations run to the max depth over the batch: converged columns simply stop
+changing (their frontier no longer produces new vertices), which is exact for
+every semiring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import semiring as sm
+from .bfs import WORK_LOG, _not_final, dp_transform, semiring_update
+from .spmv import resolve_backend, slimsell_spmm
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class MultiBFSResult:
+    distances: np.ndarray          # int32[n_roots, n]; -1 unreachable
+    parents: Optional[np.ndarray]  # int32[n_roots, n]; root -> root
+    iterations: np.ndarray         # int32[n_batches] while-loop trips per batch
+    roots: np.ndarray              # int32[n_roots]
+    work_log: Optional[np.ndarray] = None  # int32[n_batches, WORK_LOG]
+
+
+# ------------------------------------------------------------------ state ops
+
+
+def _init_state_multi(sr_name: str, n: int, roots: Array):
+    """Batched ``bfs._init_state``: every field gains a trailing B axis."""
+    B = roots.shape[0]
+    cols = jnp.arange(B)
+    d = jnp.full((n, B), -1, jnp.int32).at[roots, cols].set(0)
+    if sr_name == "tropical":
+        f = jnp.full((n, B), jnp.inf, jnp.float32).at[roots, cols].set(0.0)
+        return {"d": d, "f": f}
+    if sr_name == "real":
+        f = jnp.zeros((n, B), jnp.float32).at[roots, cols].set(1.0)
+        v = jnp.zeros((n, B), bool).at[roots, cols].set(True)
+        return {"d": d, "f": f, "visited": v}
+    if sr_name == "boolean":
+        f = jnp.zeros((n, B), jnp.int32).at[roots, cols].set(1)
+        v = jnp.zeros((n, B), bool).at[roots, cols].set(True)
+        return {"d": d, "f": f, "visited": v}
+    if sr_name == "selmax":
+        r1 = roots.astype(jnp.float32) + 1.0
+        x = jnp.zeros((n, B), jnp.float32).at[roots, cols].set(r1)
+        p = jnp.zeros((n, B), jnp.float32).at[roots, cols].set(r1)
+        return {"d": d, "x": x, "p": p}
+    raise ValueError(sr_name)
+
+
+def _chunk_active_multi(sr_name: str, state, row_vertex: Array) -> Array:
+    # union SlimWork: a row is live while ANY root can still change it
+    nf = _not_final(sr_name, state).any(axis=1)
+    safe = jnp.where(row_vertex < 0, 0, row_vertex)
+    per_row = jnp.where(row_vertex < 0, False, jnp.take(nf, safe, axis=0))
+    return per_row.any(axis=1)  # bool[n_chunks]
+
+
+def _step_multi(sr_name: str, tiled, state, k: Array, tile_mask,
+                backend: str):
+    """One batched frontier expansion; per-column math == ``bfs._step``."""
+    sr = sm.get(sr_name)
+    frontier = state["x"] if sr_name == "selmax" else state["f"]
+    y = slimsell_spmm(sr, tiled, frontier, tile_mask=tile_mask,
+                      backend=backend)
+    ids1 = jnp.arange(tiled.n, dtype=jnp.float32)[:, None] + 1.0
+    return semiring_update(sr_name, state, y, k, ids1)
+
+
+# -------------------------------------------------------------------- fused
+
+
+@partial(jax.jit, static_argnames=("sr_name", "slimwork", "max_iters",
+                                   "log_work", "backend"))
+def _multi_bfs_fused(tiled, roots, *, sr_name: str, slimwork: bool,
+                     max_iters: int, log_work: bool, backend: str):
+    n = tiled.n
+    state = _init_state_multi(sr_name, n, roots)
+    work = jnp.zeros((WORK_LOG,), jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
+
+    def cond(carry):
+        _, k, changed, _ = carry
+        return changed & (k <= max_iters)
+
+    def body(carry):
+        state, k, _, work = carry
+        tile_mask = None
+        if slimwork:
+            active = _chunk_active_multi(sr_name, state, tiled.row_vertex)
+            tile_mask = jnp.take(active, tiled.row_block, axis=0)
+            if log_work:
+                idx = jnp.minimum(k - 1, WORK_LOG - 1)
+                work = work.at[idx].set(tile_mask.sum(dtype=jnp.int32))
+        state, changed = _step_multi(sr_name, tiled, state, k, tile_mask,
+                                     backend)
+        return state, k + 1, changed, work
+
+    state, k, _, work = jax.lax.while_loop(
+        cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True), work))
+    return state, k - 1, work
+
+
+# ----------------------------------------------------------------- public API
+
+
+def multi_source_bfs(tiled, roots: Sequence[int],
+                     semiring: str = "tropical", *,
+                     need_parents: bool = False, slimwork: bool = True,
+                     batch_size: Optional[int] = None,
+                     max_iters: Optional[int] = None,
+                     log_work: bool = False,
+                     backend: Optional[str] = None) -> MultiBFSResult:
+    """BFS from every root in ``roots``; one fused SpMM loop per batch.
+
+    batch_size: roots per device batch (None -> all roots in one batch). The
+    final partial batch is padded by repeating its last root; padded columns
+    are dropped before returning.
+    backend: "jnp" (reference) or "pallas" (SlimSell TPU SpMM kernel).
+    """
+    if semiring not in sm.SEMIRINGS:
+        raise KeyError(semiring)
+    backend = resolve_backend(backend)
+    roots = np.asarray(roots, np.int32).reshape(-1)
+    if roots.size == 0:
+        raise ValueError("multi_source_bfs needs at least one root")
+    n = tiled.n
+    max_iters = int(max_iters) if max_iters is not None else n
+    B = int(batch_size) if batch_size is not None else roots.size
+    if B <= 0:
+        raise ValueError(f"batch_size must be positive, got {batch_size}")
+    if backend == "pallas" and B > 128 and B % 128:
+        # the SpMM kernel tiles the batch axis in lanes of 128; widths over
+        # one lane tile must divide evenly, so round up and let column
+        # padding (repeat-last-root) absorb the slack
+        B = -(-B // 128) * 128
+
+    d_out = np.empty((roots.size, n), np.int32)
+    p_out = np.empty((roots.size, n), np.int32) if need_parents else None
+    iters, work_rows = [], []
+    for start in range(0, roots.size, B):
+        batch = roots[start:start + B]
+        pad = B - batch.size
+        batch_p = np.concatenate([batch, np.repeat(batch[-1:], pad)]) \
+            if pad else batch
+        state, k, work = _multi_bfs_fused(
+            tiled, jnp.asarray(batch_p), sr_name=semiring, slimwork=slimwork,
+            max_iters=max_iters, log_work=log_work, backend=backend)
+        d = np.asarray(state["d"]).T          # [B, n]
+        d_out[start:start + batch.size] = d[: batch.size]
+        if need_parents:
+            if semiring == "selmax":
+                p = np.asarray(state["p"].astype(jnp.int32) - 1).T
+            else:
+                p = np.asarray(jax.vmap(
+                    dp_transform, in_axes=(None, 1, 0))(
+                        tiled, jnp.asarray(state["d"]),
+                        jnp.asarray(batch_p)))
+            p_out[start:start + batch.size] = p[: batch.size]
+            for b, r in enumerate(batch):
+                p_out[start + b, int(r)] = int(r)
+        iters.append(int(k))
+        if log_work:
+            work_rows.append(np.asarray(work))
+    return MultiBFSResult(
+        distances=d_out, parents=p_out, iterations=np.asarray(iters, np.int32),
+        roots=roots,
+        work_log=np.stack(work_rows) if log_work else None)

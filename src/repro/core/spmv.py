@@ -1,15 +1,25 @@
-"""Semiring SpMV over the tiled SlimSell layout (pure-JAX reference path).
+"""Semiring SpMV/SpMM over the tiled SlimSell layout — the backend engine.
 
-This is the jnp oracle used by tests and by the fused BFS loop; the Pallas
-kernel in ``repro.kernels.slimsell_spmv`` computes the same function with
-explicit VMEM tiling. ``val`` is never materialized: an edge contributes
-``mul(one, x[col]) == x[col]`` (``one`` is the multiplicative identity) and a
-padding slot (col == -1) contributes the additive identity ``zero``
-(paper §III-B, Listing 5's CMP+BLEND pair).
+Two interchangeable backends compute the same function:
+
+* ``backend="jnp"`` — the pure-JAX reference path in this module (gather +
+  segment reductions). Always available; this is the correctness oracle.
+* ``backend="pallas"`` — the Pallas TPU kernels in ``repro.kernels``
+  (``slimsell_spmv.py`` / ``slimsell_spmm.py``) with explicit VMEM tiling and
+  SlimWork scalar-prefetch grid indirection; interpret-mode on non-TPU
+  backends, compiled on real TPUs. The BFS engines (``bfs.py``,
+  ``multi_bfs.py``, ``dist_bfs.py``) thread ``backend=`` down to here.
+
+``val`` is never materialized: an edge contributes ``mul(one, x[col]) ==
+x[col]`` (``one`` is the multiplicative identity) and a padding slot
+(col == -1) contributes the additive identity ``zero`` (paper §III-B,
+Listing 5's CMP+BLEND pair).
 
 Optionally a per-edge weight can be *derived* (not stored): ``edge_weight(row
 vertex, col vertex) -> w`` keeps the Slim property for weighted operators such
-as GCN's D^-1/2 A D^-1/2 (SlimSell-W, DESIGN.md §2).
+as GCN's D^-1/2 A D^-1/2 (SlimSell-W, DESIGN.md §2). Derived weights are a
+jnp-path feature; the Pallas SpMM kernel supports the degree-derived GCN
+weight through ``repro.kernels.ops.spmm(weighted=True)`` instead.
 """
 from __future__ import annotations
 
@@ -21,6 +31,17 @@ import jax.numpy as jnp
 from .semiring import Semiring
 
 Array = jax.Array
+
+BACKENDS = ("jnp", "pallas")
+DEFAULT_BACKEND = "jnp"
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    """Map None -> the module default; validate explicit choices."""
+    b = DEFAULT_BACKEND if backend is None else backend
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; available: {BACKENDS}")
+    return b
 
 
 def tile_contributions(sr: Semiring, cols: Array, x: Array,
@@ -51,12 +72,22 @@ def reduce_tiles(sr: Semiring, contrib: Array) -> Array:
 
 def slimsell_spmv(sr: Semiring, tiled, x: Array, *,
                   edge_weight: Optional[Callable] = None,
-                  tile_mask: Optional[Array] = None) -> Array:
+                  tile_mask: Optional[Array] = None,
+                  backend: Optional[str] = None) -> Array:
     """y = A (x) over semiring ``sr``; returns y in original vertex space [n].
 
     tile_mask: optional bool[T]; masked-out tiles contribute ``zero``
-    (SlimWork's skip criterion expressed as a mask in the fused loop).
+    (SlimWork's skip criterion — a mask on the jnp backend, scalar-prefetch
+    grid indirection on the pallas backend).
+    backend: "jnp" (reference) or "pallas" (TPU kernel); None -> default.
     """
+    if resolve_backend(backend) == "pallas":
+        if edge_weight is not None:
+            raise NotImplementedError(
+                "derived edge weights are jnp-only for SpMV; use "
+                "repro.kernels.ops.spmm(weighted=True) for SlimSell-W")
+        from repro.kernels import ops  # deferred: kernels import this module
+        return ops.spmv(sr.name, tiled, x, tile_mask=tile_mask)
     cols = tiled.cols
     rv_tile = None
     if edge_weight is not None:
@@ -78,11 +109,22 @@ def slimsell_spmv(sr: Semiring, tiled, x: Array, *,
 
 
 def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
-                  edge_weight: Optional[Callable] = None) -> Array:
+                  edge_weight: Optional[Callable] = None,
+                  tile_mask: Optional[Array] = None,
+                  backend: Optional[str] = None) -> Array:
     """Matrix RHS generalization: X is [n, d]; returns [n, d] (DESIGN.md §2).
 
-    Used as the GNN aggregation backend (real semiring == sum aggregation).
+    The GNN aggregation backend (real semiring == sum aggregation) and the
+    multi-source BFS engine (d == number of concurrent roots, any semiring).
+    ``tile_mask`` applies SlimWork to the whole RHS batch at once.
     """
+    if resolve_backend(backend) == "pallas":
+        if edge_weight is not None:
+            raise NotImplementedError(
+                "callable edge weights are jnp-only; the pallas backend "
+                "derives the GCN weight via repro.kernels.ops.spmm(weighted=True)")
+        from repro.kernels import ops  # deferred: kernels import this module
+        return ops.spmm(sr.name, tiled, X, tile_mask=tile_mask)
     pad = tiled.cols < 0
     safe = jnp.where(pad, 0, tiled.cols)
     gathered = jnp.take(X, safe, axis=0)  # [T, C, L, d]
@@ -99,6 +141,9 @@ def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
         tile_red = contrib.max(axis=2)
     else:
         tile_red = contrib.sum(axis=2)  # [T, C, d]
+    if tile_mask is not None:
+        tile_red = jnp.where(tile_mask[:, None, None], tile_red,
+                             jnp.asarray(sr.zero, tile_red.dtype))
     y_blocks = sr.segment_reduce(tile_red, tiled.row_block, num_segments=tiled.n_chunks)
     rv = tiled.row_vertex.reshape(-1)
     ids = jnp.where(rv < 0, tiled.n, rv)

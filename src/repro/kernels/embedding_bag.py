@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_memory_space
+
 
 def _bag_kernel(bags_ref, table_ref, out_ref, scratch_ref, sem, *,
                 b_blk: int, K: int, d_tile: int, mode: str):
@@ -61,7 +63,7 @@ def embedding_bag_pallas(table, bags, *, mode: str = "sum", b_blk: int = 8,
         in_specs=[
             pl.BlockSpec((b_blk, K), lambda b, dt: (b, 0),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=tpu_memory_space().ANY),
         ],
         out_specs=pl.BlockSpec((b_blk, d_tile), lambda b, dt: (b, dt)),
         scratch_shapes=[

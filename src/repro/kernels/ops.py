@@ -52,13 +52,18 @@ def spmv(sr_name: str, tiled, x, tile_mask=None, interpret=None):
         tiled.cols, tile_ids, tiled.row_block, n_active, x,
         sr_name=sr_name, n_chunks=tiled.n_chunks, interpret=interpret)
     y_blocks = y_blocks[: tiled.n_chunks]
+    # chunk blocks never visited by the grid hold garbage; mask them. A chunk
+    # is visited iff some tile maps to it (always true for the full tile set,
+    # not for hostloop subsets) AND, under SlimWork, some such tile is active.
+    covered = jax.ops.segment_max(jnp.ones_like(tiled.row_block),
+                                  tiled.row_block,
+                                  num_segments=tiled.n_chunks) > 0
     if tile_mask is not None:
-        # blocks never visited by the compacted grid hold garbage; mask them
-        chunk_active = jax.ops.segment_max(tile_mask.astype(jnp.int32),
-                                           tiled.row_block,
-                                           num_segments=tiled.n_chunks) > 0
-        y_blocks = jnp.where(chunk_active[:, None],
-                             y_blocks, jnp.asarray(sr.zero, y_blocks.dtype))
+        covered &= jax.ops.segment_max(tile_mask.astype(jnp.int32),
+                                       tiled.row_block,
+                                       num_segments=tiled.n_chunks) > 0
+    y_blocks = jnp.where(covered[:, None],
+                         y_blocks, jnp.asarray(sr.zero, y_blocks.dtype))
     rv = tiled.row_vertex.reshape(-1)
     ids = jnp.where(rv < 0, tiled.n, rv)
     y = sr.segment_reduce(y_blocks.reshape(-1), ids, num_segments=tiled.n + 1)
@@ -66,17 +71,35 @@ def spmv(sr_name: str, tiled, x, tile_mask=None, interpret=None):
 
 
 @functools.partial(jax.jit, static_argnames=("sr_name", "weighted", "interpret"))
-def spmm(sr_name: str, tiled, X, deg=None, weighted=False, interpret=None):
-    """SlimSell SpMM (feature aggregation); returns Y [n, d] in vertex space."""
+def spmm(sr_name: str, tiled, X, deg=None, weighted=False, tile_mask=None,
+         interpret=None):
+    """SlimSell SpMM (feature aggregation / multi-source BFS); Y [n, d]."""
     interpret = _default_interpret() if interpret is None else interpret
     sr = sm.get(sr_name)
+    T = tiled.cols.shape[0]
+    if tile_mask is None:
+        tile_ids = jnp.arange(T, dtype=jnp.int32)
+        n_active = jnp.asarray([T], jnp.int32)
+    else:
+        tile_ids, n_active = compact_tile_ids(tile_mask)
     rv_tiles = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)  # [T, C]
     y_blocks = slimsell_spmm_pallas(
-        tiled.cols, tiled.row_block, rv_tiles, X,
+        tiled.cols, tile_ids, tiled.row_block, n_active, rv_tiles,
+        X.astype(sr.dtype) if not weighted else X,
         deg if deg is not None else jnp.ones((tiled.n,), jnp.float32),
         sr_name=sr_name, n_chunks=tiled.n_chunks, weighted=weighted,
         interpret=interpret)
     y_blocks = y_blocks[: tiled.n_chunks]                 # [n_chunks, C, d]
+    # mask chunk blocks the grid never visited (see spmv above)
+    covered = jax.ops.segment_max(jnp.ones_like(tiled.row_block),
+                                  tiled.row_block,
+                                  num_segments=tiled.n_chunks) > 0
+    if tile_mask is not None:
+        covered &= jax.ops.segment_max(tile_mask.astype(jnp.int32),
+                                       tiled.row_block,
+                                       num_segments=tiled.n_chunks) > 0
+    y_blocks = jnp.where(covered[:, None, None],
+                         y_blocks, jnp.asarray(sr.zero, y_blocks.dtype))
     rv = tiled.row_vertex.reshape(-1)
     ids = jnp.where(rv < 0, tiled.n, rv)
     y = sr.segment_reduce(y_blocks.reshape(-1, y_blocks.shape[-1]), ids,

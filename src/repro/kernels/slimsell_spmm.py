@@ -1,16 +1,23 @@
-"""Pallas TPU kernel: SlimSell SpMM — the feature-matrix generalization.
+"""Pallas TPU kernel: SlimSell SpMM — the matrix-RHS generalization.
 
 Beyond-paper extension (DESIGN.md §2): the paper's SpMV gathers scalars
-``x[col]``; GNN aggregation gathers feature *rows* ``X[col, :]``. The SlimSell
-tile stays the (C, L) column-index block; the lane dimension moves to the
-feature axis (d_tile = 128), so the reduction over L column slots runs as a
+``x[col]``; SpMM gathers *rows* ``X[col, :]``. The SlimSell tile stays the
+(C, L) column-index block; the lane dimension moves to the RHS column axis
+(d_tile = 128), so the reduction over L column slots runs as a
 sublane-parallel vector op and the MXU-sized (C, d_tile) output accumulates in
-VMEM across the SlimChunk tiles of a chunk.
+VMEM across the SlimChunk tiles of a chunk. Two workloads share the kernel:
 
-``weighted=True`` enables SlimSell-W: GCN's sym-norm weight
-rsqrt(deg[row]) * rsqrt(deg[col]) is derived in-register from the degree
-vector — no val array is ever stored, preserving the Slim property for
-weighted operators.
+* GNN aggregation — d = feature width, real semiring == sum aggregation;
+  ``weighted=True`` enables SlimSell-W: GCN's sym-norm weight
+  rsqrt(deg[row]) * rsqrt(deg[col]) is derived in-register from the degree
+  vector — no val array is ever stored.
+* batched multi-source BFS (Graph500) — d = number of concurrent roots, any
+  of the four semirings; one kernel sweep advances every root's frontier.
+
+**SlimWork** is the same scalar-prefetch grid *indirection* as the SpMV
+kernel: the wrapper compacts active tile ids into ``tile_ids`` (inactive tail
+repeats the last active id); repeated ids map to the same blocks, so skipped
+steps issue no DMA and ``pl.when`` skips their compute.
 
 Per-device use at scale: the mesh partitions vertices into column ranges
 (core/dist_bfs.py), so the VMEM-resident X block is the local column shard.
@@ -27,64 +34,79 @@ from jax.experimental.pallas import tpu as pltpu
 from .slimsell_spmv import semiring_ops, _reduce_l
 
 
-def _spmm_kernel(row_block_ref, cols_ref, rv_ref, x_ref, deg_ref, out_ref, *,
+def _spmm_kernel(tile_ids_ref, row_block_ref, n_active_ref,
+                 cols_ref, rv_ref, x_ref, deg_ref, out_ref, *,
                  sr_name: str, chunk_blk: int, weighted: bool):
     add, contrib_fn, zero = semiring_ops(sr_name)
     t = pl.program_id(1)
-    chunk = row_block_ref[t]
+    tid = tile_ids_ref[t]
+    chunk = row_block_ref[tid]
     blk = chunk // chunk_blk
-    prev_blk = row_block_ref[jnp.maximum(t - 1, 0)] // chunk_blk
+    prev_tid = tile_ids_ref[jnp.maximum(t - 1, 0)]
+    prev_blk = row_block_ref[prev_tid] // chunk_blk
     first_visit = (t == 0) | (blk != prev_blk)
 
     @pl.when(first_visit)
     def _init():
         out_ref[...] = jnp.full_like(out_ref, zero)
 
-    cols = cols_ref[0]                                  # [C, L]
-    pad = cols < 0
-    safe = jnp.where(pad, 0, cols)
-    xv = x_ref[...]                                     # [n_pad, d_tile]
-    g = jnp.take(xv, safe.reshape(-1), axis=0)          # [C*L, d_tile]
-    g = g.reshape(*cols.shape, xv.shape[-1])            # [C, L, d_tile]
-    if weighted:
-        degv = deg_ref[...]
-        rv = rv_ref[0]                                  # [C]
-        w_row = jax.lax.rsqrt(jnp.take(degv, jnp.maximum(rv, 0)))   # [C]
-        w_col = jax.lax.rsqrt(jnp.take(degv, safe.reshape(-1))).reshape(cols.shape)
-        g = (w_row[:, None] * w_col)[..., None] * g
-    else:
-        g = contrib_fn(g)
-    contrib = jnp.where(pad[..., None], jnp.asarray(zero, g.dtype), g)
-    red = _reduce_l(sr_name, contrib.swapaxes(1, 2))    # reduce L -> [C, d_tile]
-    row = chunk % chunk_blk
-    cur = pl.load(out_ref, (pl.ds(row, 1), slice(None), slice(None)))
-    pl.store(out_ref, (pl.ds(row, 1), slice(None), slice(None)),
-             add(cur, red[None]))
+    @pl.when(t < n_active_ref[0])
+    def _work():
+        cols = cols_ref[0]                                  # [C, L]
+        pad = cols < 0
+        safe = jnp.where(pad, 0, cols)
+        xv = x_ref[...]                                     # [n_pad, d_tile]
+        g = jnp.take(xv, safe.reshape(-1), axis=0)          # [C*L, d_tile]
+        g = g.reshape(*cols.shape, xv.shape[-1])            # [C, L, d_tile]
+        if weighted:
+            degv = deg_ref[...]
+            rv = rv_ref[0]                                  # [C]
+            w_row = jax.lax.rsqrt(jnp.take(degv, jnp.maximum(rv, 0)))   # [C]
+            w_col = jax.lax.rsqrt(jnp.take(degv, safe.reshape(-1))).reshape(cols.shape)
+            g = (w_row[:, None] * w_col)[..., None] * g
+        else:
+            g = contrib_fn(g)
+        contrib = jnp.where(pad[..., None], jnp.asarray(zero, g.dtype), g)
+        red = _reduce_l(sr_name, contrib.swapaxes(1, 2))    # reduce L -> [C, d_tile]
+        row = chunk % chunk_blk
+        cur = pl.load(out_ref, (pl.ds(row, 1), slice(None), slice(None)))
+        pl.store(out_ref, (pl.ds(row, 1), slice(None), slice(None)),
+                 add(cur, red[None]))
 
 
 @functools.partial(jax.jit, static_argnames=("sr_name", "chunk_blk", "n_chunks",
                                              "weighted", "d_tile", "interpret"))
-def slimsell_spmm_pallas(cols, row_block, rv_tiles, X, deg, *, sr_name: str,
-                         n_chunks: int, chunk_blk: int = 8, weighted=False,
+def slimsell_spmm_pallas(cols, tile_ids, row_block, n_active, rv_tiles, X,
+                         deg, *, sr_name: str, n_chunks: int,
+                         chunk_blk: int = 8, weighted=False,
                          d_tile: int = 128, interpret: bool = True):
-    """Returns y_blocks [n_chunks_pad, C, d] in chunk-row space."""
+    """Tile-level SpMM.  Returns y_blocks [n_chunks_pad, C, d] (chunk-row space).
+
+    cols:      int32[T, C, L]
+    tile_ids:  int32[T]  grid order (SlimWork compaction; tail repeats last)
+    row_block: int32[T]  owning chunk per tile
+    n_active:  int32[1]  number of live grid steps
+    rv_tiles:  int32[T, C] row vertex per tile (weighted path)
+    X:         RHS [n_pad, d]
+    deg:       degree vector [n_pad] (weighted path; ignored otherwise)
+    """
     T, C, L = cols.shape
     n, d = X.shape
     d_tile = min(d_tile, d)
     assert d % d_tile == 0, (d, d_tile)
     n_blk = -(-n_chunks // chunk_blk)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=3,
         grid=(d // d_tile, T),
         in_specs=[
-            pl.BlockSpec((1, C, L), lambda dt, t, rb: (t, 0, 0)),
-            pl.BlockSpec((1, C), lambda dt, t, rb: (t, 0)),
-            pl.BlockSpec((n, d_tile), lambda dt, t, rb: (0, dt)),
-            pl.BlockSpec((n,), lambda dt, t, rb: (0,)),
+            pl.BlockSpec((1, C, L), lambda dt, t, tids, rb, na: (tids[t], 0, 0)),
+            pl.BlockSpec((1, C), lambda dt, t, tids, rb, na: (tids[t], 0)),
+            pl.BlockSpec((n, d_tile), lambda dt, t, tids, rb, na: (0, dt)),
+            pl.BlockSpec((n,), lambda dt, t, tids, rb, na: (0,)),
         ],
         out_specs=pl.BlockSpec(
             (chunk_blk, C, d_tile),
-            lambda dt, t, rb: (rb[t] // chunk_blk, 0, dt)),
+            lambda dt, t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0, dt)),
     )
     kernel = functools.partial(_spmm_kernel, sr_name=sr_name,
                                chunk_blk=chunk_blk, weighted=weighted)
@@ -93,4 +115,4 @@ def slimsell_spmm_pallas(cols, row_block, rv_tiles, X, deg, *, sr_name: str,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blk * chunk_blk, C, d), X.dtype),
         interpret=interpret,
-    )(row_block, cols, rv_tiles, X, deg.astype(jnp.float32))
+    )(tile_ids, row_block, n_active, cols, rv_tiles, X, deg.astype(jnp.float32))

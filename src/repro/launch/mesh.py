@@ -8,19 +8,20 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh, mesh_from_devices
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape: tuple, axes: tuple) -> Mesh:
     """Small mesh over host CPU devices (tests)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def remesh(failed_devices: set, *, axes=("data", "model")) -> Mesh:
@@ -37,4 +38,4 @@ def remesh(failed_devices: set, *, axes=("data", "model")) -> Mesh:
         model -= 1
     data = n // model
     grid = np.array(devices[: data * model]).reshape(data, model)
-    return Mesh(grid, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return mesh_from_devices(grid, axes)

@@ -1,7 +1,7 @@
 """BFS engine vs the queue-based oracle (and networkx) on all semirings."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.bfs import bfs
 from repro.core.bfs_traditional import bfs_traditional

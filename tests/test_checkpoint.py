@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
+from repro.compat import make_mesh
 from repro.launch import train as train_launch
 
 
@@ -57,8 +58,7 @@ def test_elastic_reshard_roundtrip(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     checkpoint.save(str(tmp_path), 1, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     shardings = {"w": NamedSharding(mesh, P("data", None))}
     out, _ = checkpoint.reshard(str(tmp_path), 1, tree, shardings)
     np.testing.assert_array_equal(np.asarray(out["w"]),

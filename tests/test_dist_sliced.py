@@ -7,6 +7,7 @@ def test_sliced_bfs_matches_oracle_2d_and_3d():
     run_multidevice("""
 import dataclasses
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.graphs.generators import kronecker
 from repro.core.formats import sellcs_order
 from repro.core.dist_bfs import partition_slimsell, make_dist_bfs_sliced
@@ -18,8 +19,7 @@ d_ref, _ = bfs_traditional(csr, root)
 perm = sellcs_order(csr.deg, csr.n)
 root_slot = int(np.nonzero(perm == root)[0][0])
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ("data", "model"))
 dist = partition_slimsell(csr, R=2, Co=2, C=8, L=16, slot_space=True)
 for dt in (jnp.float32, jnp.int16):
     fn = make_dist_bfs_sliced(mesh, dist, frontier_dtype=dt)
@@ -29,8 +29,7 @@ for dt in (jnp.float32, jnp.int16):
     assert np.array_equal(d, d_ref), dt
 
 # 3D: edges split over pods
-mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
 T = dist.t_max
 half = (T + 1) // 2
 cols3 = np.full((2, 2, 2, half, 8, 16), -1, np.int32)

@@ -8,14 +8,14 @@ from conftest import run_multidevice
 def test_dist_bfs_all_semirings_8dev():
     run_multidevice("""
 import numpy as np, jax
+from repro.compat import make_mesh
 from repro.graphs.generators import kronecker
 from repro.core.dist_bfs import partition_slimsell, make_dist_bfs
 from repro.core.bfs_traditional import bfs_traditional
 csr = kronecker(8, 8, seed=3)
 root = int(np.argmax(csr.deg))
 d_ref, _ = bfs_traditional(csr, root)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 dist = partition_slimsell(csr, R=4, Co=2, C=8, L=16)
 for srn in ["tropical", "real", "boolean", "selmax"]:
     fn = make_dist_bfs(mesh, dist, srn, max_iters=64)
@@ -28,13 +28,13 @@ print("PASS")
 def test_dist_bfs_multipod_axes():
     run_multidevice("""
 import numpy as np, jax
+from repro.compat import make_mesh
 from repro.graphs.generators import erdos_renyi
 from repro.core.dist_bfs import partition_slimsell, make_dist_bfs
 from repro.core.bfs_traditional import bfs_traditional
 csr = erdos_renyi(128, 6, seed=1)
 d_ref, _ = bfs_traditional(csr, 0)
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 dist = partition_slimsell(csr, R=4, Co=2, C=4, L=8)
 fn = make_dist_bfs(mesh, dist, "tropical", row_axes=("pod", "data"),
                    col_axes=("model",), max_iters=64)
@@ -47,9 +47,9 @@ print("PASS")
 def test_moe_ep_matches_reference_4dev():
     run_multidevice("""
 import jax, jax.numpy as jnp
+from repro.compat import make_mesh, set_mesh
 from repro.models import moe as moe_lib
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ("data", "model"))
 dims = moe_lib.MoEDims(n_experts=8, top_k=2, d_model=16, d_ff=32,
                        cap_factor=4.0)
 ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -59,7 +59,7 @@ wig = jax.random.normal(ks[2], (8, 16, 32)) * 0.1
 wiu = jax.random.normal(ks[3], (8, 16, 32)) * 0.1
 wo = jax.random.normal(ks[4], (8, 32, 16)) * 0.1
 y_ref = moe_lib.moe_reference(x, wr, wig, wiu, wo, dims)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y_ep = moe_lib.moe_ep_train(x, wr, wig, wiu, wo, dims, mesh,
                                 dp=("data",), tp="model", fsdp=("data",))
     y_dec = moe_lib.moe_ep_decode(x[:, :1], wr, wig, wiu, wo, dims, mesh,
@@ -74,6 +74,7 @@ print("PASS")
 def test_sharded_lm_train_step_matches_single_device():
     run_multidevice("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, set_mesh
 from repro.models import transformer as tf
 from repro.models.sharding import AxisRules
 cfg = tf.LMConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv=2,
@@ -83,10 +84,9 @@ params = tf.init_params(cfg, jax.random.PRNGKey(0))
 toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab)
 batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
 l0 = tf.loss_fn(params, batch, cfg, None)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ("data", "model"))
 ctx = tf.ShardCtx(mesh=mesh, rules=AxisRules.for_mesh(mesh))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     l1 = jax.jit(lambda p, b: tf.loss_fn(p, b, cfg, ctx))(params, batch)
 assert abs(float(l0) - float(l1)) < 1e-3, (float(l0), float(l1))
 print("PASS")
@@ -97,6 +97,7 @@ def test_context_parallel_attention_matches_single_device():
     """Arch with heads not divisible by tp -> context-parallel path."""
     run_multidevice("""
 import jax, jax.numpy as jnp
+from repro.compat import make_mesh, set_mesh
 from repro.models import transformer as tf
 from repro.models.sharding import AxisRules
 cfg = tf.LMConfig(name="t", n_layers=2, d_model=30, n_heads=3, n_kv=3,
@@ -106,11 +107,10 @@ params = tf.init_params(cfg, jax.random.PRNGKey(0))
 toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
 batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
 l0 = tf.loss_fn(params, batch, cfg, None)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ("data", "model"))
 ctx = tf.ShardCtx(mesh=mesh, rules=AxisRules.for_mesh(mesh))
 assert tf._attn_mode(cfg, ctx) == "context"
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     l1 = jax.jit(lambda p, b: tf.loss_fn(p, b, cfg, ctx))(params, batch)
 assert abs(float(l0) - float(l1)) < 1e-3, (float(l0), float(l1))
 print("PASS")

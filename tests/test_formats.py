@@ -1,7 +1,7 @@
 """Graph representation tests: builders + paper Table III storage identities."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.formats import (build_csr, build_slimsell, sellcs_order,
                                 storage_summary)

@@ -53,7 +53,10 @@ def test_gin_backends_agree(graph_batch, rng):
     y1 = gnn.gin_forward(p, batch, cfg)
     y2 = gnn.gin_forward(
         p, batch, dataclasses.replace(cfg, aggregation="slimsell"))
-    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    # GIN activations reach ~1e5: a relative tolerance is the meaningful one
+    # (segment-sum vs SlimSell reduction order differs at the ulp level)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_egnn_equivariance(graph_batch, rng):

@@ -1,0 +1,78 @@
+"""Batched multi-source BFS vs per-root BFS + the Graph500 harness."""
+import numpy as np
+import pytest
+
+from repro.core.bfs import bfs
+from repro.core.bfs_traditional import bfs_traditional
+from repro.core.formats import build_slimsell
+from repro.core.multi_bfs import multi_source_bfs
+from repro.graph500 import run_graph500, sample_roots, validate_bfs_tree
+from repro.graphs.generators import erdos_renyi, kronecker
+
+SEMIRINGS = ["tropical", "real", "boolean", "selmax"]
+
+
+def _case(family):
+    csr = {"kron": lambda: kronecker(8, 8, seed=1),
+           "er": lambda: erdos_renyi(180, 5, seed=2)}[family]()
+    tiled = build_slimsell(csr, C=8, L=16).to_jax()
+    roots = sample_roots(csr, 6, seed=0)
+    refs = np.stack([bfs_traditional(csr, int(r))[0] for r in roots])
+    return csr, tiled, roots, refs
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("family", ["kron", "er"])
+def test_multisource_matches_per_root(semiring, family):
+    csr, tiled, roots, refs = _case(family)
+    res = multi_source_bfs(tiled, roots, semiring, need_parents=True)
+    assert np.array_equal(res.distances, refs)
+    for i, r in enumerate(roots):
+        validate_bfs_tree(csr, int(r), res.distances[i], res.parents[i],
+                          d_ref=refs[i])
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("batch_size", [2, 4, 6])
+def test_multisource_batching_and_backends(backend, batch_size):
+    """Batch widths (incl. a final partial batch) and both backends agree."""
+    csr, tiled, roots, refs = _case("kron")
+    res = multi_source_bfs(tiled, roots, "tropical", batch_size=batch_size,
+                           backend=backend)
+    assert np.array_equal(res.distances, refs)
+    assert res.iterations.size == -(-roots.size // batch_size)
+
+
+def test_multisource_matches_single_source_api():
+    _, tiled, roots, _ = _case("er")
+    for r in roots[:3]:
+        single = bfs(tiled, int(r), "tropical")
+        multi = multi_source_bfs(tiled, [int(r)], "tropical")
+        assert np.array_equal(multi.distances[0], single.distances)
+
+
+def test_multisource_slimwork_off_agrees():
+    _, tiled, roots, refs = _case("kron")
+    res = multi_source_bfs(tiled, roots, "tropical", slimwork=False)
+    assert np.array_equal(res.distances, refs)
+
+
+def test_multisource_rejects_empty_roots():
+    _, tiled, _, _ = _case("kron")
+    with pytest.raises(ValueError):
+        multi_source_bfs(tiled, [])
+
+
+def test_graph500_harness_validates_and_scores():
+    rep = run_graph500(scale=7, edge_factor=8, n_roots=8, batch_size=4,
+                       L=16, seed=3)
+    assert rep.validated == 8
+    assert rep.teps.shape == (8,)
+    assert rep.harmonic_mean_teps > 0
+    assert "hmean_TEPS" in rep.summary()
+
+
+def test_graph500_harness_pallas_backend():
+    rep = run_graph500(scale=7, edge_factor=8, n_roots=4, batch_size=4,
+                       L=16, seed=3, backend="pallas", semiring="selmax")
+    assert rep.validated == 4

@@ -5,7 +5,7 @@ linear map over each semiring, so BFS iterations compose correctly.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import semiring as sm
 from repro.core.formats import build_csr, build_slimsell
