@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: timing, graph cache, CSV emission."""
+"""Shared benchmark utilities: timing, graph cache, CSV + JSON emission."""
 from __future__ import annotations
 
 import functools
@@ -12,10 +12,23 @@ from repro.graphs.generators import erdos_renyi, kronecker
 
 ROWS: list[tuple] = []
 
+# scheme -> metrics dict ({"teps": ..., "bytes": ..., "iterations": ...}).
+# run.py serializes this into BENCH_<tag>.json so CI and local runs share one
+# machine-readable trajectory format; benches call record() for any result
+# that should be tracked over time (TEPS, bytes, iteration counts).
+RESULTS: dict[str, dict] = {}
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def record(scheme: str, **metrics):
+    """Merge ``metrics`` into the machine-readable results for ``scheme``."""
+    RESULTS.setdefault(scheme, {}).update(
+        {k: (float(v) if isinstance(v, (int, float, np.floating, np.integer))
+             else v) for k, v in metrics.items()})
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -1,6 +1,8 @@
 """Quickstart: build a graph, build SlimSell, run algebraic BFS on every
-semiring and both execution backends, batch 8 roots through the multi-source
-SpMM engine, compare against the traditional oracle, inspect storage.
+semiring and both execution backends, switch traversal direction with the
+Beamer heuristic (``direction="auto"``), batch 8 roots through the
+multi-source SpMM engine, compare against the traditional oracle, inspect
+storage.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -44,11 +46,25 @@ def main():
     print(f"pallas backend matches jnp: "
           f"{np.array_equal(res_k.distances, d_ref)}")
 
-    # 4. batched multi-source BFS (Graph500's 64-root harness uses this):
+    # 4. direction-optimizing traversal (paper §V / Beamer): "push" expands
+    #    the frontier top-down, "pull" sweeps the unexplored rows bottom-up
+    #    (early-exit per row in the pallas kernel), "auto" switches per
+    #    iteration on the alpha/beta heuristic — fewest tiles touched overall
+    for direction in ("push", "pull", "auto"):
+        res = bfs(tiled, root, "tropical", mode="hostloop",
+                  direction=direction, log_work=True)
+        ok = np.array_equal(res.distances, d_ref)
+        print(f"direction={direction:4s}: tiles/iter={res.work_log.tolist()} "
+              f"total={int(res.work_log.sum())} "
+              f"dirs={res.directions.tolist()} matches_oracle={ok}")
+
+    # 5. batched multi-source BFS (Graph500's 64-root harness uses this):
     #    8 roots advance together through one semiring SpMM per iteration
+    #    direction="auto" gives every root column its own push/pull state
     roots = np.random.default_rng(0).choice(
         np.nonzero(csr.deg > 0)[0], 8, replace=False)
-    ms = multi_source_bfs(tiled, roots, "tropical", batch_size=8)
+    ms = multi_source_bfs(tiled, roots, "tropical", batch_size=8,
+                          direction="auto")
     ok = all(np.array_equal(ms.distances[i], bfs_traditional(csr, int(r))[0])
              for i, r in enumerate(roots))
     print(f"multi-source: {len(roots)} roots in "

@@ -1,4 +1,5 @@
-"""Algebraic BFS over SlimSell (paper §III): four semirings, SlimWork, DP.
+"""Algebraic BFS over SlimSell (paper §III): four semirings, SlimWork, DP,
+and direction-optimizing (push/pull/auto) traversal.
 
 Two execution modes:
 
@@ -6,12 +7,25 @@ Two execution modes:
   SlimWork is expressed as a per-tile mask (correctness-preserving; on TPU the
   Pallas kernel turns the mask into scalar-prefetch grid indirection so skipped
   tiles issue no DMA, see kernels/slimsell_spmv.py). The fused mode is what the
-  multi-pod dry-run lowers.
+  multi-pod dry-run lowers. Under ``direction="auto"`` the Beamer heuristic
+  runs *inside* the while_loop carry and a ``lax.cond`` picks the push SpMV or
+  the pull sweep each iteration.
 
 * ``mode="hostloop"`` — the BFS loop runs on host and each iteration gathers
   only the *active* tiles (bucketed to powers of two to bound retracing) before
   invoking the jitted step. This performs real work-skipping on any backend and
-  is what the SlimWork benchmarks measure (paper Fig. 5d).
+  is what the SlimWork + direction benchmarks measure (paper Fig. 5d).
+
+Directions (core.direction, paper §V / Beamer et al.):
+
+* ``direction="push"``  — top-down: tiles selected through the frontier-column
+  push index; work ∝ edges out of the frontier.
+* ``direction="pull"``  — bottom-up: ``slimsell_pull`` over not-final rows
+  (SlimWork's own criterion), per-row early exit on the pallas backend; work
+  ∝ edges of the unexplored rows.
+* ``direction="auto"``  — per-iteration alpha/beta switch between the two.
+
+All three give identical distances and valid (possibly different) parents.
 """
 from __future__ import annotations
 
@@ -24,11 +38,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import direction as dm
 from . import semiring as sm
-from .spmv import resolve_backend, slimsell_spmv
+from .spmv import resolve_backend, slimsell_pull, slimsell_spmv
 
 Array = jax.Array
 WORK_LOG = 512  # max logged iterations
+
+DIRECTIONS = ("push", "pull", "auto")
 
 
 @dataclasses.dataclass
@@ -37,6 +54,7 @@ class BFSResult:
     parents: Optional[np.ndarray]  # int32[n]; parent in BFS tree; root -> root
     iterations: int
     work_log: Optional[np.ndarray] = None  # active tiles per iteration
+    directions: Optional[np.ndarray] = None  # int32 per iteration; 0=push 1=pull
 
 
 # ------------------------------------------------------------------ state ops
@@ -69,11 +87,12 @@ def _not_final(sr_name: str, state) -> Array:
     return state["p"] == 0.0
 
 
-def _chunk_active(sr_name: str, state, row_vertex: Array, n: int) -> Array:
-    nf = _not_final(sr_name, state)
+def _chunk_active_from(nf: Array, row_vertex: Array) -> Array:
+    """bool[n_chunks] from precomputed not-final bits (SlimWork §III-C; the
+    pull direction's tile criterion)."""
     safe = jnp.where(row_vertex < 0, 0, row_vertex)
     per_row = jnp.where(row_vertex < 0, False, jnp.take(nf, safe, axis=0))
-    return per_row.any(axis=1)  # bool[n_chunks]
+    return per_row.any(axis=1)
 
 
 def semiring_update(sr_name: str, state, y: Array, k: Array, ids1: Array):
@@ -105,11 +124,22 @@ def semiring_update(sr_name: str, state, y: Array, k: Array, ids1: Array):
 
 def _step(sr_name: str, tiled, state, k: Array, tile_mask,
           backend: str = "jnp"):
-    """One frontier expansion; k is the 1-based iteration (== distance)."""
+    """One push (top-down) expansion; k is the 1-based iteration (== distance)."""
     sr = sm.get(sr_name)
     frontier = state["x"] if sr_name == "selmax" else state["f"]
     y = slimsell_spmv(sr, tiled, frontier, tile_mask=tile_mask,
                       backend=backend)
+    ids1 = jnp.arange(tiled.n, dtype=jnp.float32) + 1.0
+    return semiring_update(sr_name, state, y, k, ids1)
+
+
+def _pull_step(sr_name: str, tiled, state, k: Array, row_mask, tile_mask,
+               backend: str = "jnp"):
+    """One pull (bottom-up) sweep over the rows with ``row_mask`` set."""
+    sr = sm.get(sr_name)
+    frontier = state["x"] if sr_name == "selmax" else state["f"]
+    y = slimsell_pull(sr, tiled, frontier, row_mask=row_mask,
+                      tile_mask=tile_mask, backend=backend)
     ids1 = jnp.arange(tiled.n, dtype=jnp.float32) + 1.0
     return semiring_update(sr_name, state, y, k, ids1)
 
@@ -144,32 +174,71 @@ def dp_transform(tiled, d: Array, root) -> Array:
 
 
 @partial(jax.jit, static_argnames=("sr_name", "slimwork", "max_iters",
-                                   "log_work", "backend"))
+                                   "log_work", "backend", "direction"))
 def _bfs_fused(tiled, root, *, sr_name: str, slimwork: bool,
-               max_iters: int, log_work: bool, backend: str = "jnp"):
+               max_iters: int, log_work: bool, backend: str = "jnp",
+               direction: str = "push"):
     n = tiled.n
     state = _init_state(sr_name, n, root)
     work = jnp.zeros((WORK_LOG,), jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
+    dirs = jnp.full((WORK_LOG,), -1, jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
+    use_push = direction in ("push", "auto")
+    d0 = jnp.asarray(dm.PULL if direction == "pull" else dm.PUSH, jnp.int32)
 
     def cond(carry):
-        _, k, changed, _ = carry
+        _, k, changed, _, _, _ = carry
         return changed & (k <= max_iters)
 
     def body(carry):
-        state, k, _, work = carry
-        tile_mask = None
-        if slimwork:
-            active = _chunk_active(sr_name, state, tiled.row_vertex, n)
-            tile_mask = jnp.take(active, tiled.row_block, axis=0)
-            if log_work:
-                idx = jnp.minimum(k - 1, WORK_LOG - 1)
-                work = work.at[idx].set(tile_mask.sum(dtype=jnp.int32))
-        state, changed = _step(sr_name, tiled, state, k, tile_mask, backend)
-        return state, k + 1, changed, work
+        state, k, _, work, dcur, dirs = carry
+        nf_rows = _not_final(sr_name, state)
+        fbits = dm.frontier_bits(sr_name, state, k) if use_push else None
+        if direction == "auto":
+            mf, mu, nnz_f = dm.edge_counts(tiled.deg, fbits, nf_rows)
+            dnext = dm.choose_direction(dcur, mf, mu, nnz_f, n)
+        else:
+            dnext = dcur
 
-    state, k, _, work = jax.lax.while_loop(
-        cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True), work))
-    return state, k - 1, work
+        # the tile masks are built INSIDE the branches so the untaken
+        # direction's mask is never materialized (lax.cond operands would be
+        # evaluated eagerly every iteration otherwise); each branch returns
+        # its active-tile count for the work log
+        n_tiles_c = jnp.asarray(tiled.cols.shape[0], jnp.int32)
+
+        def push_fn(state):
+            mask = dm.push_tile_mask(tiled, fbits) if slimwork else None
+            state, changed = _step(sr_name, tiled, state, k, mask, backend)
+            used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
+            return state, changed, used
+
+        def pull_fn(state):
+            mask = None
+            if slimwork:
+                active = _chunk_active_from(nf_rows, tiled.row_vertex)
+                mask = jnp.take(active, tiled.row_block, axis=0)
+            state, changed = _pull_step(sr_name, tiled, state, k, nf_rows,
+                                        mask, backend)
+            used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
+            return state, changed, used
+
+        if direction == "push":
+            state, changed, used = push_fn(state)
+        elif direction == "pull":
+            state, changed, used = pull_fn(state)
+        else:
+            state, changed, used = jax.lax.cond(dnext == dm.PUSH, push_fn,
+                                                pull_fn, state)
+        if log_work:
+            idx = jnp.minimum(k - 1, WORK_LOG - 1)
+            dirs = dirs.at[idx].set(dnext)
+            if slimwork:
+                work = work.at[idx].set(used)
+        return state, k + 1, changed, work, dnext, dirs
+
+    state, k, _, work, _, dirs = jax.lax.while_loop(
+        cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True),
+                     work, d0, dirs))
+    return state, k - 1, work, dirs
 
 
 # ------------------------------------------------------------------ hostloop
@@ -208,6 +277,52 @@ def _subset_step(sr_name: str, tiled_cols, tiled_row_block, row_vertex,
     return _step(sr_name, sub, state, k, None, backend)
 
 
+@partial(jax.jit, static_argnames=("sr_name", "n_active", "n", "n_chunks",
+                                   "backend"))
+def _subset_pull_step(sr_name: str, tiled_cols, tiled_row_block, row_vertex,
+                      n: int, n_chunks: int, tile_ids, n_active: int, state,
+                      k, backend: str = "jnp"):
+    """Pull variant of ``_subset_step``: bottom-up sweep over active tiles.
+
+    The not-final row mask is derived from ``state`` inside the jit so the
+    host loop ships no extra operands.
+    """
+    ids = tile_ids[:n_active]
+    sub = _SubsetTiled(
+        cols=jnp.take(tiled_cols, ids, axis=0),
+        row_block=jnp.take(tiled_row_block, ids, axis=0),
+        row_vertex=row_vertex, n=n, n_chunks=n_chunks,
+    )
+    return _pull_step(sr_name, sub, state, k, _not_final(sr_name, state),
+                      None, backend)
+
+
+# host-side (numpy) twins of the mask/heuristic helpers: the hostloop engine
+# decides direction and gathers active tiles on host, so doing this math in
+# numpy avoids ~20 device dispatches per BFS iteration
+
+
+def _host_direction_bits(sr_name: str, state, k: int, *, need_nf: bool,
+                         need_fb: bool):
+    """(not_final, frontier) numpy bit vectors, each None unless requested.
+
+    One np.asarray per state field: for tropical both vectors derive from
+    the same device->host transfer of ``f``.
+    """
+    nf = fb = None
+    if sr_name == "tropical":
+        f = np.asarray(state["f"]) if (need_nf or need_fb) else None
+        nf = np.isinf(f) if need_nf else None
+        fb = (f == (k - 1)) if need_fb else None
+    elif sr_name in ("real", "boolean"):
+        nf = ~np.asarray(state["visited"]) if need_nf else None
+        fb = (np.asarray(state["f"]) > 0) if need_fb else None
+    else:
+        nf = (np.asarray(state["p"]) == 0.0) if need_nf else None
+        fb = (np.asarray(state["x"]) > 0) if need_fb else None
+    return nf, fb
+
+
 def _bucket(x: int) -> int:
     return 1 if x <= 1 else 2 ** math.ceil(math.log2(x))
 
@@ -218,36 +333,79 @@ def _bucket(x: int) -> int:
 def bfs(tiled, root: int, semiring: str = "tropical", *,
         need_parents: bool = False, slimwork: bool = True,
         mode: str = "fused", max_iters: Optional[int] = None,
-        log_work: bool = False, backend: Optional[str] = None) -> BFSResult:
+        log_work: bool = False, backend: Optional[str] = None,
+        direction: str = "push") -> BFSResult:
     """Run BFS from ``root``; returns distances (+parents) in vertex space.
 
     backend: "jnp" (reference) or "pallas" (SlimSell TPU kernel engine).
+    direction: "push" (top-down SpMV), "pull" (bottom-up sweep over not-final
+    rows), or "auto" (per-iteration Beamer alpha/beta switch — the direction
+    trace is returned in ``BFSResult.directions`` when ``log_work`` is set or
+    ``mode="hostloop"``).
     """
     if semiring not in sm.SEMIRINGS:
         raise KeyError(semiring)
+    if direction not in DIRECTIONS:
+        raise ValueError(f"unknown direction {direction!r}; available: {DIRECTIONS}")
     backend = resolve_backend(backend)
+    if direction in ("push", "auto") and slimwork \
+            and getattr(tiled, "inc_src", None) is None:
+        raise ValueError("direction-optimizing push masks need the push index;"
+                         " rebuild the layout with formats.build_slimsell")
     n = tiled.n
     max_iters = int(max_iters) if max_iters is not None else n
     root = jnp.asarray(root, jnp.int32)
+    dirs_out = None
 
     if mode == "fused":
-        state, iters, work = _bfs_fused(
+        state, iters, work, dirs = _bfs_fused(
             tiled, root, sr_name=semiring, slimwork=slimwork,
-            max_iters=max_iters, log_work=log_work, backend=backend)
+            max_iters=max_iters, log_work=log_work, backend=backend,
+            direction=direction)
         iters = int(iters)
+        if log_work:
+            dirs_out = np.asarray(dirs)[:iters]
+        elif direction != "auto":
+            dirs_out = np.full(
+                iters, dm.PULL if direction == "pull" else dm.PUSH, np.int32)
     elif mode == "hostloop":
         state = _init_state(semiring, n, root)
         k, iters = 1, 0
-        work_list = []
+        work_list, dir_list = [], []
         n_tiles = int(tiled.n_tiles)
+        dcur = dm.PULL if direction == "pull" else dm.PUSH
+        # host copies of the layout metadata the per-iteration masks need
+        rv_np = np.asarray(tiled.row_vertex)
+        rv_safe_np = np.where(rv_np < 0, 0, rv_np)
+        rb_np = np.asarray(tiled.row_block)
+        deg_np = np.asarray(tiled.deg, np.float64)
+        use_push = direction in ("push", "auto")
+        if use_push and slimwork:
+            inc_src_np = np.asarray(tiled.inc_src)
+            inc_tile_np = np.asarray(tiled.inc_tile)
         while k <= max_iters:
+            # only materialize the bit vectors this direction's masks and
+            # heuristic actually read (each costs a device sync per iteration)
+            nf, fbits = _host_direction_bits(
+                semiring, state, k,
+                need_nf=direction != "push",
+                need_fb=use_push)
+            if direction == "auto":
+                dcur = dm.choose_direction_host(
+                    dcur, float(deg_np[fbits].sum()), float(deg_np[nf].sum()),
+                    float(fbits.sum()), n)
             if slimwork:
-                active = _chunk_active(semiring, state, tiled.row_vertex, n)
-                tmask = np.asarray(jnp.take(active, tiled.row_block, axis=0))
+                if dcur == dm.PUSH:
+                    tmask = np.zeros(n_tiles, bool)
+                    tmask[inc_tile_np[fbits[inc_src_np]]] = True
+                else:
+                    chunk_act = (nf[rv_safe_np] & (rv_np >= 0)).any(axis=1)
+                    tmask = chunk_act[rb_np]
                 ids = np.nonzero(tmask)[0]
                 if ids.size == 0:
                     break
                 work_list.append(ids.size)
+                dir_list.append(dcur)
                 bucket = min(_bucket(ids.size), n_tiles)
                 ids_p = np.zeros(bucket, np.int32)
                 ids_p[: ids.size] = ids
@@ -256,20 +414,28 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
                     # the final output block, so the pallas kernel's
                     # first-visit re-init never revisits an earlier block
                     ids_p[ids.size:] = ids[-1]
-                state, changed = _subset_step(
+                step_fn = _subset_step if dcur == dm.PUSH else _subset_pull_step
+                state, changed = step_fn(
                     semiring, tiled.cols, tiled.row_block, tiled.row_vertex,
                     n, tiled.n_chunks, jnp.asarray(ids_p), bucket,
                     state, jnp.asarray(k, jnp.int32), backend)
             else:
                 work_list.append(n_tiles)
-                state, changed = _step(semiring, tiled, state,
-                                       jnp.asarray(k, jnp.int32), None,
-                                       backend)
+                dir_list.append(dcur)
+                if dcur == dm.PUSH:
+                    state, changed = _step(semiring, tiled, state,
+                                           jnp.asarray(k, jnp.int32), None,
+                                           backend)
+                else:
+                    state, changed = _pull_step(
+                        semiring, tiled, state, jnp.asarray(k, jnp.int32),
+                        _not_final(semiring, state), None, backend)
             iters = k
             k += 1
             if not bool(changed):
                 break
         work = np.asarray(work_list, np.int32)
+        dirs_out = np.asarray(dir_list, np.int32)
     else:
         raise ValueError(mode)
 
@@ -282,4 +448,5 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
         else:
             parents = np.asarray(dp_transform(tiled, jnp.asarray(d), root))
     wl = np.asarray(work) if (log_work or mode == "hostloop") else None
-    return BFSResult(distances=d, parents=parents, iterations=iters, work_log=wl)
+    return BFSResult(distances=d, parents=parents, iterations=iters,
+                     work_log=wl, directions=dirs_out)

@@ -1,0 +1,111 @@
+"""Direction-optimizing traversal: Beamer's push/pull heuristic, algebraically.
+
+The paper (§V) notes that SpMV-BFS does redundant work once the frontier is
+large; direction-optimizing (hybrid) BFS [Beamer et al., SC'12] is the
+standard fix. In the SlimSell world the two directions are two ways of
+selecting which tiles a semiring sweep touches:
+
+* **push** (top-down): the tiles containing at least one *frontier column* —
+  selected through the precomputed (column vertex, tile) push index
+  (``tiled.inc_src``/``inc_tile``). Work ∝ edges out of the frontier,
+  including the redundant re-checks of already-visited destinations.
+* **pull** (bottom-up): the tiles of chunks with at least one *not-final
+  row* — SlimWork's own criterion — swept by ``slimsell_pull`` with per-row
+  masking and (on the pallas backend) per-row early exit. Work ∝ edges of
+  the unexplored rows.
+
+``choose_direction`` is the classic alpha/beta switch, evaluated each
+iteration from the degree vector:
+
+  push -> pull  when  m_frontier > m_unexplored / alpha       (frontier heavy)
+  pull -> push  when  |frontier| < n / beta
+                and   m_frontier <= m_unexplored / alpha      (tail guard)
+
+The tail guard departs from Beamer's original pull->push rule: queue-based
+top-down work is ∝ frontier edges exactly, but our push granularity is the
+SlimSell *tile*, so a tiny scattered frontier can still touch many tiles
+while the pull sweep is down to the last unexplored chunks. Staying in pull
+whenever the frontier still dominates the unexplored edges keeps the tail
+iterations on the cheaper side (measured by benchmarks/bench_direction.py).
+
+All functions are shape-polymorphic over a trailing batch axis so the
+single-source engine (bits [n]) and the multi-source engine (bits [n, B],
+per-column direction state) share them, and they work both traced (inside a
+``lax.while_loop`` carry) and on host scalars (the hostloop engine).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+PUSH = 0
+PULL = 1
+
+# Beamer et al.'s published defaults (SC'12 §4); tuned for Graph500 Kronecker.
+ALPHA = 14.0
+BETA = 24.0
+
+
+def frontier_bits(sr_name: str, state, k) -> Array:
+    """bool[n] (or [n, B]): vertices discovered at distance k-1 — the frontier
+    about to be expanded by iteration ``k``.
+
+    real/boolean keep an explicit frontier indicator in ``f``; selmax keeps
+    frontier ids in ``x``; tropical carries *all* distances in ``f``, so the
+    frontier is the level set ``f == k-1``.
+    """
+    if sr_name == "tropical":
+        return state["f"] == jnp.asarray(k - 1, state["f"].dtype)
+    if sr_name in ("real", "boolean"):
+        return state["f"] > 0
+    return state["x"] > 0
+
+
+def push_tile_mask(tiled, fbits: Array) -> Array:
+    """bool[T]: tiles containing ≥1 frontier column, via the push index.
+
+    ``fbits`` may be [n] or [n, B]; a batch is reduced with any() first
+    (one shared tile set — the SpMM advances every column on each tile).
+    """
+    if fbits.ndim > 1:
+        fbits = fbits.any(axis=-1)
+    hit = jnp.take(fbits, tiled.inc_src, axis=0).astype(jnp.int32)
+    return jax.ops.segment_max(hit, tiled.inc_tile,
+                               num_segments=tiled.n_tiles) > 0
+
+
+def edge_counts(deg: Array, fbits: Array, nf: Array):
+    """(m_frontier, m_unexplored, |frontier|) — per column if bits are [n, B].
+
+    deg is the (undirected-doubled) degree vector; sums are float32 so the
+    scale-26+ graphs don't overflow int32.
+    """
+    degf = deg.astype(jnp.float32)
+    if fbits.ndim > 1:
+        degf = degf[:, None]
+    mf = jnp.sum(jnp.where(fbits, degf, 0.0), axis=0)
+    mu = jnp.sum(jnp.where(nf, degf, 0.0), axis=0)
+    nnz_f = jnp.sum(fbits, axis=0).astype(jnp.float32)
+    return mf, mu, nnz_f
+
+
+def choose_direction(current, mf, mu, nnz_f, n: int, *,
+                     alpha: float = ALPHA, beta: float = BETA):
+    """Next direction(s) given the current one and the frontier statistics."""
+    to_pull = mf > mu / alpha
+    to_push = (nnz_f < n / beta) & ~to_pull
+    return jnp.where(current == PUSH,
+                     jnp.where(to_pull, PULL, PUSH),
+                     jnp.where(to_push, PUSH, PULL)).astype(jnp.int32)
+
+
+def choose_direction_host(current: int, mf: float, mu: float, nnz_f: float,
+                          n: int, *, alpha: float = ALPHA,
+                          beta: float = BETA) -> int:
+    """Host-scalar twin of ``choose_direction`` for the hostloop engine."""
+    to_pull = mf > mu / alpha
+    if current == PUSH:
+        return PULL if to_pull else PUSH
+    return PUSH if (nnz_f < n / beta and not to_pull) else PULL

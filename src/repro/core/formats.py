@@ -97,7 +97,16 @@ def sellcs_order(deg: np.ndarray, sigma: int, *, descending: bool = True) -> np.
 
 @dataclasses.dataclass
 class SlimSellTiled:
-    """SlimChunk-regularized SlimSell; all arrays are host numpy until .to_jax()."""
+    """SlimChunk-regularized SlimSell; all arrays are host numpy until .to_jax().
+
+    ``inc_src``/``inc_tile`` are the *push index*: the deduplicated
+    (column vertex, tile) incidence pairs, sorted by vertex. Direction-
+    optimizing BFS uses them to select the tiles touched by a frontier
+    (top-down/push work ∝ edges out of the frontier) without scanning
+    ``cols``. K ≤ nnz pairs; this index is reported separately from the
+    paper's Table III storage accounting (it only exists for traversal,
+    not for the SpMV operand).
+    """
     n: int
     m_undirected: int
     C: int
@@ -110,6 +119,8 @@ class SlimSellTiled:
     row_vertex: np.ndarray  # int32[n_chunks, C]; -1 == padding row
     cl: np.ndarray          # int32[n_chunks]  chunk lengths (pre-tiling)
     deg: np.ndarray         # int64[n]
+    inc_src: np.ndarray = None   # int32[K] column vertex of each incidence pair
+    inc_tile: np.ndarray = None  # int32[K] tile containing that column
 
     def to_jax(self):
         import jax.numpy as jnp
@@ -120,21 +131,54 @@ class SlimSellTiled:
             row_vertex=jnp.asarray(self.row_vertex),
             cl=jnp.asarray(self.cl),
             deg=jnp.asarray(self.deg, dtype=jnp.int32),
+            inc_src=None if self.inc_src is None else jnp.asarray(self.inc_src),
+            inc_tile=None if self.inc_tile is None else jnp.asarray(self.inc_tile),
         )
 
 
 def _tiled_flatten(t: "SlimSellTiled"):
-    children = (t.cols, t.row_block, t.row_vertex, t.cl, t.deg)
+    children = (t.cols, t.row_block, t.row_vertex, t.cl, t.deg,
+                t.inc_src, t.inc_tile)
     aux = (t.n, t.m_undirected, t.C, t.L, t.sigma, t.n_chunks, t.n_tiles)
     return children, aux
 
 
 def _tiled_unflatten(aux, children):
     n, m, C, L, sigma, n_chunks, n_tiles = aux
-    cols, row_block, row_vertex, cl, deg = children
+    cols, row_block, row_vertex, cl, deg, inc_src, inc_tile = children
     return SlimSellTiled(n=n, m_undirected=m, C=C, L=L, sigma=sigma,
                          n_chunks=n_chunks, n_tiles=n_tiles, cols=cols,
-                         row_block=row_block, row_vertex=row_vertex, cl=cl, deg=deg)
+                         row_block=row_block, row_vertex=row_vertex, cl=cl,
+                         deg=deg, inc_src=inc_src, inc_tile=inc_tile)
+
+
+def build_push_index(cols: np.ndarray,
+                     tile_chunk: int = 1 << 16) -> tuple[np.ndarray, np.ndarray]:
+    """Deduplicated (column vertex, tile) pairs of a cols array, vertex-sorted.
+
+    Processed in slices of ``tile_chunk`` tiles so transient memory stays a
+    small multiple of one slice (key ranges of distinct tiles are disjoint,
+    so per-slice uniques concatenate without a second global dedup); the
+    final vertex-major order comes from one stable sort over the K pairs.
+    """
+    n_tiles = cols.shape[0]
+    srcs, tiles = [], []
+    for t0 in range(0, n_tiles, tile_chunk):
+        blk = cols[t0:t0 + tile_chunk]
+        flat = blk.reshape(blk.shape[0], -1).astype(np.int64)
+        t_idx = np.repeat(np.arange(flat.shape[0], dtype=np.int64),
+                          flat.shape[1])
+        flat = flat.reshape(-1)
+        ok = flat >= 0
+        key = np.unique(t_idx[ok] * (flat.max(initial=0) + 1) + flat[ok]) \
+            if ok.any() else np.empty(0, np.int64)
+        base = flat.max(initial=0) + 1
+        tiles.append((key // base + t0).astype(np.int32))
+        srcs.append((key % base).astype(np.int32))
+    inc_src = np.concatenate(srcs) if srcs else np.empty(0, np.int32)
+    inc_tile = np.concatenate(tiles) if tiles else np.empty(0, np.int32)
+    order = np.argsort(inc_src, kind="stable")
+    return inc_src[order], inc_tile[order]
 
 
 def build_slimsell(csr: CSRGraph, *, C: int = 8, L: int = 128,
@@ -174,10 +218,12 @@ def build_slimsell(csr: CSRGraph, *, C: int = 8, L: int = 128,
             buf[r, :nbr.size] = nbr
         cols[t0:tile_start[c + 1]] = buf.reshape(C, -1, L).transpose(1, 0, 2)
 
+    inc_src, inc_tile = build_push_index(cols)
     return SlimSellTiled(
         n=n, m_undirected=csr.m_undirected, C=C, L=L, sigma=sigma,
         n_chunks=n_chunks, n_tiles=n_tiles, cols=cols, row_block=row_block,
         row_vertex=row_vertex, cl=cl, deg=deg,
+        inc_src=inc_src, inc_tile=inc_tile,
     )
 
 

@@ -18,6 +18,15 @@ structure reuse; the crossover is measured by benchmarks/bench_multisource.py).
 Iterations run to the max depth over the batch: converged columns simply stop
 changing (their frontier no longer produces new vertices), which is exact for
 every semiring.
+
+Direction optimization is **per column**: each root carries its own
+push/pull state in the while_loop carry (``direction="auto"`` runs Beamer's
+alpha/beta heuristic on per-column frontier statistics). Because one SpMM
+sweep advances the whole batch, the per-column directions compose into a
+single *union* tile mask — push columns contribute the tiles holding their
+frontier columns (via the push index), pull columns contribute the chunks
+with rows they can still finalize. The per-column math of the update is
+direction-independent, so mixing directions inside one batch is exact.
 """
 from __future__ import annotations
 
@@ -29,8 +38,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import direction as dm
 from . import semiring as sm
-from .bfs import WORK_LOG, _not_final, dp_transform, semiring_update
+from .bfs import (DIRECTIONS, WORK_LOG, _chunk_active_from, _not_final,
+                  dp_transform, semiring_update)
 from .spmv import resolve_backend, slimsell_spmm
 
 Array = jax.Array
@@ -43,6 +54,8 @@ class MultiBFSResult:
     iterations: np.ndarray         # int32[n_batches] while-loop trips per batch
     roots: np.ndarray              # int32[n_roots]
     work_log: Optional[np.ndarray] = None  # int32[n_batches, WORK_LOG]
+    pull_cols_log: Optional[np.ndarray] = None  # int32[n_batches, WORK_LOG]:
+    # columns running pull per iteration (direction="auto" introspection)
 
 
 # ------------------------------------------------------------------ state ops
@@ -74,10 +87,8 @@ def _init_state_multi(sr_name: str, n: int, roots: Array):
 
 def _chunk_active_multi(sr_name: str, state, row_vertex: Array) -> Array:
     # union SlimWork: a row is live while ANY root can still change it
-    nf = _not_final(sr_name, state).any(axis=1)
-    safe = jnp.where(row_vertex < 0, 0, row_vertex)
-    per_row = jnp.where(row_vertex < 0, False, jnp.take(nf, safe, axis=0))
-    return per_row.any(axis=1)  # bool[n_chunks]
+    return _chunk_active_from(_not_final(sr_name, state).any(axis=1),
+                              row_vertex)
 
 
 def _step_multi(sr_name: str, tiled, state, k: Array, tile_mask,
@@ -95,33 +106,60 @@ def _step_multi(sr_name: str, tiled, state, k: Array, tile_mask,
 
 
 @partial(jax.jit, static_argnames=("sr_name", "slimwork", "max_iters",
-                                   "log_work", "backend"))
+                                   "log_work", "backend", "direction"))
 def _multi_bfs_fused(tiled, roots, *, sr_name: str, slimwork: bool,
-                     max_iters: int, log_work: bool, backend: str):
+                     max_iters: int, log_work: bool, backend: str,
+                     direction: str = "push"):
     n = tiled.n
+    B = roots.shape[0]
     state = _init_state_multi(sr_name, n, roots)
     work = jnp.zeros((WORK_LOG,), jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
+    plog = jnp.zeros((WORK_LOG,), jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
+    use_push = direction in ("push", "auto")
+    d0 = jnp.full((B,), dm.PULL if direction == "pull" else dm.PUSH, jnp.int32)
 
     def cond(carry):
-        _, k, changed, _ = carry
+        _, k, changed, _, _, _ = carry
         return changed & (k <= max_iters)
 
     def body(carry):
-        state, k, _, work = carry
+        state, k, _, work, dirs, plog = carry
+        nf = _not_final(sr_name, state)                        # [n, B]
+        fbits = dm.frontier_bits(sr_name, state, k) if use_push else None
+        if direction == "auto":
+            mf, mu, nnz_f = dm.edge_counts(tiled.deg, fbits, nf)
+            dirs = dm.choose_direction(dirs, mf, mu, nnz_f, n)  # [B]
         tile_mask = None
         if slimwork:
-            active = _chunk_active_multi(sr_name, state, tiled.row_vertex)
-            tile_mask = jnp.take(active, tiled.row_block, axis=0)
+            # union of the per-column direction-specific masks: one SpMM
+            # sweep advances every column, so a tile is live if ANY column
+            # needs it in its own direction
+            if direction == "push":
+                tile_mask = dm.push_tile_mask(tiled, fbits)
+            elif direction == "pull":
+                active = _chunk_active_from(nf.any(axis=1), tiled.row_vertex)
+                tile_mask = jnp.take(active, tiled.row_block, axis=0)
+            else:
+                push_rows = (fbits & (dirs == dm.PUSH)[None, :]).any(axis=1)
+                pull_rows = (nf & (dirs == dm.PULL)[None, :]).any(axis=1)
+                active = _chunk_active_from(pull_rows, tiled.row_vertex)
+                tile_mask = dm.push_tile_mask(tiled, push_rows) \
+                    | jnp.take(active, tiled.row_block, axis=0)
             if log_work:
                 idx = jnp.minimum(k - 1, WORK_LOG - 1)
                 work = work.at[idx].set(tile_mask.sum(dtype=jnp.int32))
+        if log_work:
+            idx = jnp.minimum(k - 1, WORK_LOG - 1)
+            plog = plog.at[idx].set(
+                jnp.sum(dirs == dm.PULL, dtype=jnp.int32))
         state, changed = _step_multi(sr_name, tiled, state, k, tile_mask,
                                      backend)
-        return state, k + 1, changed, work
+        return state, k + 1, changed, work, dirs, plog
 
-    state, k, _, work = jax.lax.while_loop(
-        cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True), work))
-    return state, k - 1, work
+    state, k, _, work, _, plog = jax.lax.while_loop(
+        cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True),
+                     work, d0, plog))
+    return state, k - 1, work, plog
 
 
 # ----------------------------------------------------------------- public API
@@ -133,16 +171,26 @@ def multi_source_bfs(tiled, roots: Sequence[int],
                      batch_size: Optional[int] = None,
                      max_iters: Optional[int] = None,
                      log_work: bool = False,
-                     backend: Optional[str] = None) -> MultiBFSResult:
+                     backend: Optional[str] = None,
+                     direction: str = "push") -> MultiBFSResult:
     """BFS from every root in ``roots``; one fused SpMM loop per batch.
 
     batch_size: roots per device batch (None -> all roots in one batch). The
     final partial batch is padded by repeating its last root; padded columns
     are dropped before returning.
     backend: "jnp" (reference) or "pallas" (SlimSell TPU SpMM kernel).
+    direction: "push" | "pull" | "auto" — with "auto" every column carries
+    its own Beamer direction state; ``pull_cols_log`` (under ``log_work``)
+    reports how many columns ran pull per iteration.
     """
     if semiring not in sm.SEMIRINGS:
         raise KeyError(semiring)
+    if direction not in DIRECTIONS:
+        raise ValueError(f"unknown direction {direction!r}; available: {DIRECTIONS}")
+    if direction in ("push", "auto") and slimwork \
+            and getattr(tiled, "inc_src", None) is None:
+        raise ValueError("direction-optimizing push masks need the push index;"
+                         " rebuild the layout with formats.build_slimsell")
     backend = resolve_backend(backend)
     roots = np.asarray(roots, np.int32).reshape(-1)
     if roots.size == 0:
@@ -160,15 +208,16 @@ def multi_source_bfs(tiled, roots: Sequence[int],
 
     d_out = np.empty((roots.size, n), np.int32)
     p_out = np.empty((roots.size, n), np.int32) if need_parents else None
-    iters, work_rows = [], []
+    iters, work_rows, plog_rows = [], [], []
     for start in range(0, roots.size, B):
         batch = roots[start:start + B]
         pad = B - batch.size
         batch_p = np.concatenate([batch, np.repeat(batch[-1:], pad)]) \
             if pad else batch
-        state, k, work = _multi_bfs_fused(
+        state, k, work, plog = _multi_bfs_fused(
             tiled, jnp.asarray(batch_p), sr_name=semiring, slimwork=slimwork,
-            max_iters=max_iters, log_work=log_work, backend=backend)
+            max_iters=max_iters, log_work=log_work, backend=backend,
+            direction=direction)
         d = np.asarray(state["d"]).T          # [B, n]
         d_out[start:start + batch.size] = d[: batch.size]
         if need_parents:
@@ -185,7 +234,9 @@ def multi_source_bfs(tiled, roots: Sequence[int],
         iters.append(int(k))
         if log_work:
             work_rows.append(np.asarray(work))
+            plog_rows.append(np.asarray(plog))
     return MultiBFSResult(
         distances=d_out, parents=p_out, iterations=np.asarray(iters, np.int32),
         roots=roots,
-        work_log=np.stack(work_rows) if log_work else None)
+        work_log=np.stack(work_rows) if log_work else None,
+        pull_cols_log=np.stack(plog_rows) if log_work else None)

@@ -1,4 +1,9 @@
-"""Semiring SpMV/SpMM over the tiled SlimSell layout — the backend engine.
+"""Semiring SpMV/SpMM/pull over the tiled SlimSell layout — the backend engine.
+
+Three primitives: ``slimsell_spmv`` (top-down/push frontier expansion),
+``slimsell_pull`` (bottom-up sweep over not-final rows, the direction-
+optimizing counterpart), and ``slimsell_spmm`` (matrix RHS: GNN aggregation
+and batched multi-source BFS).
 
 Two interchangeable backends compute the same function:
 
@@ -70,6 +75,27 @@ def reduce_tiles(sr: Semiring, contrib: Array) -> Array:
     return contrib.sum(axis=-1)
 
 
+def _combine_and_scatter(sr: Semiring, tiled, tile_red: Array,
+                         tile_mask: Optional[Array]) -> Array:
+    """Shared sweep tail: SlimWork mask, combine SlimChunk tiles of the same
+    chunk, scatter chunk rows back to original vertex ids (-1 pad -> bucket n).
+
+    ``tile_red`` is [T, C] (SpMV/pull) or [T, C, d] (SpMM).
+    """
+    if tile_mask is not None:
+        mask = tile_mask.reshape((-1,) + (1,) * (tile_red.ndim - 1))
+        tile_red = jnp.where(mask, tile_red,
+                             jnp.asarray(sr.zero, tile_red.dtype))
+    y_blocks = sr.segment_reduce(tile_red, tiled.row_block,
+                                 num_segments=tiled.n_chunks)  # [n_chunks, C(, d)]
+    rv = tiled.row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, tiled.n, rv)
+    flat = y_blocks.reshape(-1) if y_blocks.ndim == 2 \
+        else y_blocks.reshape(-1, y_blocks.shape[-1])
+    y = sr.segment_reduce(flat, ids, num_segments=tiled.n + 1)
+    return y[: tiled.n]
+
+
 def slimsell_spmv(sr: Semiring, tiled, x: Array, *,
                   edge_weight: Optional[Callable] = None,
                   tile_mask: Optional[Array] = None,
@@ -95,17 +121,33 @@ def slimsell_spmv(sr: Semiring, tiled, x: Array, *,
         rv_tile = rv_tile[:, :, None]
     contrib = tile_contributions(sr, cols, x, rv_tile, edge_weight)
     tile_red = reduce_tiles(sr, contrib)  # [T, C]
-    if tile_mask is not None:
-        tile_red = jnp.where(tile_mask[:, None], tile_red,
-                             jnp.asarray(sr.zero, tile_red.dtype))
-    # combine SlimChunk tiles of the same chunk
-    y_blocks = sr.segment_reduce(tile_red, tiled.row_block,
-                                 num_segments=tiled.n_chunks)  # [n_chunks, C]
-    # scatter chunk rows back to original vertex ids (-1 padding -> bucket n)
-    rv = tiled.row_vertex.reshape(-1)
-    ids = jnp.where(rv < 0, tiled.n, rv)
-    y = sr.segment_reduce(y_blocks.reshape(-1), ids, num_segments=tiled.n + 1)
-    return y[: tiled.n]
+    return _combine_and_scatter(sr, tiled, tile_red, tile_mask)
+
+
+def slimsell_pull(sr: Semiring, tiled, x: Array, *, row_mask: Array,
+                  tile_mask: Optional[Array] = None,
+                  backend: Optional[str] = None) -> Array:
+    """Bottom-up (pull) sweep: y[v] = ⊕_u A[v,u] ⊗ x[u] for rows with
+    ``row_mask[v]`` True; masked-out rows return the semiring ``zero``.
+
+    The algebraic counterpart of Beamer's bottom-up BFS step: work is keyed
+    on the *not-yet-finalized* rows (row_mask) rather than on the frontier.
+    The jnp path computes the full reduction and is the oracle; the pallas
+    path (kernels/slimsell_pull.py) additionally early-exits per chunk row
+    once a hit is accumulated — exact for level-homogeneous BFS frontiers
+    (every finite/nonzero payload maps to the same distance), and a valid
+    (possibly different) parent choice under sel-max.
+    """
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels import ops  # deferred: kernels import this module
+        return ops.pull(sr.name, tiled, x, row_mask, tile_mask=tile_mask)
+    contrib = tile_contributions(sr, tiled.cols, x)
+    tile_red = reduce_tiles(sr, contrib)                       # [T, C]
+    rv_tile = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)  # [T, C]
+    rv_safe = jnp.where(rv_tile < 0, 0, rv_tile)
+    live = jnp.where(rv_tile < 0, False, jnp.take(row_mask, rv_safe, axis=0))
+    tile_red = jnp.where(live, tile_red, jnp.asarray(sr.zero, tile_red.dtype))
+    return _combine_and_scatter(sr, tiled, tile_red, tile_mask)
 
 
 def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
@@ -141,12 +183,4 @@ def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
         tile_red = contrib.max(axis=2)
     else:
         tile_red = contrib.sum(axis=2)  # [T, C, d]
-    if tile_mask is not None:
-        tile_red = jnp.where(tile_mask[:, None, None], tile_red,
-                             jnp.asarray(sr.zero, tile_red.dtype))
-    y_blocks = sr.segment_reduce(tile_red, tiled.row_block, num_segments=tiled.n_chunks)
-    rv = tiled.row_vertex.reshape(-1)
-    ids = jnp.where(rv < 0, tiled.n, rv)
-    y = sr.segment_reduce(y_blocks.reshape(-1, y_blocks.shape[-1]), ids,
-                          num_segments=tiled.n + 1)
-    return y[: tiled.n]
+    return _combine_and_scatter(sr, tiled, tile_red, tile_mask)

@@ -72,6 +72,7 @@ class Graph500Report:
     m: int
     semiring: str
     backend: str
+    direction: str
     batch_size: int
     roots: np.ndarray
     teps: np.ndarray           # per-root TEPS (batch time amortized)
@@ -85,7 +86,8 @@ class Graph500Report:
     def summary(self) -> str:
         return (f"graph500 scale={self.scale} ef={self.edge_factor} "
                 f"n={self.n} m={self.m} semiring={self.semiring} "
-                f"backend={self.backend} batch={self.batch_size} "
+                f"backend={self.backend} direction={self.direction} "
+                f"batch={self.batch_size} "
                 f"roots={len(self.roots)} validated={self.validated} "
                 f"hmean_TEPS={self.harmonic_mean_teps:.3e} "
                 f"max_TEPS={self.teps.max():.3e}")
@@ -93,7 +95,8 @@ class Graph500Report:
 
 def run_graph500(*, scale: int = 10, edge_factor: int = 16, n_roots: int = 64,
                  batch_size: int = 16, semiring: str = "tropical",
-                 backend: Optional[str] = None, C: int = 8, L: int = 128,
+                 backend: Optional[str] = None, direction: str = "push",
+                 C: int = 8, L: int = 128,
                  seed: int = 1, validate: bool = True,
                  need_parents: bool = True,
                  csr: Optional[CSRGraph] = None,
@@ -119,7 +122,8 @@ def run_graph500(*, scale: int = 10, edge_factor: int = 16, n_roots: int = 64,
         t0 = time.perf_counter()
         res = multi_source_bfs(tiled, batch, semiring,
                                need_parents=need_parents,
-                               batch_size=batch.size, backend=backend)
+                               batch_size=batch.size, backend=backend,
+                               direction=direction)
         dt = time.perf_counter() - t0
         batch_seconds.append(dt)
         per_root_dt = dt / batch.size
@@ -134,6 +138,6 @@ def run_graph500(*, scale: int = 10, edge_factor: int = 16, n_roots: int = 64,
                 validated += 1
     return Graph500Report(
         scale=scale, edge_factor=edge_factor, n=csr.n, m=csr.m_undirected,
-        semiring=semiring, backend=backend or "jnp", batch_size=batch_size,
-        roots=roots, teps=teps,
+        semiring=semiring, backend=backend or "jnp", direction=direction,
+        batch_size=batch_size, roots=roots, teps=teps,
         batch_seconds=np.asarray(batch_seconds), validated=validated)

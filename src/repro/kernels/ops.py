@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core import semiring as sm
 from .slimsell_spmv import slimsell_spmv_pallas, semiring_ops
 from .slimsell_spmm import slimsell_spmm_pallas
+from .slimsell_pull import slimsell_pull_pallas
 from .embedding_bag import embedding_bag_pallas
 
 
@@ -36,6 +37,32 @@ def compact_tile_ids(tile_mask):
     return ids, n_active.reshape(1)
 
 
+def _scatter_blocks(sr, tiled, y_blocks, tile_mask):
+    """Shared kernel epilogue: zero never-visited chunk blocks, scatter to
+    vertex space.
+
+    Chunk blocks the grid never visited hold garbage; a chunk is visited iff
+    some tile maps to it (always true for the full tile set, not for hostloop
+    subsets) AND, under SlimWork, some such tile is active. ``y_blocks`` is
+    [n_chunks, C] (spmv/pull) or [n_chunks, C, d] (spmm).
+    """
+    covered = jax.ops.segment_max(jnp.ones_like(tiled.row_block),
+                                  tiled.row_block,
+                                  num_segments=tiled.n_chunks) > 0
+    if tile_mask is not None:
+        covered &= jax.ops.segment_max(tile_mask.astype(jnp.int32),
+                                       tiled.row_block,
+                                       num_segments=tiled.n_chunks) > 0
+    cov = covered.reshape((-1,) + (1,) * (y_blocks.ndim - 1))
+    y_blocks = jnp.where(cov, y_blocks, jnp.asarray(sr.zero, y_blocks.dtype))
+    rv = tiled.row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, tiled.n, rv)
+    flat = y_blocks.reshape(-1) if y_blocks.ndim == 2 \
+        else y_blocks.reshape(-1, y_blocks.shape[-1])
+    y = sr.segment_reduce(flat, ids, num_segments=tiled.n + 1)
+    return y[: tiled.n]
+
+
 @functools.partial(jax.jit, static_argnames=("sr_name", "interpret"))
 def spmv(sr_name: str, tiled, x, tile_mask=None, interpret=None):
     """SlimSell SpMV via the Pallas kernel; returns y [n] in vertex space."""
@@ -51,23 +78,34 @@ def spmv(sr_name: str, tiled, x, tile_mask=None, interpret=None):
     y_blocks = slimsell_spmv_pallas(
         tiled.cols, tile_ids, tiled.row_block, n_active, x,
         sr_name=sr_name, n_chunks=tiled.n_chunks, interpret=interpret)
-    y_blocks = y_blocks[: tiled.n_chunks]
-    # chunk blocks never visited by the grid hold garbage; mask them. A chunk
-    # is visited iff some tile maps to it (always true for the full tile set,
-    # not for hostloop subsets) AND, under SlimWork, some such tile is active.
-    covered = jax.ops.segment_max(jnp.ones_like(tiled.row_block),
-                                  tiled.row_block,
-                                  num_segments=tiled.n_chunks) > 0
-    if tile_mask is not None:
-        covered &= jax.ops.segment_max(tile_mask.astype(jnp.int32),
-                                       tiled.row_block,
-                                       num_segments=tiled.n_chunks) > 0
-    y_blocks = jnp.where(covered[:, None],
-                         y_blocks, jnp.asarray(sr.zero, y_blocks.dtype))
-    rv = tiled.row_vertex.reshape(-1)
-    ids = jnp.where(rv < 0, tiled.n, rv)
-    y = sr.segment_reduce(y_blocks.reshape(-1), ids, num_segments=tiled.n + 1)
-    return y[: tiled.n]
+    return _scatter_blocks(sr, tiled, y_blocks[: tiled.n_chunks], tile_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("sr_name", "interpret"))
+def pull(sr_name: str, tiled, x, row_mask, tile_mask=None, interpret=None):
+    """Bottom-up SlimSell sweep via the Pallas pull kernel; y [n] vertex space.
+
+    row_mask: bool[n] — rows still needing a value (not-final); masked-out
+    rows return the semiring zero. The kernel early-exits per chunk row (see
+    slimsell_pull.py for the exactness contract vs. the jnp oracle).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    sr = sm.get(sr_name)
+    T = tiled.cols.shape[0]
+    if tile_mask is None:
+        tile_ids = jnp.arange(T, dtype=jnp.int32)
+        n_active = jnp.asarray([T], jnp.int32)
+    else:
+        tile_ids, n_active = compact_tile_ids(tile_mask)
+    x = x.astype(sr.dtype)
+    # not-final bits in chunk-row space (padding rows are never pending)
+    rv = tiled.row_vertex                                  # [n_chunks, C]
+    safe = jnp.where(rv < 0, 0, rv)
+    nf = jnp.where(rv < 0, False, jnp.take(row_mask, safe, axis=0))
+    y_blocks = slimsell_pull_pallas(
+        tiled.cols, tile_ids, tiled.row_block, n_active, nf, x,
+        sr_name=sr_name, n_chunks=tiled.n_chunks, interpret=interpret)
+    return _scatter_blocks(sr, tiled, y_blocks[: tiled.n_chunks], tile_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("sr_name", "weighted", "interpret"))
@@ -89,22 +127,7 @@ def spmm(sr_name: str, tiled, X, deg=None, weighted=False, tile_mask=None,
         deg if deg is not None else jnp.ones((tiled.n,), jnp.float32),
         sr_name=sr_name, n_chunks=tiled.n_chunks, weighted=weighted,
         interpret=interpret)
-    y_blocks = y_blocks[: tiled.n_chunks]                 # [n_chunks, C, d]
-    # mask chunk blocks the grid never visited (see spmv above)
-    covered = jax.ops.segment_max(jnp.ones_like(tiled.row_block),
-                                  tiled.row_block,
-                                  num_segments=tiled.n_chunks) > 0
-    if tile_mask is not None:
-        covered &= jax.ops.segment_max(tile_mask.astype(jnp.int32),
-                                       tiled.row_block,
-                                       num_segments=tiled.n_chunks) > 0
-    y_blocks = jnp.where(covered[:, None, None],
-                         y_blocks, jnp.asarray(sr.zero, y_blocks.dtype))
-    rv = tiled.row_vertex.reshape(-1)
-    ids = jnp.where(rv < 0, tiled.n, rv)
-    y = sr.segment_reduce(y_blocks.reshape(-1, y_blocks.shape[-1]), ids,
-                          num_segments=tiled.n + 1)
-    return y[: tiled.n]
+    return _scatter_blocks(sr, tiled, y_blocks[: tiled.n_chunks], tile_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "interpret"))

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: SlimSell bottom-up (pull) semiring sweep.
+
+The direction-optimizing counterpart of ``slimsell_spmv.py`` (Beamer et al.,
+paper §V discussion): instead of expanding the frontier outward, every *not
+yet finalized* chunk row scans its own neighbor slots for a frontier member.
+Two things distinguish it from the push kernel:
+
+* a per-chunk-row ``nf`` (not-final) bitmap rides along with the output block;
+  finalized rows are never recomputed — their slot stays at the semiring zero;
+* **per-row early exit**: SlimChunk tiles of one chunk are visited in grid
+  order and accumulate into the same output block, so before doing any work
+  the kernel checks which rows are still *pending* (not final AND no hit
+  accumulated from an earlier tile). Once every row of the chunk has found a
+  parent, the remaining tiles of that chunk skip their gather+reduce entirely
+  (``pl.when``). This is the algebraic analogue of bottom-up BFS's "stop
+  scanning once a parent is found" — at tile rather than scalar granularity,
+  matching the paper's vectorized framing.
+
+Exactness contract: the early exit returns *a* semiring contribution per
+pending row, not necessarily the full reduction. For BFS frontiers this is
+exact-for-distances because frontier payloads are level-homogeneous (every
+finite/nonzero input maps to the same distance); for sel-max it returns a
+valid (possibly different) parent. The jnp path in ``core.spmv.slimsell_pull``
+computes the full reduction and is the oracle for that contract.
+
+SlimWork composes unchanged: the wrapper compacts active tile ids into
+``tile_ids`` (scalar-prefetch grid indirection; inactive tail repeats the
+last active id, so skipped steps issue no DMA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .slimsell_spmv import _reduce_l, semiring_ops
+
+
+def _pull_kernel(tile_ids_ref, row_block_ref, n_active_ref,
+                 cols_ref, nf_ref, x_ref, out_ref, *,
+                 sr_name: str, chunk_blk: int):
+    add, contrib_fn, zero = semiring_ops(sr_name)
+    t = pl.program_id(0)
+    tid = tile_ids_ref[t]
+    chunk = row_block_ref[tid]
+    blk = chunk // chunk_blk
+
+    prev_tid = tile_ids_ref[jnp.maximum(t - 1, 0)]
+    prev_blk = row_block_ref[prev_tid] // chunk_blk
+    first_visit = (t == 0) | (blk != prev_blk)
+
+    @pl.when(first_visit)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, zero)
+
+    row = chunk % chunk_blk
+    cur = pl.load(out_ref, (pl.ds(row, 1), slice(None)))      # [1, C]
+    nf = pl.load(nf_ref, (pl.ds(row, 1), slice(None)))        # [1, C] int32
+    # pending == still needs a parent: not final and no hit from earlier tiles
+    pending = (nf > 0) & (cur == jnp.asarray(zero, cur.dtype))
+
+    @pl.when((t < n_active_ref[0]) & jnp.any(pending))
+    def _work():
+        cols = cols_ref[0]                                    # [C, L]
+        pad = cols < 0
+        safe = jnp.where(pad, 0, cols)
+        xv = x_ref[...]                                       # frontier, VMEM
+        g = jnp.take(xv, safe.reshape(-1), axis=0).reshape(cols.shape)
+        contrib = jnp.where(pad, jnp.asarray(zero, xv.dtype), contrib_fn(g))
+        red = _reduce_l(sr_name, contrib)                     # [C]
+        new = jnp.where(pending[0], add(cur[0], red), cur[0])
+        pl.store(out_ref, (pl.ds(row, 1), slice(None)), new[None])
+
+
+@functools.partial(jax.jit, static_argnames=("sr_name", "chunk_blk", "n_chunks",
+                                             "interpret"))
+def slimsell_pull_pallas(cols, tile_ids, row_block, n_active, nf, x, *,
+                         sr_name: str, n_chunks: int, chunk_blk: int = 8,
+                         interpret: bool = True):
+    """Tile-level pull sweep.  Returns y_blocks [n_chunks_pad, C] (chunk-row space).
+
+    cols:      int32[T, C, L]
+    tile_ids:  int32[T]  grid order (SlimWork compaction; tail repeats last)
+    row_block: int32[T]  owning chunk per tile
+    n_active:  int32[1]  number of live grid steps
+    nf:        int32[n_chunks, C]  1 where the row still needs a value
+    x:         frontier [n_pad]
+    """
+    T, C, L = cols.shape
+    n_blk = -(-n_chunks // chunk_blk)
+    nf = jnp.pad(nf.astype(jnp.int32),
+                 ((0, n_blk * chunk_blk - n_chunks), (0, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, C, L), lambda t, tids, rb, na: (tids[t], 0, 0)),
+            pl.BlockSpec((chunk_blk, C),
+                         lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
+            pl.BlockSpec(x.shape, lambda t, tids, rb, na: (0,)),
+        ],
+        out_specs=pl.BlockSpec((chunk_blk, C),
+                               lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
+    )
+    kernel = functools.partial(_pull_kernel, sr_name=sr_name, chunk_blk=chunk_blk)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blk * chunk_blk, C), x.dtype),
+        interpret=interpret,
+    )(tile_ids, row_block, n_active, cols, nf, x)

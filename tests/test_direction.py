@@ -1,0 +1,229 @@
+"""Direction-optimizing BFS: push / pull / auto equivalence and heuristics.
+
+Covers the tentpole contract: all three directions produce oracle-identical
+distances and valid parents on every semiring and both backends; the pull
+primitive agrees across backends under its exactness contract; ``auto``
+actually switches direction on an RMAT graph, prefers pull on a star and
+stays push on a path; and the batched engine carries per-column direction
+state.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import direction as dm
+from repro.core import semiring as sm
+from repro.core.bfs import bfs
+from repro.core.bfs_traditional import bfs_traditional
+from repro.core.formats import build_csr, build_slimsell
+from repro.core.multi_bfs import multi_source_bfs
+from repro.core.spmv import slimsell_pull
+from repro.graph500 import sample_roots
+from repro.graphs.generators import kronecker, star
+
+SEMIRINGS = ["tropical", "real", "boolean", "selmax"]
+DIRECTIONS = ["push", "pull", "auto"]
+
+
+def path_graph(n: int):
+    """Chain 0-1-...-n-1: maximal diameter, every frontier has size 1 —
+    the push-favoring extreme."""
+    edges = np.stack([np.arange(n - 1), np.arange(1, n)], axis=1)
+    return build_csr(edges, n)
+
+
+def _check(csr, res, d_ref, check_parents=True):
+    assert np.array_equal(res.distances, d_ref)
+    if not check_parents:
+        return
+    reach = res.distances > 0
+    pv = res.parents[reach]
+    assert (pv >= 0).all()
+    assert (res.distances[pv] == res.distances[reach] - 1).all()
+    for v in np.nonzero(reach)[0][:40]:
+        assert res.parents[v] in csr.neighbors(v)
+
+
+# ------------------------------------------------------------- equivalence
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("direction", DIRECTIONS)
+def test_directions_match_oracle_jnp(semiring, direction):
+    csr = kronecker(9, 8, seed=1)
+    tiled = build_slimsell(csr, C=8, L=32).to_jax()
+    root = int(np.argmax(csr.deg))
+    d_ref, _ = bfs_traditional(csr, root)
+    for mode in ("fused", "hostloop"):
+        res = bfs(tiled, root, semiring, mode=mode, direction=direction,
+                  need_parents=True)
+        _check(csr, res, d_ref)
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("direction", DIRECTIONS)
+def test_directions_match_oracle_pallas(semiring, direction):
+    csr = kronecker(8, 8, seed=1)
+    tiled = build_slimsell(csr, C=8, L=32).to_jax()
+    root = int(np.argmax(csr.deg))
+    d_ref, _ = bfs_traditional(csr, root)
+    res = bfs(tiled, root, semiring, direction=direction, backend="pallas",
+              need_parents=True)
+    _check(csr, res, d_ref)
+
+
+def test_unknown_direction_rejected():
+    csr = kronecker(6, 4, seed=0)
+    tiled = build_slimsell(csr, C=4, L=8).to_jax()
+    with pytest.raises(ValueError):
+        bfs(tiled, 0, "tropical", direction="sideways")
+    with pytest.raises(ValueError):
+        multi_source_bfs(tiled, [0], "tropical", direction="sideways")
+
+
+# ------------------------------------------------- structured extreme graphs
+
+
+@pytest.mark.parametrize("direction", DIRECTIONS)
+def test_star_graph_all_directions(direction):
+    """Hub-and-spokes: after the hub expands, |frontier| ~ n — pull-favoring."""
+    csr = star(128)
+    tiled = build_slimsell(csr, C=8, L=16).to_jax()
+    d_ref, _ = bfs_traditional(csr, 5)  # leaf root: leaf -> hub -> leaves
+    for semiring in ("tropical", "selmax"):
+        res = bfs(tiled, 5, semiring, direction=direction, need_parents=True,
+                  log_work=True)
+        _check(csr, res, d_ref)
+
+
+def test_star_graph_auto_prefers_pull():
+    csr = star(128)
+    tiled = build_slimsell(csr, C=8, L=16).to_jax()
+    res = bfs(tiled, 5, "tropical", direction="auto", log_work=True)
+    # iteration 2 expands the hub (m_frontier == n-1 > m_unexplored/alpha)
+    assert dm.PULL in res.directions
+
+
+@pytest.mark.parametrize("direction", DIRECTIONS)
+def test_path_graph_all_directions(direction):
+    csr = path_graph(96)
+    tiled = build_slimsell(csr, C=4, L=8).to_jax()
+    d_ref, _ = bfs_traditional(csr, 0)
+    res = bfs(tiled, 0, "tropical", direction=direction, need_parents=True,
+              log_work=True)
+    _check(csr, res, d_ref)
+    assert res.iterations >= 95  # diameter + terminal no-change sweep
+
+
+def test_path_graph_auto_favors_push():
+    """Size-1 frontiers keep m_frontier tiny: the traversal is dominated by
+    top-down iterations (pull may appear only in the tail, where the
+    unexplored-edge mass collapses below alpha * m_frontier)."""
+    csr = path_graph(96)
+    tiled = build_slimsell(csr, C=4, L=8).to_jax()
+    res = bfs(tiled, 0, "tropical", direction="auto", log_work=True)
+    assert res.directions[0] == dm.PUSH
+    assert (res.directions == dm.PUSH).mean() > 0.8
+
+
+@pytest.mark.parametrize("mode", ["fused", "hostloop"])
+def test_auto_switches_on_rmat(mode):
+    """The acceptance check: auto must actually change direction at least
+    once on a low-diameter Graph500 Kronecker graph."""
+    csr = kronecker(9, 16, seed=5)
+    tiled = build_slimsell(csr, C=8, L=32).to_jax()
+    root = int(np.argmax(csr.deg))
+    res = bfs(tiled, root, "tropical", mode=mode, direction="auto",
+              log_work=True)
+    assert dm.PUSH in res.directions and dm.PULL in res.directions
+    assert np.sum(np.diff(res.directions) != 0) >= 1
+
+
+def test_auto_does_least_tile_work():
+    """On RMAT the hybrid should not exceed either pure schedule's total."""
+    csr = kronecker(9, 16, seed=5)
+    tiled = build_slimsell(csr, C=8, L=32).to_jax()
+    root = int(np.argmax(csr.deg))
+    work = {d: bfs(tiled, root, "tropical", mode="hostloop",
+                   direction=d).work_log.sum() for d in DIRECTIONS}
+    assert work["auto"] <= min(work["push"], work["pull"])
+
+
+# ------------------------------------------------------------ pull primitive
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+def test_pull_primitive_backends_agree(semiring, rng):
+    """jnp full reduction vs pallas early-exit under the exactness contract:
+    bit-equal for the idempotent/homogeneous cases, hit-equivalent (and a
+    valid parent) for real/selmax."""
+    csr = kronecker(8, 8, seed=4)
+    tiled = build_slimsell(csr, C=8, L=16).to_jax()
+    n = csr.n
+    bits = rng.random(n) < 0.2
+    if semiring == "tropical":  # level-homogeneous frontier at distance 3
+        x = jnp.where(jnp.asarray(bits), 3.0, jnp.inf)
+    elif semiring == "boolean":
+        x = jnp.asarray(bits, jnp.int32)
+    elif semiring == "real":
+        x = jnp.asarray(bits, jnp.float32)
+    else:
+        x = jnp.asarray(bits * (np.arange(n) + 1.0), jnp.float32)
+    row_mask = jnp.asarray(rng.random(n) < 0.6)
+    tm = jnp.asarray(rng.random(tiled.n_tiles) > 0.3)
+    sr = sm.get(semiring)
+    yj = np.asarray(slimsell_pull(sr, tiled, x, row_mask=row_mask,
+                                  tile_mask=tm, backend="jnp"), np.float32)
+    yp = np.asarray(slimsell_pull(sr, tiled, x, row_mask=row_mask,
+                                  tile_mask=tm, backend="pallas"), np.float32)
+    zero = np.float32(sr.zero)
+    rm = np.asarray(row_mask)
+    assert (yj[~rm] == zero).all() and (yp[~rm] == zero).all()
+    if semiring in ("tropical", "boolean"):
+        np.testing.assert_array_equal(yj, yp)
+    else:
+        np.testing.assert_array_equal(yj > 0, yp > 0)
+        if semiring == "selmax":
+            for v in np.nonzero(yp > 0)[0][:40]:
+                u = int(yp[v]) - 1
+                assert u in csr.neighbors(v) and bits[u]
+
+
+# --------------------------------------------------------------- multi-source
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("direction", DIRECTIONS)
+def test_multisource_directions_match(semiring, direction):
+    csr = kronecker(8, 8, seed=1)
+    tiled = build_slimsell(csr, C=8, L=16).to_jax()
+    roots = sample_roots(csr, 6, seed=0)
+    refs = np.stack([bfs_traditional(csr, int(r))[0] for r in roots])
+    res = multi_source_bfs(tiled, roots, semiring, direction=direction,
+                           need_parents=True)
+    assert np.array_equal(res.distances, refs)
+
+
+def test_multisource_per_column_direction_state():
+    """auto must mix directions inside one batch (per-column state), not
+    flip the whole batch at once."""
+    csr = kronecker(8, 8, seed=1)
+    tiled = build_slimsell(csr, C=8, L=16).to_jax()
+    roots = sample_roots(csr, 6, seed=0)
+    res = multi_source_bfs(tiled, roots, "tropical", direction="auto",
+                           log_work=True)
+    B = roots.size
+    plog = res.pull_cols_log[0][: int(res.iterations[0])]
+    assert plog.max() > 0                      # someone pulled
+    assert ((plog > 0) & (plog < B)).any()     # ...but not everyone at once
+
+
+def test_multisource_auto_pallas_backend():
+    csr = kronecker(8, 8, seed=1)
+    tiled = build_slimsell(csr, C=8, L=16).to_jax()
+    roots = sample_roots(csr, 4, seed=0)
+    refs = np.stack([bfs_traditional(csr, int(r))[0] for r in roots])
+    res = multi_source_bfs(tiled, roots, "tropical", direction="auto",
+                           backend="pallas")
+    assert np.array_equal(res.distances, refs)
