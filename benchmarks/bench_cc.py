@@ -1,0 +1,50 @@
+"""Connected components: sel-max label propagation vs boolean BFS peeling.
+
+Label propagation pays O(component diameter) full-ish sweeps but handles any
+number of components in one fixpoint loop; boolean peeling pays one BFS per
+component but each BFS is direction-optimized and SlimWork-skipped. The
+crossover is the number of components — measured here on a connected-ish
+RMAT (few components, peeling should win or tie) and a sparse Erdős–Rényi
+with many small components (label prop should win).
+
+Schemes recorded: ``cc/<graph>/<semiring>`` with a TEPS-equivalent
+(undirected edges / wall time — edges are what a sweep traverses), the
+iteration count and the component count. The CI ``bench-smoke`` job runs
+this at scale 10 and fails on NaN/zero TEPS.
+"""
+import numpy as np
+
+from repro.core.cc import cc
+from repro.core.formats import build_slimsell
+from .common import emit, graph, record, time_fn, tiled
+
+GRAPHS = ("kron", "er_sparse")
+
+
+def _inputs(kind: str, scale: int, ef: int):
+    if kind == "er_sparse":
+        # avg degree ~1.5: far below the giant-component threshold sweet
+        # spot, so hundreds of small components + isolated vertices
+        csr = graph("er", scale, 1.5, seed=2)
+        return csr, build_slimsell(csr, C=8, L=128).to_jax()
+    csr = graph("kron", scale, ef, seed=1)
+    return csr, tiled("kron", scale, ef, seed=1)
+
+
+def run(scale: int = 10, ef: int = 16):
+    for kind in GRAPHS:
+        csr, t = _inputs(kind, scale, ef)
+        edges = max(1, csr.m_undirected)
+        ref = cc(t, semiring="selmax")
+        for semiring in ("selmax", "boolean"):
+            us = time_fn(lambda: cc(t, semiring=semiring, mode="hostloop"),
+                         iters=5, warmup=2)
+            res = cc(t, semiring=semiring, mode="hostloop")
+            assert res.n_components == ref.n_components, (kind, semiring)
+            teps = edges / (us * 1e-6)
+            emit(f"cc/{kind}/{semiring}", us,
+                 f"TEPS={teps:.3e};iters={res.iterations};"
+                 f"components={res.n_components}")
+            record(f"cc/{kind}/{semiring}", teps=teps, us_per_cc=us,
+                   iterations=res.iterations, components=res.n_components,
+                   scale=scale, edge_factor=ef)

@@ -1,0 +1,58 @@
+"""Delta-stepping SSSP: engine modes, backends and the delta sweep on a
+weighted Graph500 RMAT.
+
+The headline is the TEPS-equivalent (undirected edges with a reached
+endpoint / wall time per source, the Graph500-SSSP accounting) for the
+default delta on both engines, plus a small delta sweep — ``inf`` is
+Bellman-Ford (fewest sweeps, most work per sweep), a narrow delta approaches
+Dijkstra's settling order (opposite trade) — so the trajectory catches both
+a regression in the sweep engine and a drift in the bucket heuristic.
+
+Schemes recorded for the JSON trajectory: ``sssp/<mode>`` and
+``sssp/delta/<tag>`` with TEPS, sweep and bucket counts. The CI
+``bench-smoke`` job runs this at scale 10 and fails on NaN/zero TEPS.
+"""
+import numpy as np
+
+from repro.configs.sssp_graph500 import WEIGHT_HIGH, WEIGHT_LOW
+from repro.core.formats import build_slimsell
+from repro.core.sssp import sssp
+from repro.graphs.generators import with_random_weights
+from .common import emit, graph, record, time_fn
+
+MODES = ("fused", "hostloop")
+
+
+def run(scale: int = 10, ef: int = 16):
+    csr = with_random_weights(graph("kron", scale, ef, seed=1),
+                              low=WEIGHT_LOW, high=WEIGHT_HIGH, seed=2)
+    t = build_slimsell(csr, C=8, L=128).to_jax()
+    root = int(np.argmax(csr.deg))
+    ref = sssp(t, root)
+    reached_edges = max(1, int(csr.deg[np.isfinite(ref.distances)].sum()) // 2)
+
+    for mode in MODES:
+        us = time_fn(lambda: sssp(t, root, mode=mode), iters=5, warmup=2)
+        res = sssp(t, root, mode=mode)
+        assert np.allclose(res.distances, ref.distances, rtol=1e-5), mode
+        teps = reached_edges / (us * 1e-6)
+        emit(f"sssp/{mode}", us,
+             f"TEPS={teps:.3e};sweeps={res.sweeps};buckets={res.buckets}")
+        record(f"sssp/{mode}", teps=teps, us_per_sssp=us, sweeps=res.sweeps,
+               buckets=res.buckets, delta=res.delta, scale=scale,
+               edge_factor=ef)
+
+    # delta sweep (fused engine): bucket width trades sweep count against
+    # per-sweep work; the default (mean weight) should sit between extremes
+    for tag, delta in (("narrow", (WEIGHT_HIGH + WEIGHT_LOW) / 8),
+                       ("default", None), ("bellman_ford", np.inf)):
+        us = time_fn(lambda: sssp(t, root, delta=delta), iters=5, warmup=2)
+        res = sssp(t, root, delta=delta)
+        assert np.allclose(res.distances, ref.distances, rtol=1e-5), tag
+        teps = reached_edges / (us * 1e-6)
+        emit(f"sssp/delta/{tag}", us,
+             f"TEPS={teps:.3e};delta={res.delta:.4g};sweeps={res.sweeps};"
+             f"buckets={res.buckets}")
+        record(f"sssp/delta/{tag}", teps=teps, us_per_sssp=us,
+               sweeps=res.sweeps, buckets=res.buckets, delta=res.delta,
+               scale=scale, edge_factor=ef)

@@ -18,9 +18,9 @@ import math
 import sys
 import time
 
-from . import (bench_direction, bench_layout, bench_semirings,
-               bench_slimchunk, bench_slimsell, bench_slimwork, bench_storage,
-               bench_vs_traditional, bench_work)
+from . import (bench_cc, bench_direction, bench_layout, bench_semirings,
+               bench_slimchunk, bench_slimsell, bench_slimwork, bench_sssp,
+               bench_storage, bench_vs_traditional, bench_work)
 from . import common
 
 ALL = {
@@ -33,6 +33,8 @@ ALL = {
     "work": bench_work,                  # Table II, Eq (1)(2)
     "layout": bench_layout,              # beyond-paper: SpMM backends
     "direction": bench_direction,        # beyond-paper: push/pull/auto TEPS
+    "sssp": bench_sssp,                  # beyond-paper: delta-stepping SSSP
+    "cc": bench_cc,                      # beyond-paper: connected components
 }
 
 

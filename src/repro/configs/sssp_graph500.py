@@ -1,0 +1,53 @@
+"""Weighted-workload config: Graph500-SSSP-style shapes for the delta-stepping
+engine (benchmarks/bench_sssp.py and repro.graph500.run_graph500_sssp).
+
+The Graph500 SSSP specification reuses the BFS Kronecker generator and draws
+one uniform weight per undirected edge; we default to the spec's (0, 1]
+range, discretized away from 0 (a 2^-8 floor) so the zero-weight parent
+caveat (see core.sssp) never applies to benchmark runs.
+
+This module is deliberately *not* in ``configs.ARCHS``: the dry-run registry
+enumerates mesh-lowered cells, while SSSP is a single-device workload today
+(the 2D-distributed weighted sweep is on the ROADMAP). It is a plain shape
+table the benchmarks, the Graph500 harness and the tests share.
+"""
+from __future__ import annotations
+
+from repro.core.formats import CSRGraph, SlimSellTiled, build_slimsell
+from repro.graphs.generators import kronecker, with_random_weights
+
+ARCH_ID = "sssp-graph500"
+FAMILY = "sssp"
+
+# Graph500 SSSP spec weights: uniform on (0, 1]; the 2^-8 floor keeps every
+# weight strictly positive (no zero-weight ties in parent validation)
+WEIGHT_LOW = 1.0 / 256.0
+WEIGHT_HIGH = 1.0
+
+SSSP_SHAPES = {
+    # scale, edge_factor, delta (None -> mean edge weight, see core.sssp)
+    "kron_s10": dict(scale=10, edge_factor=16, delta=None),
+    "kron_s14": dict(scale=14, edge_factor=16, delta=None),
+    "kron_s18": dict(scale=18, edge_factor=16, delta=None),
+    # delta extremes at smoke scale: Bellman-Ford (one bucket) and
+    # near-Dijkstra (narrow buckets) bracket the default
+    "kron_s10_bf": dict(scale=10, edge_factor=16, delta=float("inf")),
+    "kron_s10_narrow": dict(scale=10, edge_factor=16, delta=0.05),
+}
+SHAPES = list(SSSP_SHAPES)
+
+
+def build_graph(shape: str, *, seed: int = 1) -> CSRGraph:
+    sh = SSSP_SHAPES[shape]
+    csr = kronecker(sh["scale"], sh["edge_factor"], seed=seed)
+    return with_random_weights(csr, low=WEIGHT_LOW, high=WEIGHT_HIGH,
+                               seed=seed + 1)
+
+
+def build_layout(shape: str, *, C: int = 8, L: int = 128,
+                 seed: int = 1) -> SlimSellTiled:
+    return build_slimsell(build_graph(shape, seed=seed), C=C, L=L).to_jax()
+
+
+def delta_for(shape: str):
+    return SSSP_SHAPES[shape]["delta"]

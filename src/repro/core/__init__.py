@@ -1,3 +1,4 @@
-"""Core: the paper's contribution — SlimSell + semiring BFS-SpMV."""
+"""Core: SlimSell + the semiring sweep engine, and the algorithms built on it
+(BFS, multi-source BFS, delta-stepping SSSP, connected components)."""
 from . import (semiring, formats, spmv, bfs, bfs_traditional, dist_bfs,  # noqa: F401
-               multi_bfs, complexity)
+               multi_bfs, complexity, sssp, cc)

@@ -1,6 +1,28 @@
 """Algebraic BFS over SlimSell (paper §III): four semirings, SlimWork, DP,
 and direction-optimizing (push/pull/auto) traversal.
 
+One BFS iteration is one semiring sweep (``core.spmv``) plus a semiring-
+specific state update. What the sweep's payload carries — and what auxiliary
+state the update therefore needs — is the paper's storage/work tradeoff
+(§III-A, Table I; the full table lives in ``core.semiring``):
+
+  ================ ========================== =============================
+  semiring         payload / frontier         auxiliary state per vertex
+  ================ ========================== =============================
+  ``tropical``     float distances in-band    none (inf == unvisited)
+  ``real``         float path counts          visited bitmap + d
+  ``boolean``      int32 reachability bits    visited bitmap + d
+  ``selmax``       float 1-based parent ids   parent array p + d
+  ================ ========================== =============================
+
+tropical needs no filtering step but pays a float frontier; boolean has the
+narrowest payload but filters through the bitmap each iteration; sel-max is
+the only semiring whose result *is* the BFS tree (no DP post-pass), at the
+cost of two float vectors. The other three get parents from one sel-max DP
+sweep (``dp_transform``). The same engine knobs (``backend``, ``mode``,
+``direction``, ``slimwork``) mean the same thing in ``multi_bfs`` (batched
+SpMM), ``sssp`` (weighted min-plus) and ``cc`` (label propagation).
+
 Two execution modes:
 
 * ``mode="fused"`` — the whole BFS is one ``lax.while_loop`` on device.
@@ -50,6 +72,11 @@ DIRECTIONS = ("push", "pull", "auto")
 
 @dataclasses.dataclass
 class BFSResult:
+    """What ``bfs`` returns, all in original (pre-σ-sort) vertex space.
+
+    ``work_log``/``directions`` are populated when ``log_work=True`` or
+    ``mode="hostloop"``; both are introspection, not part of the answer.
+    """
     distances: np.ndarray          # int32[n]; -1 unreachable
     parents: Optional[np.ndarray]  # int32[n]; parent in BFS tree; root -> root
     iterations: int
@@ -246,19 +273,25 @@ def _bfs_fused(tiled, root, *, sr_name: str, slimwork: bool,
 
 @dataclasses.dataclass
 class _SubsetTiled:
-    """Duck-typed SlimSellTiled view over a compacted tile set."""
+    """Duck-typed SlimSellTiled view over a compacted tile set.
+
+    ``wts`` rides along only for the weighted (SSSP) subset steps; the BFS
+    and CC steps leave it None.
+    """
     cols: Array
     row_block: Array
     row_vertex: Array
     n: int
     n_chunks: int
+    wts: Optional[Array] = None
 
 
 jax.tree_util.register_pytree_node(
     _SubsetTiled,
-    lambda t: ((t.cols, t.row_block, t.row_vertex), (t.n, t.n_chunks)),
+    lambda t: ((t.cols, t.row_block, t.row_vertex, t.wts), (t.n, t.n_chunks)),
     lambda aux, ch: _SubsetTiled(cols=ch[0], row_block=ch[1],
-                                 row_vertex=ch[2], n=aux[0], n_chunks=aux[1]),
+                                 row_vertex=ch[2], n=aux[0], n_chunks=aux[1],
+                                 wts=ch[3]),
 )
 
 
@@ -327,6 +360,29 @@ def _bucket(x: int) -> int:
     return 1 if x <= 1 else 2 ** math.ceil(math.log2(x))
 
 
+def _push_tile_mask_host(active_cols: np.ndarray, inc_src_np: np.ndarray,
+                         inc_tile_np: np.ndarray, n_tiles: int) -> np.ndarray:
+    """Host twin of ``direction.push_tile_mask``: bool[T] of the tiles
+    holding ≥1 active column, via the push index."""
+    tmask = np.zeros(n_tiles, bool)
+    tmask[inc_tile_np[active_cols[inc_src_np]]] = True
+    return tmask
+
+
+def _pad_tile_ids(ids: np.ndarray, n_tiles: int):
+    """SlimWork hostloop compaction: bucket the active-tile count to a power
+    of two (bounds jit retracing) and pad with repeats of the LAST id — the
+    tail then stays on the final output block, so the pallas kernel's
+    first-visit re-init never revisits an earlier block. Shared by the BFS,
+    SSSP and CC hostloop engines; returns (padded ids, bucket size)."""
+    bucket = min(_bucket(ids.size), n_tiles)
+    ids_p = np.zeros(bucket, np.int32)
+    ids_p[: ids.size] = ids
+    if ids.size < bucket:
+        ids_p[ids.size:] = ids[-1]
+    return ids_p, bucket
+
+
 # ----------------------------------------------------------------- public API
 
 
@@ -337,14 +393,22 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
         direction: str = "push") -> BFSResult:
     """Run BFS from ``root``; returns distances (+parents) in vertex space.
 
+    semiring: one of ``semiring.BFS_SEMIRINGS`` — see the module docstring
+    for the storage/work tradeoff between them. All four produce identical
+    distances; ``selmax`` also produces parents in-band, the others derive
+    them with one DP sweep when ``need_parents=True``.
+    mode: "fused" (whole BFS is one ``lax.while_loop`` on device) or
+    "hostloop" (host loop gathering only the active tiles per iteration).
+    slimwork: skip tiles that can no longer change the output (paper §III-C).
     backend: "jnp" (reference) or "pallas" (SlimSell TPU kernel engine).
     direction: "push" (top-down SpMV), "pull" (bottom-up sweep over not-final
     rows), or "auto" (per-iteration Beamer alpha/beta switch — the direction
     trace is returned in ``BFSResult.directions`` when ``log_work`` is set or
     ``mode="hostloop"``).
     """
-    if semiring not in sm.SEMIRINGS:
-        raise KeyError(semiring)
+    if semiring not in sm.BFS_SEMIRINGS:
+        raise KeyError(f"bfs supports {sm.BFS_SEMIRINGS}, got {semiring!r} "
+                       "(minplus is the weighted operator — see core.sssp)")
     if direction not in DIRECTIONS:
         raise ValueError(f"unknown direction {direction!r}; available: {DIRECTIONS}")
     backend = resolve_backend(backend)
@@ -396,8 +460,8 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
                     float(fbits.sum()), n)
             if slimwork:
                 if dcur == dm.PUSH:
-                    tmask = np.zeros(n_tiles, bool)
-                    tmask[inc_tile_np[fbits[inc_src_np]]] = True
+                    tmask = _push_tile_mask_host(fbits, inc_src_np,
+                                                 inc_tile_np, n_tiles)
                 else:
                     chunk_act = (nf[rv_safe_np] & (rv_np >= 0)).any(axis=1)
                     tmask = chunk_act[rb_np]
@@ -406,14 +470,7 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
                     break
                 work_list.append(ids.size)
                 dir_list.append(dcur)
-                bucket = min(_bucket(ids.size), n_tiles)
-                ids_p = np.zeros(bucket, np.int32)
-                ids_p[: ids.size] = ids
-                if ids.size < bucket:
-                    # pad with repeats of the LAST id: the tail then stays on
-                    # the final output block, so the pallas kernel's
-                    # first-visit re-init never revisits an earlier block
-                    ids_p[ids.size:] = ids[-1]
+                ids_p, bucket = _pad_tile_ids(ids, n_tiles)
                 step_fn = _subset_step if dcur == dm.PUSH else _subset_pull_step
                 state, changed = step_fn(
                     semiring, tiled.cols, tiled.row_block, tiled.row_vertex,

@@ -1,0 +1,214 @@
+"""Connected components on the SlimSell engine: sel-max label propagation
+(default) and boolean BFS peeling.
+
+Two algebraic formulations, both pure compositions of the primitives BFS
+already uses:
+
+* ``semiring="selmax"`` — **label propagation to a fixpoint**: every vertex
+  starts with its own 1-based id as label, and one sel-max SpMV per iteration
+  replaces each label with the max over the neighborhood,
+
+      x'[v] = max( x[v],  max_u A[v,u] * x[u] ),
+
+  converging in O(component diameter) sweeps to "every vertex holds the max
+  vertex id of its component". SlimWork applies exactly as in BFS: the
+  frontier is the set of vertices whose label changed last sweep, and only
+  the tiles holding a changed column are touched (push-index mask on jnp,
+  scalar-prefetch grid indirection on pallas). ``mode="fused"`` runs the
+  fixpoint as one ``lax.while_loop``; ``mode="hostloop"`` gathers active
+  tiles on host per sweep.
+
+* ``semiring="boolean"`` — **reachability peeling**: repeatedly run a boolean
+  BFS from the lowest unlabeled vertex and stamp everything it reaches.
+  One BFS per component (the loop over components runs on host), so it wins
+  when components are few and label propagation's diameter bound hurts; it
+  reuses ``core.bfs`` wholesale, including direction optimization.
+
+Both return the same canonical labeling — ``labels[v]`` = max vertex id in
+v's component — so results are directly comparable across semirings,
+backends and modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import direction as dm
+from . import semiring as sm
+from .bfs import (WORK_LOG, _SubsetTiled, _pad_tile_ids,
+                  _push_tile_mask_host, bfs)
+from .spmv import resolve_backend, slimsell_spmv
+
+Array = jax.Array
+
+CC_SEMIRINGS = ("selmax", "boolean")
+
+
+@dataclasses.dataclass
+class CCResult:
+    labels: np.ndarray   # int32[n]; canonical = max vertex id in the component
+    n_components: int
+    iterations: int      # label-prop sweeps, or total BFS iterations (boolean)
+    work_log: Optional[np.ndarray] = None  # active tiles per sweep (selmax)
+
+
+# ------------------------------------------------------- sel-max label prop
+
+
+@partial(jax.jit, static_argnames=("slimwork", "max_iters", "log_work",
+                                   "backend"))
+def _cc_fused(tiled, *, slimwork: bool, max_iters: int, log_work: bool,
+              backend: str):
+    n = tiled.n
+    x0 = jnp.arange(1, n + 1, dtype=jnp.float32)   # 1-based own-id labels
+    changed0 = jnp.ones((n,), bool)
+    work0 = jnp.zeros((WORK_LOG,) if log_work else (1,), jnp.int32)
+    n_tiles_c = jnp.asarray(tiled.cols.shape[0], jnp.int32)
+
+    def cond(carry):
+        _, changed, k, _ = carry
+        return jnp.any(changed) & (k < max_iters)
+
+    def body(carry):
+        x, changed, k, work = carry
+        mask = dm.push_tile_mask(tiled, changed) if slimwork else None
+        y = slimsell_spmv(sm.SELMAX, tiled, x, tile_mask=mask, backend=backend)
+        x_new = jnp.maximum(x, y)
+        if log_work:
+            used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
+            work = work.at[jnp.minimum(k, WORK_LOG - 1)].set(used)
+        return x_new, x_new > x, k + 1, work
+
+    x, _, k, work = jax.lax.while_loop(
+        cond, body, (x0, changed0, jnp.asarray(0, jnp.int32), work0))
+    return x, k, work
+
+
+@partial(jax.jit, static_argnames=("n_active", "n", "n_chunks", "backend"))
+def _cc_subset_step(tiled_cols, tiled_row_block, row_vertex, n: int,
+                    n_chunks: int, tile_ids, n_active: int, x, backend: str):
+    ids = tile_ids[:n_active]
+    sub = _SubsetTiled(
+        cols=jnp.take(tiled_cols, ids, axis=0),
+        row_block=jnp.take(tiled_row_block, ids, axis=0),
+        row_vertex=row_vertex, n=n, n_chunks=n_chunks,
+    )
+    y = slimsell_spmv(sm.SELMAX, sub, x, backend=backend)
+    x_new = jnp.maximum(x, y)
+    return x_new, x_new > x
+
+
+def _cc_labelprop_hostloop(tiled, *, slimwork: bool, max_iters: int,
+                           backend: str):
+    n = tiled.n
+    n_tiles = int(tiled.n_tiles)
+    x = jnp.arange(1, n + 1, dtype=jnp.float32)
+    changed = np.ones(n, bool)
+    inc_src_np = np.asarray(tiled.inc_src)
+    inc_tile_np = np.asarray(tiled.inc_tile)
+    k = 0
+    work_list: list[int] = []
+    while changed.any() and k < max_iters:
+        if slimwork:
+            tmask = _push_tile_mask_host(changed, inc_src_np, inc_tile_np,
+                                         n_tiles)
+            ids = np.nonzero(tmask)[0]
+            if ids.size == 0:
+                break
+            work_list.append(ids.size)
+            ids_p, bucket = _pad_tile_ids(ids, n_tiles)
+            x, changed_dev = _cc_subset_step(
+                tiled.cols, tiled.row_block, tiled.row_vertex, n,
+                tiled.n_chunks, jnp.asarray(ids_p), bucket, x, backend)
+        else:
+            work_list.append(n_tiles)
+            y = slimsell_spmv(sm.SELMAX, tiled, x, backend=backend)
+            x_new = jnp.maximum(x, y)
+            changed_dev = x_new > x
+            x = x_new
+        changed = np.asarray(changed_dev)
+        k += 1
+    return x, k, np.asarray(work_list, np.int32)
+
+
+# --------------------------------------------------------- boolean peeling
+
+
+def _cc_boolean(tiled, *, mode: str, backend: str, slimwork: bool,
+                max_iters: Optional[int]):
+    """One boolean BFS per component, stamping the canonical (max-id) label."""
+    n = tiled.n
+    labels = np.full(n, -1, np.int64)
+    # isolated vertices are their own component — pre-label them instead of
+    # paying one BFS dispatch each (sparse families have hundreds)
+    isolated = np.nonzero(np.asarray(tiled.deg) == 0)[0]
+    labels[isolated] = isolated
+    iters = 0
+    seed = 0
+    while True:
+        unlabeled = np.nonzero(labels < 0)[0]
+        if unlabeled.size == 0:
+            break
+        seed = int(unlabeled[0])
+        res = bfs(tiled, seed, "boolean", mode=mode, backend=backend,
+                  slimwork=slimwork, max_iters=max_iters)
+        comp = res.distances >= 0
+        labels[comp] = int(np.nonzero(comp)[0].max())
+        iters += res.iterations
+    return labels.astype(np.int32), iters
+
+
+# ----------------------------------------------------------------- public API
+
+
+def cc(tiled, *, semiring: str = "selmax", slimwork: bool = True,
+       mode: str = "fused", max_iters: Optional[int] = None,
+       log_work: bool = False, backend: Optional[str] = None) -> CCResult:
+    """Connected components; labels[v] = max vertex id of v's component.
+
+    semiring: "selmax" (label propagation fixpoint, one SpMV per sweep) or
+    "boolean" (one boolean BFS per component — wins on few large components).
+    mode/backend/slimwork: same engine knobs as ``bfs`` / ``sssp``.
+    """
+    if semiring not in CC_SEMIRINGS:
+        raise ValueError(f"unknown cc semiring {semiring!r}; "
+                         f"available: {CC_SEMIRINGS}")
+    backend = resolve_backend(backend)
+    if slimwork and getattr(tiled, "inc_src", None) is None:
+        raise ValueError("SlimWork masks need the push index; rebuild the "
+                         "layout with formats.build_slimsell")
+    n = tiled.n
+    if semiring == "selmax" and n > (1 << 24):
+        # labels ride in the float32 sel-max payload; ids above 2^24 would
+        # round — route huge graphs through the boolean peeling path
+        raise ValueError("selmax label propagation carries vertex ids in "
+                         "float32 (exact up to 2^24); use semiring='boolean' "
+                         f"for n={n}")
+    cap = int(max_iters) if max_iters is not None else n + 1
+
+    if semiring == "boolean":
+        labels, iters = _cc_boolean(tiled, mode=mode, backend=backend,
+                                    slimwork=slimwork, max_iters=max_iters)
+        return CCResult(labels=labels, n_components=len(np.unique(labels)),
+                        iterations=iters)
+
+    if mode == "fused":
+        x, k, work = _cc_fused(tiled, slimwork=slimwork, max_iters=cap,
+                               log_work=log_work, backend=backend)
+        wl = np.asarray(work)[: int(k)] if log_work else None
+    elif mode == "hostloop":
+        x, k, wl = _cc_labelprop_hostloop(tiled, slimwork=slimwork,
+                                          max_iters=cap, backend=backend)
+        if not log_work:
+            wl = None
+    else:
+        raise ValueError(mode)
+    labels = np.asarray(x).astype(np.int64) - 1  # back to 0-based vertex ids
+    return CCResult(labels=labels.astype(np.int32),
+                    n_components=len(np.unique(labels)),
+                    iterations=int(k), work_log=wl)

@@ -32,11 +32,17 @@ import numpy as np
 
 @dataclasses.dataclass
 class CSRGraph:
-    """Host-side CSR of an (optionally undirected) graph. nnz = indices.size."""
+    """Host-side CSR of an (optionally undirected) graph. nnz = indices.size.
+
+    ``weights`` is optional: None for the unweighted BFS workloads (the edge
+    value is the implicit SlimSell 1), float32[nnz] aligned with ``indices``
+    for the weighted workloads (SSSP over the min-plus semiring).
+    """
     n: int
     m_undirected: int          # number of undirected edges (nnz == 2m if undirected)
     indptr: np.ndarray         # int64[n+1]
     indices: np.ndarray        # int32[nnz]
+    weights: np.ndarray | None = None  # float32[nnz] edge weights (optional)
 
     @property
     def nnz(self) -> int:
@@ -49,26 +55,54 @@ class CSRGraph:
     def neighbors(self, v: int) -> np.ndarray:
         return self.indices[self.indptr[v]:self.indptr[v + 1]]
 
+    def edge_weights(self, v: int) -> np.ndarray:
+        if self.weights is None:
+            raise ValueError("graph has no edge weights")
+        return self.weights[self.indptr[v]:self.indptr[v + 1]]
+
 
 def build_csr(edges: np.ndarray, n: int, *, undirected: bool = True,
-              dedup: bool = True) -> CSRGraph:
-    """Build CSR from an edge array [E, 2]; drops self loops, dedups."""
+              dedup: bool = True,
+              weights: np.ndarray | None = None) -> CSRGraph:
+    """Build CSR from an edge array [E, 2]; drops self loops, dedups.
+
+    ``weights`` (optional, [E]) rides along: undirected doubling mirrors the
+    weight onto the reverse edge, and dedup keeps the *minimum* weight of a
+    duplicated (u, v) pair — the convention that preserves shortest-path
+    distances when a multigraph collapses to a simple graph.
+    """
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if weights is not None:
+        weights = np.asarray(weights, dtype=np.float32).reshape(-1)
+        if weights.shape[0] != edges.shape[0]:
+            raise ValueError(f"{weights.shape[0]} weights for "
+                             f"{edges.shape[0]} edges")
+        weights = weights[edges[:, 0] != edges[:, 1]]
     edges = edges[edges[:, 0] != edges[:, 1]]
     if undirected:
         edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+        if weights is not None:
+            weights = np.concatenate([weights, weights])
     if dedup and edges.size:
         key = edges[:, 0] * n + edges[:, 1]
-        key = np.unique(key)
+        if weights is None:
+            key = np.unique(key)
+        else:
+            order = np.argsort(key, kind="stable")
+            key_s, w_s = key[order], weights[order]
+            key, starts = np.unique(key_s, return_index=True)
+            weights = np.minimum.reduceat(w_s, starts)
         edges = np.stack([key // n, key % n], axis=1)
     order = np.lexsort((edges[:, 1], edges[:, 0])) if edges.size else np.array([], np.int64)
     edges = edges[order]
+    if weights is not None:
+        weights = weights[order].astype(np.float32)
     counts = np.bincount(edges[:, 0], minlength=n)
     indptr = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(counts, out=indptr[1:])
     m_u = edges.shape[0] // 2 if undirected else edges.shape[0]
     return CSRGraph(n=n, m_undirected=int(m_u), indptr=indptr,
-                    indices=edges[:, 1].astype(np.int32))
+                    indices=edges[:, 1].astype(np.int32), weights=weights)
 
 
 # ------------------------------------------------------------ Sell-C-σ ordering
@@ -106,6 +140,14 @@ class SlimSellTiled:
     ``cols``. K ≤ nnz pairs; this index is reported separately from the
     paper's Table III storage accounting (it only exists for traversal,
     not for the SpMV operand).
+
+    ``wts`` is the *weighted* SlimSell variant (SlimSell-W): a float32 array
+    of the same [n_tiles, C, L] shape as ``cols`` holding the per-slot edge
+    weight (padding slots hold 0 and are masked by ``cols < 0``). It exists
+    only when the source CSR carries weights; weighted operators (min-plus
+    SSSP) read it, the unweighted BFS semirings never touch it. Storing the
+    weight gives up the paper's no-``val`` saving for exactly the workloads
+    that need a per-edge value — the unweighted layout stays Slim.
     """
     n: int
     m_undirected: int
@@ -121,6 +163,7 @@ class SlimSellTiled:
     deg: np.ndarray         # int64[n]
     inc_src: np.ndarray = None   # int32[K] column vertex of each incidence pair
     inc_tile: np.ndarray = None  # int32[K] tile containing that column
+    wts: np.ndarray = None  # float32[n_tiles, C, L] slot weights (optional)
 
     def to_jax(self):
         import jax.numpy as jnp
@@ -133,23 +176,24 @@ class SlimSellTiled:
             deg=jnp.asarray(self.deg, dtype=jnp.int32),
             inc_src=None if self.inc_src is None else jnp.asarray(self.inc_src),
             inc_tile=None if self.inc_tile is None else jnp.asarray(self.inc_tile),
+            wts=None if self.wts is None else jnp.asarray(self.wts),
         )
 
 
 def _tiled_flatten(t: "SlimSellTiled"):
     children = (t.cols, t.row_block, t.row_vertex, t.cl, t.deg,
-                t.inc_src, t.inc_tile)
+                t.inc_src, t.inc_tile, t.wts)
     aux = (t.n, t.m_undirected, t.C, t.L, t.sigma, t.n_chunks, t.n_tiles)
     return children, aux
 
 
 def _tiled_unflatten(aux, children):
     n, m, C, L, sigma, n_chunks, n_tiles = aux
-    cols, row_block, row_vertex, cl, deg, inc_src, inc_tile = children
+    cols, row_block, row_vertex, cl, deg, inc_src, inc_tile, wts = children
     return SlimSellTiled(n=n, m_undirected=m, C=C, L=L, sigma=sigma,
                          n_chunks=n_chunks, n_tiles=n_tiles, cols=cols,
                          row_block=row_block, row_vertex=row_vertex, cl=cl,
-                         deg=deg, inc_src=inc_src, inc_tile=inc_tile)
+                         deg=deg, inc_src=inc_src, inc_tile=inc_tile, wts=wts)
 
 
 def build_push_index(cols: np.ndarray,
@@ -183,8 +227,13 @@ def build_push_index(cols: np.ndarray,
 
 def build_slimsell(csr: CSRGraph, *, C: int = 8, L: int = 128,
                    sigma: int | None = None) -> SlimSellTiled:
-    """Construct the tiled SlimSell layout from CSR (paper §III-B + §III-D)."""
+    """Construct the tiled SlimSell layout from CSR (paper §III-B + §III-D).
+
+    If ``csr.weights`` is set the layout also carries the per-slot weight
+    array ``wts`` (SlimSell-W) for the weighted min-plus operators.
+    """
     n, deg = csr.n, csr.deg
+    weighted = csr.weights is not None
     sigma = n if sigma is None else max(1, min(int(sigma), n))
     perm = sellcs_order(deg, sigma)
     n_chunks = math.ceil(n / C)
@@ -197,6 +246,7 @@ def build_slimsell(csr: CSRGraph, *, C: int = 8, L: int = 128,
     tiles_per_chunk = np.maximum(1, np.ceil(cl / L).astype(np.int64))
     n_tiles = int(tiles_per_chunk.sum())
     cols = np.full((n_tiles, C, L), -1, dtype=np.int32)
+    wts = np.zeros((n_tiles, C, L), dtype=np.float32) if weighted else None
     row_block = np.zeros(n_tiles, dtype=np.int32)
     row_vertex = np.full((n_chunks, C), -1, dtype=np.int32)
 
@@ -208,6 +258,7 @@ def build_slimsell(csr: CSRGraph, *, C: int = 8, L: int = 128,
         row_block[t0:tile_start[c + 1]] = c
         width = int(tiles_per_chunk[c]) * L
         buf = np.full((C, width), -1, dtype=np.int32)
+        buf_w = np.zeros((C, width), dtype=np.float32) if weighted else None
         for r in range(C):
             row = c * C + r
             if row >= n:
@@ -216,14 +267,18 @@ def build_slimsell(csr: CSRGraph, *, C: int = 8, L: int = 128,
             row_vertex[c, r] = v
             nbr = csr.indices[csr.indptr[v]:csr.indptr[v + 1]]
             buf[r, :nbr.size] = nbr
+            if weighted:
+                buf_w[r, :nbr.size] = csr.weights[csr.indptr[v]:csr.indptr[v + 1]]
         cols[t0:tile_start[c + 1]] = buf.reshape(C, -1, L).transpose(1, 0, 2)
+        if weighted:
+            wts[t0:tile_start[c + 1]] = buf_w.reshape(C, -1, L).transpose(1, 0, 2)
 
     inc_src, inc_tile = build_push_index(cols)
     return SlimSellTiled(
         n=n, m_undirected=csr.m_undirected, C=C, L=L, sigma=sigma,
         n_chunks=n_chunks, n_tiles=n_tiles, cols=cols, row_block=row_block,
         row_vertex=row_vertex, cl=cl, deg=deg,
-        inc_src=inc_src, inc_tile=inc_tile,
+        inc_src=inc_src, inc_tile=inc_tile, wts=wts,
     )
 
 

@@ -49,6 +49,13 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class MultiBFSResult:
+    """What ``multi_source_bfs`` returns: one row per root, vertex space.
+
+    Semantically ``distances[i]`` equals ``bfs(tiled, roots[i]).distances``
+    — batching changes the schedule (one SpMM advances every root), never
+    the answer. The per-semiring storage/work tradeoff is the single-source
+    one (see ``core.bfs`` / ``core.semiring``) scaled by the batch width B.
+    """
     distances: np.ndarray          # int32[n_roots, n]; -1 unreachable
     parents: Optional[np.ndarray]  # int32[n_roots, n]; root -> root
     iterations: np.ndarray         # int32[n_batches] while-loop trips per batch
@@ -183,8 +190,10 @@ def multi_source_bfs(tiled, roots: Sequence[int],
     its own Beamer direction state; ``pull_cols_log`` (under ``log_work``)
     reports how many columns ran pull per iteration.
     """
-    if semiring not in sm.SEMIRINGS:
-        raise KeyError(semiring)
+    if semiring not in sm.BFS_SEMIRINGS:
+        raise KeyError(f"multi_source_bfs supports {sm.BFS_SEMIRINGS}, got "
+                       f"{semiring!r} (minplus is the weighted operator — "
+                       "see core.sssp)")
     if direction not in DIRECTIONS:
         raise ValueError(f"unknown direction {direction!r}; available: {DIRECTIONS}")
     if direction in ("push", "auto") and slimwork \

@@ -1,4 +1,5 @@
-"""Semirings for algebraic BFS (paper §III-A).
+"""Semirings for algebraic graph traversal (paper §III-A): the dispatch table
+shared by BFS, multi-source BFS, delta-stepping SSSP and connected components.
 
 A semiring S = (X, add, mul, zero, one):
   * ``add`` is the reduction op of the SpMV (commutative monoid, identity ``zero``)
@@ -6,20 +7,49 @@ A semiring S = (X, add, mul, zero, one):
   * ``zero`` is also the contribution of SlimSell padding entries (col == -1),
     so that padding is a no-op under ``add``.
 
-The four semirings of the paper:
-  tropical (min, +,  inf, 0)   -> distances in-band
-  real     (+,  *,   0,   1)   -> path counts, frontier via filtering
-  boolean  (|,  &,   0,   1)   -> reachability bits, frontier via filtering
-  selmax   (max, *, -inf, 1)   -> parent ids in-band (0 encodes "unset")
+The four BFS semirings of the paper, plus the weighted min-plus operator that
+generalizes tropical BFS to shortest paths:
+
+============ ============================= ========================= =========================
+semiring     (add, mul, zero, one)         payload carried in-band   extra state / frontier
+============ ============================= ========================= =========================
+``tropical`` (min, +,  inf, 0)             hop distances             none — distances double
+                                                                     as the visited filter
+``real``     (+,  *,   0,   1)             path counts               ``visited`` bitmap,
+                                                                     frontier by filtering
+``boolean``  (|,  &,   0,   1)             reachability bits         ``visited`` bitmap,
+                                                                     frontier by filtering
+``selmax``   (max, *, -inf, 1)             parent ids (1-based)      parent array ``p``
+``minplus``  (min, +,  inf, 0)             weighted distances        reads the stored per-slot
+                                                                     ``wts`` instead of the
+                                                                     implicit edge value 1
+============ ============================= ========================= =========================
+
+Storage/work tradeoff between the semirings (paper §III-A, Table I): tropical
+needs **no auxiliary state** — the distance vector itself encodes
+visited/unvisited (inf) — but pays a float frontier; boolean packs the
+frontier into the narrowest dtype (int32 here, bits on AVX) at the cost of an
+explicit ``visited`` bitmap and a filtering step per iteration; real
+additionally counts shortest paths (Graph500 validation uses this) with the
+same bitmap cost; sel-max is the only one whose *payload* is the parent id,
+so the BFS tree needs no DP post-pass, at the cost of carrying two float
+vectors (``x`` frontier ids, ``p`` parents). ``minplus`` is tropical with the
+implicit 1 replaced by the stored weight: same (min, +) algebra, but the
+operand matrix is SlimSell-W (``cols`` + ``wts``), giving up the no-``val``
+bandwidth saving only where a per-edge value is semantically required.
 
 For sel-max we follow the paper's convention that 0 is the practical additive
 identity (all payloads are 1-based vertex ids, hence > 0), which keeps the
 frontier dtype unsigned-friendly and lets padding contribute 0.
+
+``reduction`` ("min" | "max" | "sum") names the add-monoid's reduction kind
+once, so every consumer — tile reduction, SlimChunk segment combine,
+cross-device collectives — dispatches on it instead of re-listing semiring
+names.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax
@@ -36,46 +66,69 @@ class Semiring:
     one: float   # multiplicative identity == implicit SlimSell edge value
     add: Callable[[Array, Array], Array]
     mul: Callable[[Array, Array], Array]
+    reduction: str = "sum"  # add-monoid kind: "min" | "max" | "sum"
 
     def segment_reduce(self, data: Array, segment_ids: Array, num_segments: int) -> Array:
         """Semiring-add reduction by key (used to combine SlimChunk tiles)."""
-        if self.name == "tropical":
+        if self.reduction == "min":
             return jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
-        if self.name in ("boolean", "selmax"):
+        if self.reduction == "max":
             return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
         return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
 
     def pall(self, x: Array, axis_name: str) -> Array:
         """Cross-device semiring-add (used by the 2D distributed BFS)."""
-        if self.name == "tropical":
+        if self.reduction == "min":
             return jax.lax.pmin(x, axis_name)
-        if self.name in ("boolean", "selmax"):
+        if self.reduction == "max":
             return jax.lax.pmax(x, axis_name)
         return jax.lax.psum(x, axis_name)
+
+    def reduce_last(self, x: Array) -> Array:
+        """Semiring-add over the trailing axis (tile column-slot reduction)."""
+        if self.reduction == "min":
+            return x.min(axis=-1)
+        if self.reduction == "max":
+            return x.max(axis=-1)
+        return x.sum(axis=-1)
 
 
 TROPICAL = Semiring(
     name="tropical", dtype=jnp.float32, zero=jnp.inf, one=0.0,
-    add=jnp.minimum, mul=lambda a, b: a + b,
+    add=jnp.minimum, mul=lambda a, b: a + b, reduction="min",
 )
 
 REAL = Semiring(
     name="real", dtype=jnp.float32, zero=0.0, one=1.0,
-    add=lambda a, b: a + b, mul=lambda a, b: a * b,
+    add=lambda a, b: a + b, mul=lambda a, b: a * b, reduction="sum",
 )
 
 BOOLEAN = Semiring(
     name="boolean", dtype=jnp.int32, zero=0, one=1,
     add=jnp.maximum,            # | on {0,1}
     mul=lambda a, b: a * b,     # & on {0,1}
+    reduction="max",
 )
 
 SELMAX = Semiring(
     name="selmax", dtype=jnp.float32, zero=0.0, one=1.0,
-    add=jnp.maximum, mul=lambda a, b: a * b,
+    add=jnp.maximum, mul=lambda a, b: a * b, reduction="max",
 )
 
-SEMIRINGS = {s.name: s for s in (TROPICAL, REAL, BOOLEAN, SELMAX)}
+# min-plus over *stored* weights (SlimSell-W): algebraically identical to
+# tropical — the distinction lives in the SpMV, which multiplies by the
+# per-slot weight instead of the derived implicit 1. Kept as its own table
+# entry so weighted operators name their semiring explicitly.
+MINPLUS = Semiring(
+    name="minplus", dtype=jnp.float32, zero=jnp.inf, one=0.0,
+    add=jnp.minimum, mul=lambda a, b: a + b, reduction="min",
+)
+
+SEMIRINGS = {s.name: s for s in (TROPICAL, REAL, BOOLEAN, SELMAX, MINPLUS)}
+
+# the BFS engines accept exactly the paper's four; minplus is the SSSP/weighted
+# operator and is rejected by bfs()/multi_source_bfs() (it needs a wts array)
+BFS_SEMIRINGS = ("tropical", "real", "boolean", "selmax")
 
 
 def get(name: str) -> Semiring:

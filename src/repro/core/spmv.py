@@ -1,9 +1,15 @@
 """Semiring SpMV/SpMM/pull over the tiled SlimSell layout — the backend engine.
 
-Three primitives: ``slimsell_spmv`` (top-down/push frontier expansion),
-``slimsell_pull`` (bottom-up sweep over not-final rows, the direction-
-optimizing counterpart), and ``slimsell_spmm`` (matrix RHS: GNN aggregation
-and batched multi-source BFS).
+Three primitives, shared by every algorithm in ``repro.core`` (BFS,
+multi-source BFS, delta-stepping SSSP, connected components):
+
+* ``slimsell_spmv`` — one frontier expansion / relaxation sweep (top-down /
+  push). BFS runs it under a BFS semiring with the implicit edge value 1;
+  SSSP runs it under ``minplus`` with the stored per-slot weights.
+* ``slimsell_pull`` — bottom-up sweep over not-final rows, the direction-
+  optimizing counterpart of ``slimsell_spmv``.
+* ``slimsell_spmm`` — matrix RHS: GNN aggregation and batched multi-source
+  BFS (the frontier becomes an [n, B] matrix).
 
 Two interchangeable backends compute the same function:
 
@@ -12,19 +18,27 @@ Two interchangeable backends compute the same function:
 * ``backend="pallas"`` — the Pallas TPU kernels in ``repro.kernels``
   (``slimsell_spmv.py`` / ``slimsell_spmm.py``) with explicit VMEM tiling and
   SlimWork scalar-prefetch grid indirection; interpret-mode on non-TPU
-  backends, compiled on real TPUs. The BFS engines (``bfs.py``,
-  ``multi_bfs.py``, ``dist_bfs.py``) thread ``backend=`` down to here.
+  backends, compiled on real TPUs. The algorithm engines (``bfs.py``,
+  ``multi_bfs.py``, ``dist_bfs.py``, ``sssp.py``, ``cc.py``) thread
+  ``backend=`` down to here.
 
-``val`` is never materialized: an edge contributes ``mul(one, x[col]) ==
-x[col]`` (``one`` is the multiplicative identity) and a padding slot
-(col == -1) contributes the additive identity ``zero`` (paper §III-B,
-Listing 5's CMP+BLEND pair).
+``val`` is never materialized for the unweighted semirings: an edge
+contributes ``mul(one, x[col]) == x[col]`` (``one`` is the multiplicative
+identity) and a padding slot (col == -1) contributes the additive identity
+``zero`` (paper §III-B, Listing 5's CMP+BLEND pair).
 
-Optionally a per-edge weight can be *derived* (not stored): ``edge_weight(row
-vertex, col vertex) -> w`` keeps the Slim property for weighted operators such
-as GCN's D^-1/2 A D^-1/2 (SlimSell-W, DESIGN.md §2). Derived weights are a
-jnp-path feature; the Pallas SpMM kernel supports the degree-derived GCN
-weight through ``repro.kernels.ops.spmm(weighted=True)`` instead.
+Per-edge weights come in two flavors:
+
+* **stored** (``weights=`` — SlimSell-W): a [T, C, L] float array aligned
+  with ``cols`` (``SlimSellTiled.wts``); the edge contributes
+  ``mul(w, x[col])`` — ``w + x[col]`` under min-plus. Supported on both
+  backends; this is the SSSP operand.
+* **derived** (``edge_weight=`` callable): computed in-register from the
+  (row, col) vertex ids, keeping the Slim no-``val`` property for weights
+  that are functions of vertex state, e.g. GCN's D^-1/2 A D^-1/2. Derived
+  weights are a jnp-path feature; the Pallas SpMM kernel supports the
+  degree-derived GCN weight through ``repro.kernels.ops.spmm(weighted=True)``
+  instead.
 """
 from __future__ import annotations
 
@@ -51,12 +65,21 @@ def resolve_backend(backend: Optional[str]) -> str:
 
 def tile_contributions(sr: Semiring, cols: Array, x: Array,
                        row_vertex_of_tile: Optional[Array] = None,
-                       edge_weight: Optional[Callable] = None) -> Array:
-    """[T, C, L] semiring contributions of each column slot."""
+                       edge_weight: Optional[Callable] = None,
+                       weights: Optional[Array] = None) -> Array:
+    """[T, C, L] semiring contributions of each column slot.
+
+    ``weights`` (stored, [T, C, L]) and ``edge_weight`` (derived, callable)
+    are mutually exclusive; with neither, the edge value is the implicit 1.
+    """
     pad = cols < 0
     safe = jnp.where(pad, 0, cols)
     gathered = jnp.take(x, safe, axis=0)  # [T, C, L]
-    if edge_weight is not None:
+    if weights is not None:
+        if edge_weight is not None:
+            raise ValueError("pass stored weights= or derived edge_weight=, not both")
+        contrib = sr.mul(weights.astype(gathered.dtype), gathered)
+    elif edge_weight is not None:
         w = edge_weight(row_vertex_of_tile, safe)  # [T, C, L]
         contrib = sr.mul(w, gathered)
     else:
@@ -68,11 +91,7 @@ def tile_contributions(sr: Semiring, cols: Array, x: Array,
 
 def reduce_tiles(sr: Semiring, contrib: Array) -> Array:
     """Reduce the L (column-slot) axis with the semiring add. [T,C,L] -> [T,C]."""
-    if sr.name == "tropical":
-        return contrib.min(axis=-1)
-    if sr.name in ("boolean", "selmax"):
-        return contrib.max(axis=-1)
-    return contrib.sum(axis=-1)
+    return sr.reduce_last(contrib)
 
 
 def _combine_and_scatter(sr: Semiring, tiled, tile_red: Array,
@@ -98,6 +117,7 @@ def _combine_and_scatter(sr: Semiring, tiled, tile_red: Array,
 
 def slimsell_spmv(sr: Semiring, tiled, x: Array, *,
                   edge_weight: Optional[Callable] = None,
+                  weights: Optional[Array] = None,
                   tile_mask: Optional[Array] = None,
                   backend: Optional[str] = None) -> Array:
     """y = A (x) over semiring ``sr``; returns y in original vertex space [n].
@@ -105,21 +125,30 @@ def slimsell_spmv(sr: Semiring, tiled, x: Array, *,
     tile_mask: optional bool[T]; masked-out tiles contribute ``zero``
     (SlimWork's skip criterion — a mask on the jnp backend, scalar-prefetch
     grid indirection on the pallas backend).
+    weights: optional stored per-slot weights [T, C, L] (SlimSell-W) — the
+    min-plus SSSP operand; supported on both backends.
     backend: "jnp" (reference) or "pallas" (TPU kernel); None -> default.
     """
+    if sr.name == "minplus" and weights is None:
+        # minplus without stored weights is tropical; requiring weights keeps
+        # the weighted operator from silently degrading to hop counts
+        raise ValueError("the minplus semiring needs stored weights "
+                         "(weights=tiled.wts); for the implicit-1 edge value "
+                         "use the tropical semiring")
     if resolve_backend(backend) == "pallas":
         if edge_weight is not None:
             raise NotImplementedError(
                 "derived edge weights are jnp-only for SpMV; use "
                 "repro.kernels.ops.spmm(weighted=True) for SlimSell-W")
         from repro.kernels import ops  # deferred: kernels import this module
-        return ops.spmv(sr.name, tiled, x, tile_mask=tile_mask)
+        return ops.spmv(sr.name, tiled, x, tile_mask=tile_mask,
+                        weights=weights)
     cols = tiled.cols
     rv_tile = None
     if edge_weight is not None:
         rv_tile = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)  # [T, C]
         rv_tile = rv_tile[:, :, None]
-    contrib = tile_contributions(sr, cols, x, rv_tile, edge_weight)
+    contrib = tile_contributions(sr, cols, x, rv_tile, edge_weight, weights)
     tile_red = reduce_tiles(sr, contrib)  # [T, C]
     return _combine_and_scatter(sr, tiled, tile_red, tile_mask)
 
@@ -177,9 +206,9 @@ def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
     else:
         gathered = sr.mul(jnp.asarray(1, gathered.dtype), gathered)
     contrib = jnp.where(pad[..., None], jnp.asarray(sr.zero, gathered.dtype), gathered)
-    if sr.name == "tropical":
+    if sr.reduction == "min":
         tile_red = contrib.min(axis=2)
-    elif sr.name in ("boolean", "selmax"):
+    elif sr.reduction == "max":
         tile_red = contrib.max(axis=2)
     else:
         tile_red = contrib.sum(axis=2)  # [T, C, d]

@@ -1,0 +1,412 @@
+"""Delta-stepping SSSP over the min-plus semiring on weighted SlimSell.
+
+The paper closes by arguing its semiring/SpMV principles extend beyond BFS;
+this module cashes that claim for single-source shortest paths. The algebra
+is the tropical one BFS already uses — (min, +) — but the matrix operand is
+the *weighted* SlimSell variant (``SlimSellTiled.wts`` alongside ``cols``,
+SlimSell-W): one relaxation sweep is one min-plus SpMV,
+
+    y[v] = min_u ( w(v, u) + x[u] ),    x[u] = dist[u] on the source set,
+
+and ``dist' = min(dist, y)`` is a batch of edge relaxations.
+
+The algorithm is Meyer & Sanders' delta-stepping, expressed entirely in
+sweeps so it runs on the same two engines as BFS:
+
+* vertices are bucketed by ``floor(dist / delta)``; buckets settle in order;
+* **light** edges (w <= delta) are relaxed to a fixpoint *within* the current
+  bucket (an inner loop — improvements can land back in the same bucket);
+* **heavy** edges (w > delta) are relaxed once per bucket, after it settles
+  (a heavy edge from bucket b always lands past bucket b).
+
+The light/heavy split is two masked views of the same ``wts`` array (the
+other class's slots are set to +inf, the min-plus zero, so they are inert) —
+no second layout is built. SlimWork applies per sweep: only the tiles holding
+a *source* column are touched, selected through the same push index BFS uses
+(a tile mask on the jnp backend, scalar-prefetch grid indirection on pallas).
+
+``delta=inf`` degenerates to Bellman-Ford (one bucket, pure sweeps);
+``delta -> 0`` approaches Dijkstra's settling order (many tiny buckets).
+The default delta is the mean edge weight — the classic bucket-width
+heuristic balancing re-relaxations against bucket count.
+
+Two execution modes, mirroring ``bfs``:
+
+* ``mode="fused"`` — both the bucket loop and the light fixpoint loop are
+  nested ``lax.while_loop``s on device; one dispatch for the whole SSSP.
+* ``mode="hostloop"`` — the loops run on host, each sweep gathers only the
+  active tiles (bucketed to powers of two to bound retracing) before the
+  jitted relaxation; real work-skipping on any backend.
+
+Weights must be non-negative (delta-stepping's bucket-ordering argument
+needs it); ``sssp`` raises on negative weights. With zero-weight edges the
+distances are exact, but parent pointers inside a zero-weight equal-distance
+group may form zero-weight cycles (positive-weight parents are preferred
+whenever one is tight, so this only affects vertices whose every shortest
+path enters through a zero-weight edge).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import direction as dm
+from . import semiring as sm
+from .bfs import (WORK_LOG, _SubsetTiled, _pad_tile_ids,
+                  _push_tile_mask_host)
+from .spmv import resolve_backend, slimsell_spmv
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SSSPResult:
+    distances: np.ndarray          # float32[n]; +inf unreachable
+    parents: Optional[np.ndarray]  # int32[n]; parent in SP tree; root -> root
+    sweeps: int                    # total relaxation SpMVs (light + heavy)
+    buckets: int                   # delta buckets processed
+    delta: float                   # bucket width actually used
+    work_log: Optional[np.ndarray] = None  # active tiles per sweep
+
+
+# --------------------------------------------------------------- weight prep
+
+
+def _require_weighted(tiled):
+    if getattr(tiled, "wts", None) is None:
+        raise ValueError(
+            "sssp needs a weighted layout; build it from a CSR with weights "
+            "(e.g. generators.with_random_weights) via formats.build_slimsell")
+
+
+def _weight_stats(tiled) -> tuple[float, float]:
+    """(min, mean) over the real (non-padding) slots.
+
+    Computed once per layout and cached on the instance (the wts array is
+    immutable after build): ``run_graph500_sssp`` calls ``sssp`` once per
+    root on one layout, and a full-array scan per call would land inside the
+    timed path.
+    """
+    cached = getattr(tiled, "_weight_stats_cache", None)
+    if cached is not None:
+        return cached
+    valid = tiled.cols >= 0
+    w = tiled.wts
+    wmin = jnp.min(jnp.where(valid, w, jnp.inf))
+    wsum = jnp.sum(jnp.where(valid, w, 0.0))
+    cnt = jnp.maximum(jnp.sum(valid), 1)
+    stats = (float(wmin), float(wsum / cnt))
+    try:
+        tiled._weight_stats_cache = stats
+    except AttributeError:
+        pass  # duck-typed/frozen layouts just recompute
+    return stats
+
+
+def default_delta(tiled) -> float:
+    """Mean edge weight — the standard bucket-width starting point."""
+    _, mean = _weight_stats(tiled)
+    return max(float(mean), 1e-6)
+
+
+# -------------------------------------------------------------------- fused
+
+
+@partial(jax.jit, static_argnames=("slimwork", "max_iters", "log_work",
+                                   "backend"))
+def _sssp_fused(tiled, root, delta, *, slimwork: bool, max_iters: int,
+                log_work: bool, backend: str):
+    n = tiled.n
+    inf = jnp.inf
+    # light/heavy = two masked views of one wts array; +inf slots are inert
+    # under min-plus, so each view relaxes only its edge class
+    light = jnp.where(tiled.wts <= delta, tiled.wts, inf)
+    heavy = jnp.where(tiled.wts > delta, tiled.wts, inf)
+    dist0 = jnp.full((n,), inf, jnp.float32).at[root].set(0.0)
+    settled0 = jnp.zeros((n,), bool)
+    work0 = jnp.zeros((WORK_LOG,) if log_work else (1,), jnp.int32)
+    n_tiles_c = jnp.asarray(tiled.cols.shape[0], jnp.int32)
+
+    def relax(dist, active, wsel):
+        """One min-plus sweep from the ``active`` sources over one edge class."""
+        frontier = jnp.where(active, dist, inf)
+        mask = dm.push_tile_mask(tiled, active) if slimwork else None
+        y = slimsell_spmv(sm.MINPLUS, tiled, frontier, weights=wsel,
+                          tile_mask=mask, backend=backend)
+        nd = jnp.minimum(dist, y)
+        used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
+        return nd, nd < dist, used
+
+    def log(work, sweeps, used):
+        if log_work:
+            work = work.at[jnp.minimum(sweeps, WORK_LOG - 1)].set(used)
+        return work
+
+    def outer_cond(carry):
+        dist, settled, sweeps, nb, work = carry
+        return jnp.any(~settled & jnp.isfinite(dist)) & (sweeps < max_iters)
+
+    def outer_body(carry):
+        dist, settled, sweeps, nb, work = carry
+        live = ~settled & jnp.isfinite(dist)
+        # jump straight to the next non-empty bucket
+        b = jnp.floor(jnp.min(jnp.where(live, dist, inf)) / delta)
+        in_b = live & (jnp.floor(dist / delta) == b)
+
+        def inner_cond(c):
+            _, _, active, sweeps, _ = c
+            return jnp.any(active) & (sweeps < max_iters)
+
+        def inner_body(c):
+            dist, removed, active, sweeps, work = c
+            removed = removed | active
+            nd, improved, used = relax(dist, active, light)
+            # an improvement landing back in bucket b re-enters the fixpoint
+            active = improved & (jnp.floor(nd / delta) == b)
+            return nd, removed, active, sweeps + 1, log(work, sweeps, used)
+
+        dist, removed, _, sweeps, work = jax.lax.while_loop(
+            inner_cond, inner_body,
+            (dist, jnp.zeros_like(settled), in_b, sweeps, work))
+
+        # heavy edges once, from everything the bucket processed; a heavy
+        # relaxation always lands past bucket b, so b is final afterwards
+        dist, _, used = relax(dist, removed, heavy)
+        work = log(work, sweeps, used)
+        return dist, settled | removed, sweeps + 1, nb + 1, work
+
+    dist, _, sweeps, nb, work = jax.lax.while_loop(
+        outer_cond, outer_body,
+        (dist0, settled0, jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+         work0))
+    return dist, sweeps, nb, work
+
+
+# ------------------------------------------------------------------ hostloop
+
+
+@partial(jax.jit, static_argnames=("n_active", "n", "n_chunks", "backend"))
+def _relax_subset(tiled_cols, wsel, tiled_row_block, row_vertex, n: int,
+                  n_chunks: int, tile_ids, n_active: int, dist, active,
+                  backend: str):
+    """Gather the active tiles (bucketed size) and relax on them only."""
+    ids = tile_ids[:n_active]
+    sub = _SubsetTiled(
+        cols=jnp.take(tiled_cols, ids, axis=0),
+        wts=jnp.take(wsel, ids, axis=0),
+        row_block=jnp.take(tiled_row_block, ids, axis=0),
+        row_vertex=row_vertex, n=n, n_chunks=n_chunks,
+    )
+    frontier = jnp.where(active, dist, jnp.inf)
+    y = slimsell_spmv(sm.MINPLUS, sub, frontier, weights=sub.wts,
+                      backend=backend)
+    nd = jnp.minimum(dist, y)
+    return nd, nd < dist
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _relax_full(tiled, wsel, dist, active, backend: str):
+    frontier = jnp.where(active, dist, jnp.inf)
+    y = slimsell_spmv(sm.MINPLUS, tiled, frontier, weights=wsel,
+                      backend=backend)
+    nd = jnp.minimum(dist, y)
+    return nd, nd < dist
+
+
+def _sssp_hostloop(tiled, root: int, delta: float, *, slimwork: bool,
+                   max_iters: int, backend: str):
+    n = tiled.n
+    n_tiles = int(tiled.n_tiles)
+    light = jnp.where(tiled.wts <= delta, tiled.wts, jnp.inf)
+    heavy = jnp.where(tiled.wts > delta, tiled.wts, jnp.inf)
+    dist = jnp.full((n,), jnp.inf, jnp.float32).at[root].set(0.0)
+    settled = np.zeros(n, bool)
+    inc_src_np = np.asarray(tiled.inc_src)
+    inc_tile_np = np.asarray(tiled.inc_tile)
+    sweeps, buckets = 0, 0
+    work_list: list[int] = []
+
+    def relax(dist, active_np, wsel):
+        """Host twin of the fused ``relax``: mask math in numpy, sweep jitted."""
+        nonlocal sweeps
+        if slimwork:
+            tmask = _push_tile_mask_host(active_np, inc_src_np, inc_tile_np,
+                                         n_tiles)
+            ids = np.nonzero(tmask)[0]
+            if ids.size == 0:
+                return dist, np.zeros(n, bool)
+            work_list.append(ids.size)
+            ids_p, bucket = _pad_tile_ids(ids, n_tiles)
+            nd, improved = _relax_subset(
+                tiled.cols, wsel, tiled.row_block, tiled.row_vertex, n,
+                tiled.n_chunks, jnp.asarray(ids_p), bucket, dist,
+                jnp.asarray(active_np), backend)
+        else:
+            work_list.append(n_tiles)
+            nd, improved = _relax_full(tiled, wsel, dist,
+                                       jnp.asarray(active_np), backend)
+        sweeps += 1
+        return nd, np.asarray(improved)
+
+    delta32 = np.float32(delta)
+    while sweeps < max_iters:
+        dist_np = np.asarray(dist)
+        live = ~settled & np.isfinite(dist_np)
+        if not live.any():
+            break
+        # bucket indices computed in float32 everywhere so the minimum's
+        # bucket always contains the minimum (no float64/float32 skew);
+        # inf/inf -> nan compares False, which is what unreached rows need
+        with np.errstate(invalid="ignore"):
+            bidx = np.floor(dist_np / delta32)
+        b = bidx[live].min()
+        in_b = live & (bidx == b)
+        removed = np.zeros(n, bool)
+        active = in_b
+        while active.any() and sweeps < max_iters:
+            removed |= active
+            dist, improved = relax(dist, active, light)
+            dist_np = np.asarray(dist)
+            with np.errstate(invalid="ignore"):
+                active = improved & (np.floor(dist_np / delta32) == b)
+        dist, _ = relax(dist, removed, heavy)
+        settled |= removed
+        buckets += 1
+    return dist, sweeps, buckets, np.asarray(work_list, np.int32)
+
+
+# -------------------------------------------------------- parents (weighted DP)
+
+
+def sssp_parents(tiled, dist: Array, root, *, rtol: float = 1e-6,
+                 atol: float = 1e-6) -> Array:
+    """Weighted DP transform: for each v pick a neighbor u whose relaxation is
+    tight, ``dist[u] + w(v, u) == dist[v]`` (one sel-max SlimSell sweep).
+
+    Positive-weight parents are preferred over zero-weight ones (a ``+ n``
+    score bonus), so parent chains strictly decrease ``dist`` whenever any
+    strictly-closer tight parent exists.
+
+    The score (id+1, bonus +n) rides in the float32 sel-max payload, so ids
+    up to 2n must be float32-exact: guarded at n <= 2^23 (cf. the 2^24 guard
+    on cc's unshifted labels).
+    """
+    n = tiled.n
+    if n > (1 << 23):
+        raise ValueError("sssp_parents carries (vertex id + n) scores in "
+                         "float32 (exact up to 2^24), so n is capped at "
+                         f"2^23; got n={n}")
+    pad = tiled.cols < 0
+    safe = jnp.where(pad, 0, tiled.cols)
+    d_nbr = jnp.take(dist, safe, axis=0) + tiled.wts            # [T, C, L]
+    rv_tile = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)  # [T, C]
+    rv_safe = jnp.where(rv_tile < 0, 0, rv_tile)
+    d_row = jnp.take(dist, rv_safe, axis=0)[:, :, None]
+    tight = (~pad) & jnp.isfinite(d_row) \
+        & (jnp.abs(d_nbr - d_row) <= atol + rtol * jnp.abs(d_row))
+    score = jnp.where(tight,
+                      (safe + 1).astype(jnp.float32)
+                      + jnp.where(tiled.wts > 0, float(n), 0.0),
+                      0.0)
+    tile_red = score.max(axis=-1)
+    y_blocks = jax.ops.segment_max(tile_red, tiled.row_block,
+                                   num_segments=tiled.n_chunks)
+    rv = tiled.row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, n, rv)
+    p1 = jax.ops.segment_max(y_blocks.reshape(-1), ids,
+                             num_segments=n + 1)[:n]
+    p1 = jnp.where(p1 > n, p1 - n, p1)  # strip the positive-weight bonus
+    p = p1.astype(jnp.int32) - 1
+    return p.at[root].set(root)
+
+
+# ------------------------------------------------------------- host oracle
+
+
+def dijkstra_reference(csr, root: int) -> np.ndarray:
+    """Host Dijkstra over CSR (binary heap) — the validation oracle the
+    Graph500 SSSP harness and the tests compare against (float64 accumulation,
+    returned as float32; +inf where unreachable)."""
+    import heapq
+    if csr.weights is None:
+        raise ValueError("dijkstra_reference needs a weighted CSR")
+    n = csr.n
+    dist = np.full(n, np.inf, np.float64)
+    dist[root] = 0.0
+    heap = [(0.0, int(root))]
+    while heap:
+        d, v = heapq.heappop(heap)
+        if d > dist[v]:
+            continue
+        s, e = csr.indptr[v], csr.indptr[v + 1]
+        for u, w in zip(csr.indices[s:e], csr.weights[s:e]):
+            nd = d + float(w)
+            if nd < dist[u]:
+                dist[u] = nd
+                heapq.heappush(heap, (nd, int(u)))
+    return dist.astype(np.float32)
+
+
+# ----------------------------------------------------------------- public API
+
+
+def sssp(tiled, root: int, *, delta: Optional[float] = None,
+         need_parents: bool = False, slimwork: bool = True,
+         mode: str = "fused", max_iters: Optional[int] = None,
+         log_work: bool = False, backend: Optional[str] = None) -> SSSPResult:
+    """Single-source shortest paths from ``root`` by delta-stepping.
+
+    delta: bucket width (None -> mean edge weight; ``inf`` -> Bellman-Ford).
+    mode: "fused" (nested lax.while_loops on device) or "hostloop" (host
+    bucket loop + SlimWork tile gathering per sweep).
+    backend: "jnp" (reference) or "pallas" (weighted SlimSell TPU kernel).
+    Returns float32 distances (+inf where unreachable) and, when requested,
+    the shortest-path-tree parents via the weighted DP sweep.
+    """
+    _require_weighted(tiled)
+    backend = resolve_backend(backend)
+    if slimwork and getattr(tiled, "inc_src", None) is None:
+        raise ValueError("SlimWork source masks need the push index; rebuild "
+                         "the layout with formats.build_slimsell")
+    wmin, _ = _weight_stats(tiled)  # cached per layout; also warms default_delta
+    if wmin < 0:
+        raise ValueError(f"delta-stepping needs non-negative weights; "
+                         f"min weight is {wmin}")
+    if delta is None:
+        delta = default_delta(tiled)  # cached stats: no second scan
+    delta = float(delta)
+    if not delta > 0:
+        raise ValueError(f"delta must be positive, got {delta}")
+    n = tiled.n
+    max_iters = int(max_iters) if max_iters is not None else 4 * n + 16
+    root = int(root)
+    if not 0 <= root < n:
+        raise ValueError(f"root {root} out of range for n={n}")
+
+    if mode == "fused":
+        dist, sweeps, buckets, work = _sssp_fused(
+            tiled, jnp.asarray(root, jnp.int32), jnp.asarray(delta, jnp.float32),
+            slimwork=slimwork, max_iters=max_iters, log_work=log_work,
+            backend=backend)
+        wl = np.asarray(work)[: int(sweeps)] if log_work else None
+    elif mode == "hostloop":
+        dist, sweeps, buckets, wl = _sssp_hostloop(
+            tiled, root, delta, slimwork=slimwork, max_iters=max_iters,
+            backend=backend)
+        if not log_work:
+            wl = None
+    else:
+        raise ValueError(mode)
+
+    parents = None
+    if need_parents:
+        parents = np.asarray(sssp_parents(tiled, jnp.asarray(dist),
+                                          jnp.asarray(root, jnp.int32)))
+    return SSSPResult(distances=np.asarray(dist), parents=parents,
+                      sweeps=int(sweeps), buckets=int(buckets),
+                      delta=delta, work_log=wl)

@@ -3,10 +3,14 @@
 * Kronecker / R-MAT power-law graphs with Graph500 parameters
   (a=0.57, b=0.19, c=0.19, d=0.05) — the paper's "K" family.
 * Erdős–Rényi G(n, p) uniform-degree graphs — the paper's "ER" family.
+* ``with_random_weights`` decorates any CSR with symmetric random edge
+  weights — the Graph500-SSSP-style weighted inputs.
 
 All generators are deterministic in ``seed`` and return host-side CSR.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -56,6 +60,43 @@ def ring_of_cliques(n_cliques: int, clique: int, *, seed: int = 0) -> CSRGraph:
         blocks.append(np.array([[base, nxt]]))
     edges = np.concatenate(blocks, axis=0)
     return build_csr(edges, n_cliques * clique)
+
+
+def with_random_weights(csr: CSRGraph, *, low: float = 1.0, high: float = 10.0,
+                        seed: int = 0, integer: bool = False) -> CSRGraph:
+    """Attach symmetric uniform random weights in [low, high) to a CSR.
+
+    Each *undirected* edge {u, v} draws one weight, assigned to both directed
+    copies, so the graph stays a metric undirected graph (what the SSSP
+    oracle and the Graph500 SSSP kernel expect). ``integer=True`` floors the
+    draws (GAP-style integer weights); weights must stay non-negative —
+    delta-stepping's correctness argument needs that.
+    """
+    if low < 0 or high < low:
+        raise ValueError(f"need 0 <= low <= high, got [{low}, {high})")
+    u = np.repeat(np.arange(csr.n, dtype=np.int64), np.diff(csr.indptr))
+    v = csr.indices.astype(np.int64)
+    key = np.minimum(u, v) * csr.n + np.maximum(u, v)
+    uniq, inv = np.unique(key, return_inverse=True)
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(low, high, uniq.size)
+    if integer:
+        w = np.floor(w)
+    return dataclasses.replace(csr, weights=w.astype(np.float32)[inv])
+
+
+def two_components(scale: int, edge_factor: int = 8, *, seed: int = 0) -> CSRGraph:
+    """Two disjoint Kronecker graphs side by side — the adversarial
+    disconnected input for SSSP (unreachable = inf) and CC (2+ labels)."""
+    a = kronecker(scale, edge_factor, seed=seed)
+    b = kronecker(scale, edge_factor, seed=seed + 1)
+    ua = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.indptr))
+    ub = np.repeat(np.arange(b.n, dtype=np.int64), np.diff(b.indptr))
+    edges = np.concatenate([
+        np.stack([ua, a.indices.astype(np.int64)], axis=1),
+        np.stack([ub + a.n, b.indices.astype(np.int64) + a.n], axis=1),
+    ])
+    return build_csr(edges, a.n + b.n)
 
 
 def star(n: int) -> CSRGraph:

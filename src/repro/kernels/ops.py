@@ -64,8 +64,13 @@ def _scatter_blocks(sr, tiled, y_blocks, tile_mask):
 
 
 @functools.partial(jax.jit, static_argnames=("sr_name", "interpret"))
-def spmv(sr_name: str, tiled, x, tile_mask=None, interpret=None):
-    """SlimSell SpMV via the Pallas kernel; returns y [n] in vertex space."""
+def spmv(sr_name: str, tiled, x, tile_mask=None, weights=None, interpret=None):
+    """SlimSell SpMV via the Pallas kernel; returns y [n] in vertex space.
+
+    weights: optional stored per-slot weights float32[T, C, L] (SlimSell-W);
+    routes to the weighted kernel, whose weight block shares the cols block's
+    tile indirection.
+    """
     interpret = _default_interpret() if interpret is None else interpret
     sr = sm.get(sr_name)
     T = tiled.cols.shape[0]
@@ -77,7 +82,8 @@ def spmv(sr_name: str, tiled, x, tile_mask=None, interpret=None):
     x = x.astype(sr.dtype)
     y_blocks = slimsell_spmv_pallas(
         tiled.cols, tile_ids, tiled.row_block, n_active, x,
-        sr_name=sr_name, n_chunks=tiled.n_chunks, interpret=interpret)
+        sr_name=sr_name, n_chunks=tiled.n_chunks, interpret=interpret,
+        wts=weights)
     return _scatter_blocks(sr, tiled, y_blocks[: tiled.n_chunks], tile_mask)
 
 

@@ -27,8 +27,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def semiring_ops(name: str):
-    """(add, edge_contrib, zero) — edge value is the implicit SlimSell 1."""
-    if name == "tropical":
+    """(add, edge_contrib, zero) — edge value is the implicit SlimSell 1.
+
+    ``minplus`` is the weighted tropical operator; without stored weights its
+    implicit-1 contribution is x + 1, identical to tropical, matching the jnp
+    path (the weighted kernel replaces the 1 with the slot weight).
+    """
+    if name in ("tropical", "minplus"):
         return jnp.minimum, lambda x: x + 1.0, jnp.inf
     if name == "real":
         return (lambda a, b: a + b), (lambda x: x), 0.0
@@ -40,15 +45,31 @@ def semiring_ops(name: str):
 
 
 def _reduce_l(add_name: str, contrib):
-    if add_name == "tropical":
+    if add_name in ("tropical", "minplus"):
         return contrib.min(axis=-1)
     if add_name == "real":
         return contrib.sum(axis=-1)
     return contrib.max(axis=-1)
 
 
+def _weighted_contrib(sr_name: str, w, g):
+    """Combine a stored slot weight with a gathered frontier value."""
+    if sr_name in ("tropical", "minplus"):
+        return w + g
+    return w * g
+
+
 def _spmv_kernel(tile_ids_ref, row_block_ref, n_active_ref,
-                 cols_ref, x_ref, out_ref, *, sr_name: str, chunk_blk: int):
+                 cols_ref, *refs, sr_name: str, chunk_blk: int,
+                 weighted: bool):
+    """One grid step = one SlimSell tile; shared by the unweighted and the
+    weighted (SlimSell-W) SpMV. When ``weighted``, ``refs`` leads with the
+    slot-weight block (mapped in lockstep with ``cols``) and the stored
+    weight replaces the derived implicit 1 — under min-plus the contribution
+    becomes ``w + x[col]`` (one relaxation).
+    """
+    wts_ref = refs[0] if weighted else None
+    x_ref, out_ref = refs[-2], refs[-1]
     add, contrib_fn, zero = semiring_ops(sr_name)
     t = pl.program_id(0)
     tid = tile_ids_ref[t]
@@ -70,7 +91,9 @@ def _spmv_kernel(tile_ids_ref, row_block_ref, n_active_ref,
         safe = jnp.where(pad, 0, cols)
         xv = x_ref[...]                         # frontier, VMEM-resident
         g = jnp.take(xv, safe.reshape(-1), axis=0).reshape(cols.shape)
-        contrib = jnp.where(pad, jnp.asarray(zero, xv.dtype), contrib_fn(g))
+        val = _weighted_contrib(sr_name, wts_ref[0].astype(xv.dtype), g) \
+            if weighted else contrib_fn(g)
+        contrib = jnp.where(pad, jnp.asarray(zero, xv.dtype), val)
         red = _reduce_l(sr_name, contrib)       # [C]
         row = chunk % chunk_blk
         cur = pl.load(out_ref, (pl.ds(row, 1), slice(None)))
@@ -81,7 +104,7 @@ def _spmv_kernel(tile_ids_ref, row_block_ref, n_active_ref,
                                              "interpret"))
 def slimsell_spmv_pallas(cols, tile_ids, row_block, n_active, x, *,
                          sr_name: str, n_chunks: int, chunk_blk: int = 8,
-                         interpret: bool = True):
+                         interpret: bool = True, wts=None):
     """Tile-level SpMV.  Returns y_blocks [n_chunks_pad, C] (chunk-row space).
 
     cols:      int32[T, C, L]
@@ -89,24 +112,30 @@ def slimsell_spmv_pallas(cols, tile_ids, row_block, n_active, x, *,
     row_block: int32[T]  owning chunk per tile
     n_active:  int32[1]  number of live grid steps
     x:         frontier [n_pad]
+    wts:       optional float32[T, C, L] stored slot weights (SlimSell-W),
+               block-mapped in lockstep with ``cols`` — the same tile
+               indirection, so SlimWork skipping also skips the weight DMA
     """
     T, C, L = cols.shape
     n_blk = -(-n_chunks // chunk_blk)
-    _, _, zero = semiring_ops(sr_name)
+    weighted = wts is not None
+    tile_spec = pl.BlockSpec((1, C, L), lambda t, tids, rb, na: (tids[t], 0, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(T,),
-        in_specs=[
-            pl.BlockSpec((1, C, L), lambda t, tids, rb, na: (tids[t], 0, 0)),
+        in_specs=[tile_spec] + ([tile_spec] if weighted else []) + [
             pl.BlockSpec(x.shape, lambda t, tids, rb, na: (0,)),
         ],
         out_specs=pl.BlockSpec((chunk_blk, C),
                                lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
     )
-    kernel = functools.partial(_spmv_kernel, sr_name=sr_name, chunk_blk=chunk_blk)
+    kernel = functools.partial(_spmv_kernel, sr_name=sr_name,
+                               chunk_blk=chunk_blk, weighted=weighted)
+    operands = (tile_ids, row_block, n_active, cols) \
+        + ((wts,) if weighted else ()) + (x,)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blk * chunk_blk, C), x.dtype),
         interpret=interpret,
-    )(tile_ids, row_block, n_active, cols, x)
+    )(*operands)

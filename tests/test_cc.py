@@ -1,0 +1,129 @@
+"""Connected components vs scipy.sparse.csgraph.connected_components.
+
+Covers the tentpole contract: ``cc(...)`` induces the same partition as
+scipy on the graph families (power-law, sparse-with-isolates, disconnected,
+star, path, single node, edgeless) for both semirings (sel-max label
+propagation, boolean peeling), both backends and both engine modes; the
+canonical label is the max vertex id of each component; SlimWork work logs
+shrink as the fixpoint converges.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cc import cc
+from repro.core.formats import build_csr, build_slimsell
+from repro.graphs.generators import (erdos_renyi, kronecker, star,
+                                     two_components)
+
+scipy_graph = pytest.importorskip("scipy.sparse.csgraph")
+from scipy.sparse import csr_matrix  # noqa: E402
+
+BACKENDS = ["jnp", "pallas"]
+MODES = ["fused", "hostloop"]
+
+
+def path_graph(n: int):
+    edges = np.stack([np.arange(n - 1), np.arange(1, n)], axis=1)
+    return build_csr(edges, n)
+
+
+FAMILIES = {
+    "kron": lambda: kronecker(9, 8, seed=1),
+    "er_sparse": lambda: erdos_renyi(512, 1.5, seed=2),  # many comps + isolates
+    "disconnected": lambda: two_components(7, 8, seed=0),
+    "star": lambda: star(64),
+    "path": lambda: path_graph(96),
+    "edgeless": lambda: build_csr(np.empty((0, 2), np.int64), 37),
+}
+
+
+def scipy_cc(csr):
+    A = csr_matrix((np.ones(max(csr.nnz, 1), np.int8)[: csr.nnz],
+                    csr.indices, csr.indptr), shape=(csr.n, csr.n))
+    return scipy_graph.connected_components(A, directed=False)
+
+
+def layout(csr):
+    return build_slimsell(csr, C=8, L=32).to_jax()
+
+
+def assert_same_partition(labels, lab_ref):
+    """Partitions are equal iff the (ours, scipy) label pairs biject."""
+    pairs = np.unique(np.stack([labels, lab_ref], axis=1), axis=0)
+    assert len(pairs) == len(np.unique(labels)) == len(np.unique(lab_ref))
+
+
+def assert_canonical(csr, labels):
+    """labels[v] must be the max vertex id inside v's component."""
+    for rep in np.unique(labels):
+        members = np.nonzero(labels == rep)[0]
+        assert members.max() == rep
+
+
+# ------------------------------------------------------------ oracle match
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_labelprop_matches_scipy(family, backend, mode):
+    csr = FAMILIES[family]()
+    ncc_ref, lab_ref = scipy_cc(csr)
+    res = cc(layout(csr), semiring="selmax", mode=mode, backend=backend)
+    assert res.n_components == ncc_ref
+    assert_same_partition(res.labels, lab_ref)
+    assert_canonical(csr, res.labels)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("mode", MODES)
+def test_boolean_peeling_matches_scipy(family, mode):
+    csr = FAMILIES[family]()
+    ncc_ref, lab_ref = scipy_cc(csr)
+    res = cc(layout(csr), semiring="boolean", mode=mode)
+    assert res.n_components == ncc_ref
+    assert_same_partition(res.labels, lab_ref)
+    assert_canonical(csr, res.labels)
+
+
+def test_boolean_pallas_agrees():
+    csr = FAMILIES["disconnected"]()
+    a = cc(layout(csr), semiring="boolean", backend="pallas")
+    b = cc(layout(csr), semiring="selmax")
+    assert np.array_equal(a.labels, b.labels)
+
+
+# --------------------------------------------------------------- behavior
+
+
+def test_single_node():
+    csr = build_csr(np.empty((0, 2), np.int64), 1)
+    res = cc(layout(csr))
+    assert res.labels.tolist() == [0] and res.n_components == 1
+
+
+def test_slimwork_log_shrinks():
+    csr = FAMILIES["kron"]()
+    res = cc(layout(csr), mode="hostloop", log_work=True)
+    assert res.work_log is not None and len(res.work_log) == res.iterations
+    # the last sweep touches no more tiles than the first (fixpoint tail)
+    assert res.work_log[-1] <= res.work_log[0]
+
+
+def test_no_slimwork_matches():
+    csr = FAMILIES["er_sparse"]()
+    a = cc(layout(csr), slimwork=False)
+    b = cc(layout(csr), slimwork=True)
+    assert np.array_equal(a.labels, b.labels)
+
+
+def test_bad_semiring_rejected():
+    with pytest.raises(ValueError, match="cc semiring"):
+        cc(layout(FAMILIES["star"]()), semiring="tropical")
+
+
+def test_iterations_bounded_by_diameter():
+    csr = path_graph(64)
+    res = cc(layout(csr))
+    # label prop moves the max id one hop per sweep: diameter(+1) sweeps
+    assert res.iterations <= 65

@@ -1,0 +1,228 @@
+"""Delta-stepping SSSP vs the scipy Dijkstra oracle.
+
+Covers the tentpole contract: ``sssp(...)`` distances match Dijkstra on the
+graph families (power-law, uniform, high-diameter, star, path, disconnected)
+for both backends and both engine modes; parents are tight relaxations; the
+weighted layout construction (dedup = min weight, symmetric doubling) is
+exact; delta extremes (Bellman-Ford, near-Dijkstra buckets) and weight edge
+cases (zero weights, equal weights, single node) are exact; negative weights
+and unweighted layouts are rejected.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import semiring as sm
+from repro.core.formats import build_csr, build_slimsell
+from repro.core.spmv import slimsell_spmv
+from repro.core.sssp import default_delta, dijkstra_reference, sssp
+from repro.graph500 import run_graph500_sssp, validate_sssp_tree
+from repro.graphs.generators import (erdos_renyi, kronecker, ring_of_cliques,
+                                     star, two_components, with_random_weights)
+
+scipy_graph = pytest.importorskip("scipy.sparse.csgraph")
+from scipy.sparse import csr_matrix  # noqa: E402
+
+BACKENDS = ["jnp", "pallas"]
+MODES = ["fused", "hostloop"]
+
+
+def weighted_path(n: int, seed: int = 0):
+    edges = np.stack([np.arange(n - 1), np.arange(1, n)], axis=1)
+    csr = build_csr(edges, n)
+    return with_random_weights(csr, low=0.5, high=3.0, seed=seed)
+
+
+FAMILIES = {
+    "kron": lambda: with_random_weights(kronecker(9, 8, seed=3), seed=5),
+    "er": lambda: with_random_weights(erdos_renyi(512, 4, seed=1), seed=2),
+    "ring": lambda: with_random_weights(ring_of_cliques(12, 5), low=0.25,
+                                        high=4.0, seed=7),
+    "star": lambda: with_random_weights(star(100), seed=4),
+    "path": lambda: weighted_path(64),
+    "disconnected": lambda: with_random_weights(two_components(6, 6, seed=0),
+                                                seed=9),
+}
+
+
+def scipy_dijkstra(csr, root):
+    A = csr_matrix((csr.weights, csr.indices, csr.indptr),
+                   shape=(csr.n, csr.n))
+    return scipy_graph.dijkstra(A, indices=root, directed=True)
+
+
+def layout(csr, L=32):
+    return build_slimsell(csr, C=8, L=L).to_jax()
+
+
+def check_dist(d, d_ref):
+    assert np.all(np.isfinite(d) == np.isfinite(d_ref))
+    f = np.isfinite(d_ref)
+    np.testing.assert_allclose(d[f], d_ref[f], rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------ oracle match
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_matches_dijkstra(family, backend, mode):
+    csr = FAMILIES[family]()
+    tiled = layout(csr)
+    root = int(np.argmax(csr.deg))
+    d_ref = scipy_dijkstra(csr, root)
+    res = sssp(tiled, root, mode=mode, backend=backend, need_parents=True)
+    check_dist(res.distances, d_ref)
+    validate_sssp_tree(csr, root, res.distances, res.parents, d_ref=d_ref)
+
+
+def test_internal_oracle_agrees_with_scipy():
+    csr = FAMILIES["kron"]()
+    for root in (0, 17, int(np.argmax(csr.deg))):
+        np.testing.assert_allclose(dijkstra_reference(csr, root),
+                                   scipy_dijkstra(csr, root), rtol=1e-5)
+
+
+# ------------------------------------------------------------- delta knob
+
+
+@pytest.mark.parametrize("delta", [0.3, 1.0, np.inf])
+def test_delta_invariance(delta):
+    csr = FAMILIES["kron"]()
+    tiled = layout(csr)
+    root = 11
+    d_ref = scipy_dijkstra(csr, root)
+    for mode in MODES:
+        res = sssp(tiled, root, delta=delta, mode=mode)
+        check_dist(res.distances, d_ref)
+
+
+def test_bellman_ford_fewest_buckets():
+    tiled = layout(FAMILIES["kron"]())
+    res = sssp(tiled, 0, delta=np.inf)
+    assert res.buckets == 1
+
+
+def test_default_delta_is_mean_weight():
+    csr = FAMILIES["er"]()
+    tiled = layout(csr)
+    assert default_delta(tiled) == pytest.approx(float(csr.weights.mean()),
+                                                rel=1e-5)
+
+
+# ------------------------------------------------------------- edge cases
+
+
+def test_zero_weight_edges():
+    rng = np.random.default_rng(0)
+    csr = kronecker(8, 8, seed=2)
+    w = rng.choice([0.0, 1.0, 2.0], size=csr.nnz // 2)
+    u = np.repeat(np.arange(csr.n, dtype=np.int64), np.diff(csr.indptr))
+    edges = np.stack([u, csr.indices.astype(np.int64)], axis=1)
+    half = edges[:, 0] < edges[:, 1]
+    csr = build_csr(edges[half], csr.n, weights=w[: int(half.sum())])
+    tiled = layout(csr)
+    d_ref = scipy_dijkstra(csr, 3)
+    for mode in MODES:
+        check_dist(sssp(tiled, 3, mode=mode).distances, d_ref)
+
+
+def test_equal_weights_match_scaled_bfs():
+    csr = kronecker(8, 8, seed=5)
+    csr.weights = np.full(csr.nnz, 2.5, np.float32)
+    tiled = layout(csr)
+    res = sssp(tiled, 7)
+    d_ref = scipy_dijkstra(csr, 7)
+    check_dist(res.distances, d_ref)
+
+
+def test_single_node():
+    csr = build_csr(np.empty((0, 2), np.int64), 1,
+                    weights=np.empty(0, np.float32))
+    res = sssp(layout(csr), 0)
+    assert res.distances.shape == (1,) and res.distances[0] == 0.0
+
+
+def test_disconnected_unreachable_inf():
+    csr = FAMILIES["disconnected"]()
+    tiled = layout(csr)
+    res = sssp(tiled, 0)
+    assert np.isinf(res.distances).any()
+    check_dist(res.distances, scipy_dijkstra(csr, 0))
+
+
+def test_negative_weights_rejected():
+    csr = weighted_path(8)
+    csr.weights = csr.weights.copy()
+    csr.weights[0] = -1.0
+    with pytest.raises(ValueError, match="non-negative"):
+        sssp(layout(csr), 0)
+
+
+def test_unweighted_layout_rejected():
+    tiled = build_slimsell(kronecker(6, 4, seed=0), C=8, L=32).to_jax()
+    with pytest.raises(ValueError, match="weighted"):
+        sssp(tiled, 0)
+
+
+def test_minplus_rejected_by_bfs():
+    from repro.core.bfs import bfs
+    tiled = layout(weighted_path(8))
+    with pytest.raises(KeyError, match="minplus"):
+        bfs(tiled, 0, "minplus")
+
+
+# ----------------------------------------------- weighted layout/primitive
+
+
+def test_build_csr_weighted_dedup_keeps_min():
+    edges = np.array([[0, 1], [0, 1], [1, 2]])
+    w = np.array([3.0, 1.0, 2.0], np.float32)
+    csr = build_csr(edges, 3, weights=w)
+    assert csr.edge_weights(0).tolist() == [1.0]      # min of the duplicate
+    assert csr.edge_weights(1).tolist() == [1.0, 2.0]  # symmetric copy
+    assert csr.edge_weights(2).tolist() == [2.0]
+
+
+def test_weighted_spmv_backends_agree():
+    csr = FAMILIES["kron"]()
+    tiled = layout(csr)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(0, 4, csr.n).astype(np.float32))
+    y_jnp = slimsell_spmv(sm.MINPLUS, tiled, x, weights=tiled.wts)
+    y_pls = slimsell_spmv(sm.MINPLUS, tiled, x, weights=tiled.wts,
+                          backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pls),
+                               rtol=1e-6)
+
+
+def test_wts_layout_matches_csr():
+    csr = FAMILIES["er"]()
+    tiled = build_slimsell(csr, C=8, L=32)
+    # every (row vertex, col, weight) triple in the layout must be a CSR edge
+    for t in range(min(tiled.n_tiles, 16)):
+        c = tiled.row_block[t]
+        for r in range(tiled.C):
+            v = tiled.row_vertex[c, r]
+            if v < 0:
+                continue
+            for s in range(tiled.L):
+                u = tiled.cols[t, r, s]
+                if u < 0:
+                    continue
+                nbrs = csr.neighbors(v)
+                i = np.nonzero(nbrs == u)[0]
+                assert i.size == 1
+                assert tiled.wts[t, r, s] == csr.edge_weights(v)[i[0]]
+
+
+# -------------------------------------------------------------- harness
+
+
+def test_graph500_sssp_harness_validates():
+    rep = run_graph500_sssp(scale=8, edge_factor=8, n_roots=4, seed=3)
+    assert rep.validated == 4
+    assert np.isfinite(rep.teps).all() and (rep.teps > 0).all()
+    assert "graph500-sssp" in rep.summary()

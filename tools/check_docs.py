@@ -1,0 +1,64 @@
+"""Markdown link check for the docs suite (CI docs job).
+
+Offline by design: relative links must resolve to an existing file (plus an
+existing anchor-ish heading when one is given); absolute http(s) links are
+only format-checked, never fetched — CI must not flake on the network.
+
+    python tools/check_docs.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+URL = re.compile(r"^https?://[^\s/$.?#].[^\s]*$")
+
+
+def headings(path: Path) -> set[str]:
+    """GitHub-style anchors of every markdown heading in ``path``."""
+    out = set()
+    for line in path.read_text(encoding="utf-8").splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if m:
+            anchor = re.sub(r"[^\w\- ]", "", m.group(1).strip().lower())
+            out.add(anchor.replace(" ", "-"))
+    return out
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    errors = []
+    for target in LINK.findall(md.read_text(encoding="utf-8")):
+        if target.startswith(("http://", "https://")):
+            if not URL.match(target):
+                errors.append(f"{md}: malformed URL {target!r}")
+            continue
+        if target.startswith("mailto:"):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md.resolve()
+        if not dest.exists():
+            errors.append(f"{md}: broken link {target!r} -> {dest}")
+            continue
+        if anchor and dest.suffix == ".md" and anchor not in headings(dest):
+            errors.append(f"{md}: missing anchor {target!r}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = [Path(a) for a in argv] or \
+        sorted(root.glob("*.md")) + sorted((root / "docs").glob("*.md"))
+    errors = []
+    for md in files:
+        errors += check_file(md, root)
+    for e in errors:
+        print(f"LINKCHECK FAIL: {e}")
+    print(f"# link check: {len(files)} files, "
+          f"{'FAILED' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
