@@ -65,6 +65,28 @@ def main():
                     dt / roots.size * 1e6,
                     f"TEPS={teps:.3e} speedup={base_s / dt:.2f}x")
 
+    # batched direction comparison: push SpMM vs the true batched pull sweep
+    # (slimsell_pull_mm; per-(row, column) early exit on pallas) vs the
+    # per-column auto switch, at one representative batch width
+    B = args.batches[-1]
+    for direction in ("push", "pull", "auto"):
+        multi_source_bfs(tiled, roots[:B], args.semiring, batch_size=B,
+                         backend=args.backend, direction=direction)
+        t0 = time.perf_counter()
+        res = multi_source_bfs(tiled, roots, args.semiring, batch_size=B,
+                               backend=args.backend, direction=direction)
+        dt = time.perf_counter() - t0
+        assert all(np.array_equal(res.distances[i], base_d[i])
+                   for i in range(roots.size)), \
+            f"direction={direction} != per-root"
+        teps, _ = _teps(csr, res.distances, dt, roots.size)
+        common.emit(f"multisource/B={B}/{direction}/{args.semiring}/"
+                    f"{args.backend}", dt / roots.size * 1e6,
+                    f"TEPS={teps:.3e}")
+        common.record(f"multisource/{direction}/{args.semiring}",
+                      teps=teps, batch=B, scale=args.scale,
+                      iterations=int(res.iterations.max()))
+
 
 if __name__ == "__main__":
     main()

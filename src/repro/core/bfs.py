@@ -19,24 +19,15 @@ tropical needs no filtering step but pays a float frontier; boolean has the
 narrowest payload but filters through the bitmap each iteration; sel-max is
 the only semiring whose result *is* the BFS tree (no DP post-pass), at the
 cost of two float vectors. The other three get parents from one sel-max DP
-sweep (``dp_transform``). The same engine knobs (``backend``, ``mode``,
-``direction``, ``slimwork``) mean the same thing in ``multi_bfs`` (batched
-SpMM), ``sssp`` (weighted min-plus) and ``cc`` (label propagation).
+sweep (``dp_transform``).
 
-Two execution modes:
-
-* ``mode="fused"`` — the whole BFS is one ``lax.while_loop`` on device.
-  SlimWork is expressed as a per-tile mask (correctness-preserving; on TPU the
-  Pallas kernel turns the mask into scalar-prefetch grid indirection so skipped
-  tiles issue no DMA, see kernels/slimsell_spmv.py). The fused mode is what the
-  multi-pod dry-run lowers. Under ``direction="auto"`` the Beamer heuristic
-  runs *inside* the while_loop carry and a ``lax.cond`` picks the push SpMV or
-  the pull sweep each iteration.
-
-* ``mode="hostloop"`` — the BFS loop runs on host and each iteration gathers
-  only the *active* tiles (bucketed to powers of two to bound retracing) before
-  invoking the jitted step. This performs real work-skipping on any backend and
-  is what the SlimWork + direction benchmarks measure (paper Fig. 5d).
+This module owns only the BFS *state algebra* — init, frontier/not-final
+bits, the per-semiring update, and the DP transform. The iteration itself
+(fused ``lax.while_loop``, hostloop with SlimWork tile gathering, or the
+2D-distributed strategy) lives in ``core.engine``; BFS is the spec
+``bfs_spec(semiring)`` over it, exactly like ``multi_bfs``/``sssp``/``cc``.
+The engine knobs (``backend``, ``mode``, ``direction``, ``slimwork``) mean
+the same thing everywhere.
 
 Directions (core.direction, paper §V / Beamer et al.):
 
@@ -52,8 +43,7 @@ All three give identical distances and valid (possibly different) parents.
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
+import functools
 from typing import Optional
 
 import jax
@@ -61,13 +51,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import direction as dm
+from . import engine as eng
 from . import semiring as sm
-from .spmv import resolve_backend, slimsell_pull, slimsell_spmv
+from .engine import DIRECTIONS, WORK_LOG, FixpointSpec  # noqa: F401 (re-export)
+from .options import MODES, check_choice
+from .spmv import resolve_backend
 
 Array = jax.Array
-WORK_LOG = 512  # max logged iterations
-
-DIRECTIONS = ("push", "pull", "auto")
 
 
 @dataclasses.dataclass
@@ -114,12 +104,14 @@ def _not_final(sr_name: str, state) -> Array:
     return state["p"] == 0.0
 
 
-def _chunk_active_from(nf: Array, row_vertex: Array) -> Array:
-    """bool[n_chunks] from precomputed not-final bits (SlimWork §III-C; the
-    pull direction's tile criterion)."""
-    safe = jnp.where(row_vertex < 0, 0, row_vertex)
-    per_row = jnp.where(row_vertex < 0, False, jnp.take(nf, safe, axis=0))
-    return per_row.any(axis=1)
+def _frontier_payload(sr_name: str, state) -> Array:
+    return state["x"] if sr_name == "selmax" else state["f"]
+
+
+def _ids1(y: Array) -> Array:
+    """1-based vertex ids shaped like the sweep result (sel-max payload)."""
+    ids = jnp.arange(y.shape[0], dtype=jnp.float32) + 1.0
+    return ids[:, None] if y.ndim == 2 else ids
 
 
 def semiring_update(sr_name: str, state, y: Array, k: Array, ids1: Array):
@@ -149,190 +141,9 @@ def semiring_update(sr_name: str, state, y: Array, k: Array, ids1: Array):
     raise ValueError(sr_name)
 
 
-def _step(sr_name: str, tiled, state, k: Array, tile_mask,
-          backend: str = "jnp"):
-    """One push (top-down) expansion; k is the 1-based iteration (== distance)."""
-    sr = sm.get(sr_name)
-    frontier = state["x"] if sr_name == "selmax" else state["f"]
-    y = slimsell_spmv(sr, tiled, frontier, tile_mask=tile_mask,
-                      backend=backend)
-    ids1 = jnp.arange(tiled.n, dtype=jnp.float32) + 1.0
-    return semiring_update(sr_name, state, y, k, ids1)
-
-
-def _pull_step(sr_name: str, tiled, state, k: Array, row_mask, tile_mask,
-               backend: str = "jnp"):
-    """One pull (bottom-up) sweep over the rows with ``row_mask`` set."""
-    sr = sm.get(sr_name)
-    frontier = state["x"] if sr_name == "selmax" else state["f"]
-    y = slimsell_pull(sr, tiled, frontier, row_mask=row_mask,
-                      tile_mask=tile_mask, backend=backend)
-    ids1 = jnp.arange(tiled.n, dtype=jnp.float32) + 1.0
-    return semiring_update(sr_name, state, y, k, ids1)
-
-
-# ---------------------------------------------------------------- DP transform
-
-
-def dp_transform(tiled, d: Array, root) -> Array:
-    """p = DP(d): for each v pick a neighbor w with d[w] == d[v]-1 (paper §II-C).
-
-    One SlimSell sweep under the sel-max semiring; O(m+n) work, O(1) depth.
-    """
-    pad = tiled.cols < 0
-    safe = jnp.where(pad, 0, tiled.cols)
-    d_nbr = jnp.take(d, safe, axis=0)                       # [T, C, L]
-    rv_tile = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)  # [T, C]
-    rv_safe = jnp.where(rv_tile < 0, 0, rv_tile)
-    d_row = jnp.take(d, rv_safe, axis=0)[:, :, None]
-    ok = (~pad) & (d_row > 0) & (d_nbr == d_row - 1) & (d_nbr >= 0)
-    cand = jnp.where(ok, safe + 1, 0)
-    sr = sm.SELMAX
-    tile_red = cand.max(axis=-1)
-    y_blocks = jax.ops.segment_max(tile_red, tiled.row_block, num_segments=tiled.n_chunks)
-    rv = tiled.row_vertex.reshape(-1)
-    ids = jnp.where(rv < 0, tiled.n, rv)
-    p1 = jax.ops.segment_max(y_blocks.reshape(-1), ids, num_segments=tiled.n + 1)[: tiled.n]
-    p = p1.astype(jnp.int32) - 1
-    return p.at[root].set(root)
-
-
-# -------------------------------------------------------------------- fused
-
-
-@partial(jax.jit, static_argnames=("sr_name", "slimwork", "max_iters",
-                                   "log_work", "backend", "direction"))
-def _bfs_fused(tiled, root, *, sr_name: str, slimwork: bool,
-               max_iters: int, log_work: bool, backend: str = "jnp",
-               direction: str = "push"):
-    n = tiled.n
-    state = _init_state(sr_name, n, root)
-    work = jnp.zeros((WORK_LOG,), jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
-    dirs = jnp.full((WORK_LOG,), -1, jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
-    use_push = direction in ("push", "auto")
-    d0 = jnp.asarray(dm.PULL if direction == "pull" else dm.PUSH, jnp.int32)
-
-    def cond(carry):
-        _, k, changed, _, _, _ = carry
-        return changed & (k <= max_iters)
-
-    def body(carry):
-        state, k, _, work, dcur, dirs = carry
-        nf_rows = _not_final(sr_name, state)
-        fbits = dm.frontier_bits(sr_name, state, k) if use_push else None
-        if direction == "auto":
-            mf, mu, nnz_f = dm.edge_counts(tiled.deg, fbits, nf_rows)
-            dnext = dm.choose_direction(dcur, mf, mu, nnz_f, n)
-        else:
-            dnext = dcur
-
-        # the tile masks are built INSIDE the branches so the untaken
-        # direction's mask is never materialized (lax.cond operands would be
-        # evaluated eagerly every iteration otherwise); each branch returns
-        # its active-tile count for the work log
-        n_tiles_c = jnp.asarray(tiled.cols.shape[0], jnp.int32)
-
-        def push_fn(state):
-            mask = dm.push_tile_mask(tiled, fbits) if slimwork else None
-            state, changed = _step(sr_name, tiled, state, k, mask, backend)
-            used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
-            return state, changed, used
-
-        def pull_fn(state):
-            mask = None
-            if slimwork:
-                active = _chunk_active_from(nf_rows, tiled.row_vertex)
-                mask = jnp.take(active, tiled.row_block, axis=0)
-            state, changed = _pull_step(sr_name, tiled, state, k, nf_rows,
-                                        mask, backend)
-            used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
-            return state, changed, used
-
-        if direction == "push":
-            state, changed, used = push_fn(state)
-        elif direction == "pull":
-            state, changed, used = pull_fn(state)
-        else:
-            state, changed, used = jax.lax.cond(dnext == dm.PUSH, push_fn,
-                                                pull_fn, state)
-        if log_work:
-            idx = jnp.minimum(k - 1, WORK_LOG - 1)
-            dirs = dirs.at[idx].set(dnext)
-            if slimwork:
-                work = work.at[idx].set(used)
-        return state, k + 1, changed, work, dnext, dirs
-
-    state, k, _, work, _, dirs = jax.lax.while_loop(
-        cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True),
-                     work, d0, dirs))
-    return state, k - 1, work, dirs
-
-
-# ------------------------------------------------------------------ hostloop
-
-
-@dataclasses.dataclass
-class _SubsetTiled:
-    """Duck-typed SlimSellTiled view over a compacted tile set.
-
-    ``wts`` rides along only for the weighted (SSSP) subset steps; the BFS
-    and CC steps leave it None.
-    """
-    cols: Array
-    row_block: Array
-    row_vertex: Array
-    n: int
-    n_chunks: int
-    wts: Optional[Array] = None
-
-
-jax.tree_util.register_pytree_node(
-    _SubsetTiled,
-    lambda t: ((t.cols, t.row_block, t.row_vertex, t.wts), (t.n, t.n_chunks)),
-    lambda aux, ch: _SubsetTiled(cols=ch[0], row_block=ch[1],
-                                 row_vertex=ch[2], n=aux[0], n_chunks=aux[1],
-                                 wts=ch[3]),
-)
-
-
-@partial(jax.jit, static_argnames=("sr_name", "n_active", "n", "n_chunks",
-                                   "backend"))
-def _subset_step(sr_name: str, tiled_cols, tiled_row_block, row_vertex,
-                 n: int, n_chunks: int, tile_ids, n_active: int, state, k,
-                 backend: str = "jnp"):
-    """Gather the active tiles (bucketed size) and run one step on them only."""
-    ids = tile_ids[:n_active]
-    sub = _SubsetTiled(
-        cols=jnp.take(tiled_cols, ids, axis=0),
-        row_block=jnp.take(tiled_row_block, ids, axis=0),
-        row_vertex=row_vertex, n=n, n_chunks=n_chunks,
-    )
-    return _step(sr_name, sub, state, k, None, backend)
-
-
-@partial(jax.jit, static_argnames=("sr_name", "n_active", "n", "n_chunks",
-                                   "backend"))
-def _subset_pull_step(sr_name: str, tiled_cols, tiled_row_block, row_vertex,
-                      n: int, n_chunks: int, tile_ids, n_active: int, state,
-                      k, backend: str = "jnp"):
-    """Pull variant of ``_subset_step``: bottom-up sweep over active tiles.
-
-    The not-final row mask is derived from ``state`` inside the jit so the
-    host loop ships no extra operands.
-    """
-    ids = tile_ids[:n_active]
-    sub = _SubsetTiled(
-        cols=jnp.take(tiled_cols, ids, axis=0),
-        row_block=jnp.take(tiled_row_block, ids, axis=0),
-        row_vertex=row_vertex, n=n, n_chunks=n_chunks,
-    )
-    return _pull_step(sr_name, sub, state, k, _not_final(sr_name, state),
-                      None, backend)
-
-
-# host-side (numpy) twins of the mask/heuristic helpers: the hostloop engine
-# decides direction and gathers active tiles on host, so doing this math in
-# numpy avoids ~20 device dispatches per BFS iteration
+# host-side (numpy) twin of the bit extractors: the hostloop engine decides
+# direction and gathers active tiles on host, so doing this math in numpy
+# avoids ~20 device dispatches per BFS iteration
 
 
 def _host_direction_bits(sr_name: str, state, k: int, *, need_nf: bool,
@@ -356,34 +167,71 @@ def _host_direction_bits(sr_name: str, state, k: int, *, need_nf: bool,
     return nf, fb
 
 
-def _bucket(x: int) -> int:
-    return 1 if x <= 1 else 2 ** math.ceil(math.log2(x))
+# ----------------------------------------------------------------------- spec
 
 
-def _push_tile_mask_host(active_cols: np.ndarray, inc_src_np: np.ndarray,
-                         inc_tile_np: np.ndarray, n_tiles: int) -> np.ndarray:
-    """Host twin of ``direction.push_tile_mask``: bool[T] of the tiles
-    holding ≥1 active column, via the push index."""
-    tmask = np.zeros(n_tiles, bool)
-    tmask[inc_tile_np[active_cols[inc_src_np]]] = True
-    return tmask
+@functools.lru_cache(maxsize=None)
+def bfs_spec(sr_name: str) -> FixpointSpec:
+    """Single-source BFS as a fixpoint spec (one spec per semiring; cached
+    so the engine's jit caches key on a stable object)."""
+
+    def host_bits(state, k, need_sb, need_nf):
+        nf, fb = _host_direction_bits(sr_name, state, int(k),
+                                      need_nf=need_nf, need_fb=need_sb)
+        return fb, nf
+
+    return FixpointSpec(
+        name=f"bfs/{sr_name}",
+        sr_name=sr_name,
+        directions=DIRECTIONS,
+        init_state=lambda n, root, ctx: _init_state(sr_name, n, root),
+        frontier=lambda ctx, state, k: _frontier_payload(sr_name, state),
+        source_bits=lambda ctx, state, k: dm.frontier_bits(sr_name, state, k),
+        not_final=lambda ctx, state: _not_final(sr_name, state),
+        update=lambda ctx, state, y, k: semiring_update(sr_name, state, y, k,
+                                                        _ids1(y)),
+        host_bits=host_bits,
+    )
 
 
-def _pad_tile_ids(ids: np.ndarray, n_tiles: int):
-    """SlimWork hostloop compaction: bucket the active-tile count to a power
-    of two (bounds jit retracing) and pad with repeats of the LAST id — the
-    tail then stays on the final output block, so the pallas kernel's
-    first-visit re-init never revisits an earlier block. Shared by the BFS,
-    SSSP and CC hostloop engines; returns (padded ids, bucket size)."""
-    bucket = min(_bucket(ids.size), n_tiles)
-    ids_p = np.zeros(bucket, np.int32)
-    ids_p[: ids.size] = ids
-    if ids.size < bucket:
-        ids_p[ids.size:] = ids[-1]
-    return ids_p, bucket
+# ---------------------------------------------------------------- DP transform
+
+
+def dp_transform(tiled, d: Array, root) -> Array:
+    """p = DP(d): for each v pick a neighbor w with d[w] == d[v]-1 (paper §II-C).
+
+    One SlimSell sweep under the sel-max semiring; O(m+n) work, O(1) depth.
+    """
+    pad = tiled.cols < 0
+    safe = jnp.where(pad, 0, tiled.cols)
+    d_nbr = jnp.take(d, safe, axis=0)                       # [T, C, L]
+    rv_tile = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)  # [T, C]
+    rv_safe = jnp.where(rv_tile < 0, 0, rv_tile)
+    d_row = jnp.take(d, rv_safe, axis=0)[:, :, None]
+    ok = (~pad) & (d_row > 0) & (d_nbr == d_row - 1) & (d_nbr >= 0)
+    cand = jnp.where(ok, safe + 1, 0)
+    tile_red = cand.max(axis=-1)
+    y_blocks = jax.ops.segment_max(tile_red, tiled.row_block, num_segments=tiled.n_chunks)
+    rv = tiled.row_vertex.reshape(-1)
+    ids = jnp.where(rv < 0, tiled.n, rv)
+    p1 = jax.ops.segment_max(y_blocks.reshape(-1), ids, num_segments=tiled.n + 1)[: tiled.n]
+    p = p1.astype(jnp.int32) - 1
+    return p.at[root].set(root)
 
 
 # ----------------------------------------------------------------- public API
+
+
+def _check_bfs_options(fn_name: str, semiring: str, direction: str,
+                       mode: Optional[str] = None):
+    """Shared entry validation for the BFS-family front doors."""
+    if semiring not in sm.BFS_SEMIRINGS:
+        raise KeyError(f"{fn_name} supports {sm.BFS_SEMIRINGS}, got "
+                       f"{semiring!r} (minplus is the weighted operator — "
+                       "see core.sssp)")
+    check_choice("direction", direction, DIRECTIONS)
+    if mode is not None:
+        check_choice("mode", mode, MODES)
 
 
 def bfs(tiled, root: int, semiring: str = "tropical", *,
@@ -406,11 +254,7 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
     trace is returned in ``BFSResult.directions`` when ``log_work`` is set or
     ``mode="hostloop"``).
     """
-    if semiring not in sm.BFS_SEMIRINGS:
-        raise KeyError(f"bfs supports {sm.BFS_SEMIRINGS}, got {semiring!r} "
-                       "(minplus is the weighted operator — see core.sssp)")
-    if direction not in DIRECTIONS:
-        raise ValueError(f"unknown direction {direction!r}; available: {DIRECTIONS}")
+    _check_bfs_options("bfs", semiring, direction, mode)
     backend = resolve_backend(backend)
     if direction in ("push", "auto") and slimwork \
             and getattr(tiled, "inc_src", None) is None:
@@ -419,83 +263,18 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
     n = tiled.n
     max_iters = int(max_iters) if max_iters is not None else n
     root = jnp.asarray(root, jnp.int32)
-    dirs_out = None
+    spec = bfs_spec(semiring)
 
     if mode == "fused":
-        state, iters, work, dirs = _bfs_fused(
-            tiled, root, sr_name=semiring, slimwork=slimwork,
-            max_iters=max_iters, log_work=log_work, backend=backend,
-            direction=direction)
-        iters = int(iters)
-        if log_work:
-            dirs_out = np.asarray(dirs)[:iters]
-        elif direction != "auto":
-            dirs_out = np.full(
-                iters, dm.PULL if direction == "pull" else dm.PUSH, np.int32)
-    elif mode == "hostloop":
-        state = _init_state(semiring, n, root)
-        k, iters = 1, 0
-        work_list, dir_list = [], []
-        n_tiles = int(tiled.n_tiles)
-        dcur = dm.PULL if direction == "pull" else dm.PUSH
-        # host copies of the layout metadata the per-iteration masks need
-        rv_np = np.asarray(tiled.row_vertex)
-        rv_safe_np = np.where(rv_np < 0, 0, rv_np)
-        rb_np = np.asarray(tiled.row_block)
-        deg_np = np.asarray(tiled.deg, np.float64)
-        use_push = direction in ("push", "auto")
-        if use_push and slimwork:
-            inc_src_np = np.asarray(tiled.inc_src)
-            inc_tile_np = np.asarray(tiled.inc_tile)
-        while k <= max_iters:
-            # only materialize the bit vectors this direction's masks and
-            # heuristic actually read (each costs a device sync per iteration)
-            nf, fbits = _host_direction_bits(
-                semiring, state, k,
-                need_nf=direction != "push",
-                need_fb=use_push)
-            if direction == "auto":
-                dcur = dm.choose_direction_host(
-                    dcur, float(deg_np[fbits].sum()), float(deg_np[nf].sum()),
-                    float(fbits.sum()), n)
-            if slimwork:
-                if dcur == dm.PUSH:
-                    tmask = _push_tile_mask_host(fbits, inc_src_np,
-                                                 inc_tile_np, n_tiles)
-                else:
-                    chunk_act = (nf[rv_safe_np] & (rv_np >= 0)).any(axis=1)
-                    tmask = chunk_act[rb_np]
-                ids = np.nonzero(tmask)[0]
-                if ids.size == 0:
-                    break
-                work_list.append(ids.size)
-                dir_list.append(dcur)
-                ids_p, bucket = _pad_tile_ids(ids, n_tiles)
-                step_fn = _subset_step if dcur == dm.PUSH else _subset_pull_step
-                state, changed = step_fn(
-                    semiring, tiled.cols, tiled.row_block, tiled.row_vertex,
-                    n, tiled.n_chunks, jnp.asarray(ids_p), bucket,
-                    state, jnp.asarray(k, jnp.int32), backend)
-            else:
-                work_list.append(n_tiles)
-                dir_list.append(dcur)
-                if dcur == dm.PUSH:
-                    state, changed = _step(semiring, tiled, state,
-                                           jnp.asarray(k, jnp.int32), None,
-                                           backend)
-                else:
-                    state, changed = _pull_step(
-                        semiring, tiled, state, jnp.asarray(k, jnp.int32),
-                        _not_final(semiring, state), None, backend)
-            iters = k
-            k += 1
-            if not bool(changed):
-                break
-        work = np.asarray(work_list, np.int32)
-        dirs_out = np.asarray(dir_list, np.int32)
+        res = eng.run_fused(spec, tiled, root, slimwork=slimwork,
+                            max_iters=max_iters, log_work=log_work,
+                            backend=backend, direction=direction)
     else:
-        raise ValueError(mode)
+        res = eng.run_hostloop(spec, tiled, root, slimwork=slimwork,
+                               max_iters=max_iters, backend=backend,
+                               direction=direction)
 
+    state, iters = res.state, res.iterations
     d = np.asarray(state["d"])
     parents = None
     if need_parents:
@@ -504,6 +283,6 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
             parents[int(root)] = int(root)
         else:
             parents = np.asarray(dp_transform(tiled, jnp.asarray(d), root))
-    wl = np.asarray(work) if (log_work or mode == "hostloop") else None
+    wl = res.work_log if (log_work or mode == "hostloop") else None
     return BFSResult(distances=d, parents=parents, iterations=iters,
-                     work_log=wl, directions=dirs_out)
+                     work_log=wl, directions=res.dirs_log)

@@ -11,12 +11,10 @@ already uses:
       x'[v] = max( x[v],  max_u A[v,u] * x[u] ),
 
   converging in O(component diameter) sweeps to "every vertex holds the max
-  vertex id of its component". SlimWork applies exactly as in BFS: the
-  frontier is the set of vertices whose label changed last sweep, and only
-  the tiles holding a changed column are touched (push-index mask on jnp,
-  scalar-prefetch grid indirection on pallas). ``mode="fused"`` runs the
-  fixpoint as one ``lax.while_loop``; ``mode="hostloop"`` gathers active
-  tiles on host per sweep.
+  vertex id of its component". It is the spec ``CC_SPEC`` over
+  ``core.engine``: the frontier is the set of vertices whose label changed
+  last sweep, SlimWork selects only the tiles holding a changed column, and
+  the fused / hostloop / 2D-distributed strategies all come from the engine.
 
 * ``semiring="boolean"`` — **reachability peeling**: repeatedly run a boolean
   BFS from the lowest unlabeled vertex and stamp everything it reaches.
@@ -31,18 +29,17 @@ backends and modes.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import direction as dm
-from . import semiring as sm
-from .bfs import (WORK_LOG, _SubsetTiled, _pad_tile_ids,
-                  _push_tile_mask_host, bfs)
-from .spmv import resolve_backend, slimsell_spmv
+from . import engine as eng
+from .bfs import bfs
+from .engine import FixpointSpec
+from .options import MODES, check_choice
+from .spmv import resolve_backend
 
 Array = jax.Array
 
@@ -60,80 +57,29 @@ class CCResult:
 # ------------------------------------------------------- sel-max label prop
 
 
-@partial(jax.jit, static_argnames=("slimwork", "max_iters", "log_work",
-                                   "backend"))
-def _cc_fused(tiled, *, slimwork: bool, max_iters: int, log_work: bool,
-              backend: str):
-    n = tiled.n
-    x0 = jnp.arange(1, n + 1, dtype=jnp.float32)   # 1-based own-id labels
-    changed0 = jnp.ones((n,), bool)
-    work0 = jnp.zeros((WORK_LOG,) if log_work else (1,), jnp.int32)
-    n_tiles_c = jnp.asarray(tiled.cols.shape[0], jnp.int32)
-
-    def cond(carry):
-        _, changed, k, _ = carry
-        return jnp.any(changed) & (k < max_iters)
-
-    def body(carry):
-        x, changed, k, work = carry
-        mask = dm.push_tile_mask(tiled, changed) if slimwork else None
-        y = slimsell_spmv(sm.SELMAX, tiled, x, tile_mask=mask, backend=backend)
-        x_new = jnp.maximum(x, y)
-        if log_work:
-            used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
-            work = work.at[jnp.minimum(k, WORK_LOG - 1)].set(used)
-        return x_new, x_new > x, k + 1, work
-
-    x, _, k, work = jax.lax.while_loop(
-        cond, body, (x0, changed0, jnp.asarray(0, jnp.int32), work0))
-    return x, k, work
+def _cc_init(n: int, arg, ctx):
+    return {"x": jnp.arange(1, n + 1, dtype=jnp.float32),  # 1-based own ids
+            "changed": jnp.ones((n,), bool)}
 
 
-@partial(jax.jit, static_argnames=("n_active", "n", "n_chunks", "backend"))
-def _cc_subset_step(tiled_cols, tiled_row_block, row_vertex, n: int,
-                    n_chunks: int, tile_ids, n_active: int, x, backend: str):
-    ids = tile_ids[:n_active]
-    sub = _SubsetTiled(
-        cols=jnp.take(tiled_cols, ids, axis=0),
-        row_block=jnp.take(tiled_row_block, ids, axis=0),
-        row_vertex=row_vertex, n=n, n_chunks=n_chunks,
-    )
-    y = slimsell_spmv(sm.SELMAX, sub, x, backend=backend)
-    x_new = jnp.maximum(x, y)
-    return x_new, x_new > x
+def _cc_update(ctx, state, y: Array, k):
+    x_new = jnp.maximum(state["x"], y)
+    changed = x_new > state["x"]
+    return {"x": x_new, "changed": changed}, jnp.any(changed)
 
 
-def _cc_labelprop_hostloop(tiled, *, slimwork: bool, max_iters: int,
-                           backend: str):
-    n = tiled.n
-    n_tiles = int(tiled.n_tiles)
-    x = jnp.arange(1, n + 1, dtype=jnp.float32)
-    changed = np.ones(n, bool)
-    inc_src_np = np.asarray(tiled.inc_src)
-    inc_tile_np = np.asarray(tiled.inc_tile)
-    k = 0
-    work_list: list[int] = []
-    while changed.any() and k < max_iters:
-        if slimwork:
-            tmask = _push_tile_mask_host(changed, inc_src_np, inc_tile_np,
-                                         n_tiles)
-            ids = np.nonzero(tmask)[0]
-            if ids.size == 0:
-                break
-            work_list.append(ids.size)
-            ids_p, bucket = _pad_tile_ids(ids, n_tiles)
-            x, changed_dev = _cc_subset_step(
-                tiled.cols, tiled.row_block, tiled.row_vertex, n,
-                tiled.n_chunks, jnp.asarray(ids_p), bucket, x, backend)
-        else:
-            work_list.append(n_tiles)
-            y = slimsell_spmv(sm.SELMAX, tiled, x, backend=backend)
-            x_new = jnp.maximum(x, y)
-            changed_dev = x_new > x
-            x = x_new
-        changed = np.asarray(changed_dev)
-        k += 1
-    return x, k, np.asarray(work_list, np.int32)
+CC_SPEC = FixpointSpec(
+    name="cc/labelprop",
+    sr_name="selmax",
+    directions=("push",),
+    init_state=_cc_init,
+    frontier=lambda ctx, state, k: state["x"],
+    source_bits=lambda ctx, state, k: state["changed"],
+    not_final=lambda ctx, state: state["changed"],
+    update=_cc_update,
+    host_bits=lambda state, k, need_sb, need_nf:
+        (np.asarray(state["changed"]), None),
+)
 
 
 # --------------------------------------------------------- boolean peeling
@@ -149,7 +95,6 @@ def _cc_boolean(tiled, *, mode: str, backend: str, slimwork: bool,
     isolated = np.nonzero(np.asarray(tiled.deg) == 0)[0]
     labels[isolated] = isolated
     iters = 0
-    seed = 0
     while True:
         unlabeled = np.nonzero(labels < 0)[0]
         if unlabeled.size == 0:
@@ -175,9 +120,8 @@ def cc(tiled, *, semiring: str = "selmax", slimwork: bool = True,
     "boolean" (one boolean BFS per component — wins on few large components).
     mode/backend/slimwork: same engine knobs as ``bfs`` / ``sssp``.
     """
-    if semiring not in CC_SEMIRINGS:
-        raise ValueError(f"unknown cc semiring {semiring!r}; "
-                         f"available: {CC_SEMIRINGS}")
+    check_choice("cc semiring", semiring, CC_SEMIRINGS)
+    check_choice("mode", mode, MODES)
     backend = resolve_backend(backend)
     if slimwork and getattr(tiled, "inc_src", None) is None:
         raise ValueError("SlimWork masks need the push index; rebuild the "
@@ -197,18 +141,15 @@ def cc(tiled, *, semiring: str = "selmax", slimwork: bool = True,
         return CCResult(labels=labels, n_components=len(np.unique(labels)),
                         iterations=iters)
 
+    arg = jnp.asarray(0, jnp.int32)  # label prop has no root
     if mode == "fused":
-        x, k, work = _cc_fused(tiled, slimwork=slimwork, max_iters=cap,
-                               log_work=log_work, backend=backend)
-        wl = np.asarray(work)[: int(k)] if log_work else None
-    elif mode == "hostloop":
-        x, k, wl = _cc_labelprop_hostloop(tiled, slimwork=slimwork,
-                                          max_iters=cap, backend=backend)
-        if not log_work:
-            wl = None
+        res = eng.run_fused(CC_SPEC, tiled, arg, slimwork=slimwork,
+                            max_iters=cap, log_work=log_work, backend=backend)
     else:
-        raise ValueError(mode)
-    labels = np.asarray(x).astype(np.int64) - 1  # back to 0-based vertex ids
+        res = eng.run_hostloop(CC_SPEC, tiled, arg, slimwork=slimwork,
+                               max_iters=cap, backend=backend)
+    wl = res.work_log if log_work else None
+    labels = np.asarray(res.state["x"]).astype(np.int64) - 1  # 0-based ids
     return CCResult(labels=labels.astype(np.int32),
                     n_components=len(np.unique(labels)),
-                    iterations=int(k), work_log=wl)
+                    iterations=res.iterations, work_log=wl)

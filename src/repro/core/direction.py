@@ -29,9 +29,14 @@ whenever the frontier still dominates the unexplored edges keeps the tail
 iterations on the cheaper side (measured by benchmarks/bench_direction.py).
 
 All functions are shape-polymorphic over a trailing batch axis so the
-single-source engine (bits [n]) and the multi-source engine (bits [n, B],
-per-column direction state) share them, and they work both traced (inside a
-``lax.while_loop`` carry) and on host scalars (the hostloop engine).
+single-source specs (bits [n]) and the batched multi-source spec (bits
+[n, B], per-column direction state) share them, and they work both traced
+(inside a ``lax.while_loop`` carry or a ``shard_map`` body — the
+distributed strategy evaluates the heuristic on replicated state) and on
+host scalars. The consumer is ``core.engine``: ``run_fused`` keeps the
+direction in the carry and `lax.cond`s between the sweeps,
+``run_hostloop`` uses the ``_host`` twins plus the frontier-walk mask
+build over ``inc_ptr``, and ``dist_step`` branches the local sweep.
 """
 from __future__ import annotations
 

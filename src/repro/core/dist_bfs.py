@@ -1,45 +1,70 @@
-"""Distributed 2D algebraic BFS (DESIGN.md §3; Buluç–Madduri [9] layout).
+"""Distributed 2D algebraic traversal (DESIGN.md §3; Buluç–Madduri [9] layout).
 
 The adjacency is partitioned 2D: chunk rows over the mesh row axes
 (``pod`` × ``data``) and vertex columns over the mesh column axis (``model``).
 Each device owns the SlimSell tiles of its (row-range, column-range) block,
 with column indices *localized* to its column range.
 
-One BFS iteration on device (i, j):
-  1. local SlimSell-SpMV over the owned tiles, gathering from the local
-     frontier slice x_j (no communication),
-  2. scatter partial y into a full-length vector via global row ids,
-  3. semiring all-reduce of y over (row_axes + col_axes)  [baseline], or
-     semiring reduce along ``model`` + all-gather along rows [optimized,
-     see EXPERIMENTS.md §Perf],
-  4. replicated state update (identical math to the single-device engine).
+Since PR 4 the distributed loop is the third strategy of the shared fixpoint
+engine (``core.engine``): **any** ``FixpointSpec`` — single-source BFS,
+batched multi-source BFS, flattened delta-stepping SSSP, CC label
+propagation — runs over the 2D partition with no per-algorithm distributed
+code. One iteration on device (i, j):
 
-``partition_slimsell`` builds real data for tests; the dry-run lowers the same
-``dist_bfs_step``/``dist_bfs`` with ShapeDtypeStructs only.
+  1. local sweep over the owned tiles via the ordinary ``slimsell_spmv`` /
+     ``slimsell_pull`` / ``slimsell_spmm`` primitives (the local layout is a
+     duck-typed tiled view whose *global* ``row_vertex`` ids scatter straight
+     into full vertex space; no communication),
+  2. semiring all-reduce of y over (col_axes + row_axes)  [baseline], or
+     semiring reduce along ``model`` + row-axis combine [``reduce_gather``],
+  3. the spec's own replicated state update — identical math to the
+     single-device engine.
+
+``direction="pull"`` masks the local sweep to the shard's not-final rows
+(SlimWork's tile criterion on the local ``row_vertex``) — the "local row
+sweep + row-axis gather" decomposition; ``"auto"`` runs the replicated
+Beamer heuristic and a ``lax.cond`` picks per iteration.
+
+``partition_slimsell`` builds real data for tests (carrying per-slot
+weights and the degree vector when the CSR has them); the dry-run lowers the
+same factories with ShapeDtypeStructs only. ``make_dist_bfs_sliced`` is the
+separately-tuned slot-space BFS hillclimb (frontier slices + grid-transpose
+exchange) and bypasses the generic engine.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
-from . import semiring as sm
+from . import engine as eng
+from .bfs import bfs_spec
+from .cc import CC_SPEC
+from .engine import DIRECTIONS, WORK_LOG, FixpointSpec
 from .formats import CSRGraph, sellcs_order
+from .multi_bfs import multi_bfs_spec
+from .options import COMMS, check_choice
 from .spmv import resolve_backend
+from .sssp import SSSP_SPEC
 
 Array = jax.Array
 
 
 @dataclasses.dataclass
 class DistSlimSell:
-    """2D-partitioned SlimSell. Leading [R, Co] axes are the device grid."""
+    """2D-partitioned SlimSell. Leading [R, Co] axes are the device grid.
+
+    ``wts`` (the SlimSell-W weight slots, aligned with ``cols``) and ``deg``
+    (the replicated degree vector the direction heuristic reads) exist only
+    when the source CSR carries them / they are needed; both default None so
+    ShapeDtypeStruct-only metas keep lowering.
+    """
     n: int
     C: int
     L: int
@@ -51,10 +76,12 @@ class DistSlimSell:
     cols: np.ndarray        # int32[R, Co, T, C, L] localized (-1 pad)
     row_block: np.ndarray   # int32[R, Co, T] chunk index *within shard*
     row_vertex: np.ndarray  # int32[R, chunks_per_shard, C] global vertex ids
+    wts: Optional[np.ndarray] = None  # float32[R, Co, T, C, L] slot weights
+    deg: Optional[np.ndarray] = None  # int64[n] degree vector (replicated)
 
 
 def _tiled_flatten(t):
-    return (t.cols, t.row_block, t.row_vertex), (
+    return (t.cols, t.row_block, t.row_vertex, t.wts, t.deg), (
         t.n, t.C, t.L, t.R, t.Co, t.n_col, t.chunks_per_shard, t.t_max)
 
 
@@ -62,7 +89,8 @@ def _tiled_unflatten(aux, ch):
     n, C, L, R, Co, n_col, cps, t_max = aux
     return DistSlimSell(n=n, C=C, L=L, R=R, Co=Co, n_col=n_col,
                         chunks_per_shard=cps, t_max=t_max,
-                        cols=ch[0], row_block=ch[1], row_vertex=ch[2])
+                        cols=ch[0], row_block=ch[1], row_vertex=ch[2],
+                        wts=ch[3], deg=ch[4])
 
 
 jax.tree_util.register_pytree_node(DistSlimSell, _tiled_flatten, _tiled_unflatten)
@@ -73,6 +101,11 @@ def partition_slimsell(csr: CSRGraph, R: int, Co: int, *, C: int = 8,
                        slot_space: bool = False) -> DistSlimSell:
     """Host-side 2D partition of the SlimSell layout.
 
+    If the CSR carries weights, the partition also carries the per-slot
+    ``wts`` blocks (localized in lockstep with ``cols``) so the weighted
+    min-plus operators (distributed SSSP) run over it. ``deg`` always rides
+    along for the direction heuristic.
+
     slot_space=True renumbers vertices by their sorted-row slot (the
     optimized layout, EXPERIMENTS.md §Perf): row shard i then owns the
     *contiguous* slot range [i·cps·C, (i+1)·cps·C), which turns the frontier
@@ -81,6 +114,7 @@ def partition_slimsell(csr: CSRGraph, R: int, Co: int, *, C: int = 8,
     ids for the final un-permutation.
     """
     n, deg = csr.n, csr.deg
+    weighted = csr.weights is not None
     sigma = n if sigma is None else max(1, min(int(sigma), n))
     perm = sellcs_order(deg, sigma)
     inv_perm = np.empty(n, np.int64)
@@ -91,43 +125,53 @@ def partition_slimsell(csr: CSRGraph, R: int, Co: int, *, C: int = 8,
     n_col = math.ceil(n_pad / Co)
 
     row_vertex = np.full((R, cps, C), -1, np.int32)
-    per_shard_tiles: list[list[list[tuple[int, np.ndarray]]]] = [
+    per_shard_tiles: list[list[list[tuple]]] = [
         [[] for _ in range(Co)] for _ in range(R)]
 
     for c in range(n_chunks):
         i = c // cps
         c_local = c % cps
-        rows = []
+        rows, wrows = [], []
         for r in range(C):
             row = c * C + r
             v = int(perm[row]) if row < n else -1
             row_vertex[i, c_local, r] = v
-            nbr = (csr.indices[csr.indptr[v]:csr.indptr[v + 1]]
-                   if v >= 0 else np.empty(0, np.int32))
+            s, e = (csr.indptr[v], csr.indptr[v + 1]) if v >= 0 else (0, 0)
+            nbr = csr.indices[s:e] if v >= 0 else np.empty(0, np.int32)
+            wrows.append(csr.weights[s:e] if weighted else None)
             if slot_space and nbr.size:
                 nbr = inv_perm[nbr].astype(np.int32)
             rows.append(nbr)
         for j in range(Co):
             lo, hi = j * n_col, (j + 1) * n_col
-            parts = [r[(r >= lo) & (r < hi)] - lo for r in rows]
+            masks = [(r >= lo) & (r < hi) for r in rows]
+            parts = [r[m] - lo for r, m in zip(rows, masks)]
             length = max((p.size for p in parts), default=0)
             if length == 0:
                 continue
             width = math.ceil(length / L) * L
             buf = np.full((C, width), -1, np.int32)
+            buf_w = np.zeros((C, width), np.float32) if weighted else None
             for r, p in enumerate(parts):
                 buf[r, :p.size] = p
+                if weighted:
+                    buf_w[r, :p.size] = wrows[r][masks[r]]
             for t0 in range(0, width, L):
-                per_shard_tiles[i][j].append((c_local, buf[:, t0:t0 + L]))
+                per_shard_tiles[i][j].append(
+                    (c_local, buf[:, t0:t0 + L],
+                     buf_w[:, t0:t0 + L] if weighted else None))
 
     t_max = max(1, max(len(per_shard_tiles[i][j]) for i in range(R) for j in range(Co)))
     cols = np.full((R, Co, t_max, C, L), -1, np.int32)
+    wts = np.zeros((R, Co, t_max, C, L), np.float32) if weighted else None
     row_block = np.zeros((R, Co, t_max), np.int32)
     for i in range(R):
         for j in range(Co):
-            for t, (cl, buf) in enumerate(per_shard_tiles[i][j]):
+            for t, (cl, buf, bw) in enumerate(per_shard_tiles[i][j]):
                 cols[i, j, t] = buf
                 row_block[i, j, t] = cl
+                if weighted:
+                    wts[i, j, t] = bw
             # padding tiles (all cols == -1) keep the last real chunk id so
             # grid order stays non-decreasing: the pallas kernel re-inits an
             # output block on every chunk-block change, and a tail that
@@ -137,7 +181,8 @@ def partition_slimsell(csr: CSRGraph, R: int, Co: int, *, C: int = 8,
                 row_block[i, j, n_real:] = per_shard_tiles[i][j][-1][0]
     return DistSlimSell(n=n, C=C, L=L, R=R, Co=Co, n_col=n_col,
                         chunks_per_shard=cps, t_max=t_max, cols=cols,
-                        row_block=row_block, row_vertex=row_vertex)
+                        row_block=row_block, row_vertex=row_vertex,
+                        wts=wts, deg=deg)
 
 
 # ------------------------------------------------ optimized sliced exchange
@@ -234,123 +279,178 @@ def make_dist_bfs_sliced(mesh: Mesh, meta: DistSlimSell, *,
     return jax.jit(sharded)
 
 
-# ------------------------------------------------------------------ device code
+# --------------------------------------------- generic engine-backed runner
 
 
-def _local_spmv(sr: sm.Semiring, cols, row_block, row_vertex, x_local, n: int,
-                cps: int, backend: str = "jnp"):
-    """SpMV over this device's tiles; returns full-length partial y."""
-    if backend == "pallas":
-        from repro.kernels.slimsell_spmv import slimsell_spmv_pallas
-        T = cols.shape[0]
-        y_blocks = slimsell_spmv_pallas(
-            cols, jnp.arange(T, dtype=jnp.int32), row_block,
-            jnp.asarray([T], jnp.int32), x_local.astype(sr.dtype),
-            sr_name=sr.name, n_chunks=cps,
-            interpret=jax.default_backend() != "tpu")[:cps]
-        # chunks with no tiles in this column shard are never visited by the
-        # kernel grid and hold garbage; mask them to the semiring zero (the
-        # jnp segment_reduce below does this implicitly)
-        covered = jax.ops.segment_max(jnp.ones_like(row_block), row_block,
-                                      num_segments=cps) > 0
-        y_blocks = jnp.where(covered[:, None], y_blocks,
-                             jnp.asarray(sr.zero, y_blocks.dtype))
-        rv = row_vertex.reshape(-1)
-        ids = jnp.where(rv < 0, n, rv)
-        y = sr.segment_reduce(y_blocks.reshape(-1), ids, num_segments=n + 1)
-        return y[:n]
-    pad = cols < 0
-    safe = jnp.where(pad, 0, cols)
-    gathered = jnp.take(x_local, safe, axis=0)
-    contrib = sr.mul(jnp.asarray(1, gathered.dtype), gathered)
-    contrib = jnp.where(pad, jnp.asarray(sr.zero, contrib.dtype), contrib)
-    if sr.name == "tropical":
-        tile_red = contrib.min(axis=-1)
-    elif sr.name in ("boolean", "selmax"):
-        tile_red = contrib.max(axis=-1)
-    else:
-        tile_red = contrib.sum(axis=-1)
-    y_blocks = sr.segment_reduce(tile_red, row_block, num_segments=cps)  # [cps, C]
-    rv = row_vertex.reshape(-1)
-    ids = jnp.where(rv < 0, n, rv)
-    y = sr.segment_reduce(y_blocks.reshape(-1), ids, num_segments=n + 1)
-    return y[:n]
+def make_dist_fixpoint(mesh: Mesh, meta: DistSlimSell, spec: FixpointSpec, *,
+                       row_axes: Sequence[str] = ("data",),
+                       col_axes: Sequence[str] = ("model",),
+                       max_iters: int = 64, comm: str = "allreduce",
+                       backend: Optional[str] = None,
+                       direction: str = "push", finalize=None):
+    """The distributed execution strategy: run any ``FixpointSpec`` over the
+    2D partition. Returns a jitted function
+
+        fn(cols, row_block, row_vertex[, deg][, wts], arg, ctx_args)
+            -> finalize(state, iterations, dirs)
+
+    ``deg`` is present only under ``direction="auto"`` (the heuristic input)
+    and ``wts`` only for weighted specs; both extra operands keep the
+    factory AOT-lowerable from ShapeDtypeStructs alone. ``ctx_args`` is the
+    (possibly empty) tuple handed to the spec's ``setup`` — e.g. SSSP's
+    traced delta. ``finalize`` maps the replicated final state to the
+    outputs (default: the state dict itself plus the iteration count).
+    """
+    check_choice("direction", direction, DIRECTIONS)
+    check_choice("direction", direction, spec.directions,
+                 hint=f"supported by {spec.name}")
+    check_choice("comm", comm, COMMS)
+    backend = resolve_backend(backend)
+    weighted = spec.weights is not None
+    auto = direction == "auto"
+    cps, C, L, t_max = meta.chunks_per_shard, meta.C, meta.L, meta.t_max
+    if finalize is None:
+        finalize = lambda state, iters, dirs: (state, iters)  # noqa: E731
+
+    def shard_fn(cols, row_block, row_vertex, *rest):
+        rest = list(rest)
+        deg = rest.pop(0) if auto else None
+        wts = rest.pop(0) if weighted else None
+        arg, ctx_args = rest
+        local = eng._SubsetTiled(
+            cols=cols.reshape(t_max, C, L),
+            row_block=row_block.reshape(-1),
+            row_vertex=row_vertex.reshape(cps, C),
+            n=meta.n, n_chunks=cps,
+            wts=None if wts is None else wts.reshape(t_max, C, L))
+        ctx = spec.setup(local, *ctx_args) if spec.setup is not None else None
+        state = spec.init_state(meta.n, arg, ctx)
+        d0 = jnp.asarray(eng.dm.PULL if direction == "pull" else eng.dm.PUSH,
+                         jnp.int32)
+        # the per-iteration direction log is only worth carrying (int32
+        # [WORK_LOG] replicated per device) when the heuristic actually
+        # runs AND a finalize wants it; push/pull runs reconstruct it from
+        # the static direction for free
+        dirs0 = jnp.full((WORK_LOG,), -1, jnp.int32) if auto \
+            else jnp.zeros((1,), jnp.int32)
+
+        def cond(carry):
+            _, k, cont, _, _ = carry
+            return cont & (k <= max_iters)
+
+        def body(carry):
+            state, k, _, dcur, dirs = carry
+            dnext = eng.dist_choose_direction(spec, ctx, deg, state, k, dcur,
+                                              meta.n) if auto else dcur
+            state, cont = eng.dist_step(
+                spec, ctx, local, state, k, dnext,
+                n=meta.n, Co=meta.Co, n_col=meta.n_col,
+                row_axes=row_axes, col_axes=col_axes, comm=comm,
+                backend=backend, direction=direction)
+            if auto:
+                dirs = dirs.at[jnp.minimum(k - 1, WORK_LOG - 1)].set(dnext)
+            return state, k + 1, cont, dnext, dirs
+
+        state, k, _, _, dirs = jax.lax.while_loop(
+            cond, body, (state, jnp.asarray(1, jnp.int32),
+                         jnp.asarray(True), d0, dirs0))
+        return finalize(state, k - 1, dirs)
+
+    row = tuple(row_axes) if len(row_axes) > 1 else row_axes[0]
+    block_spec = P(row, col_axes[0], None, None, None)
+    in_specs = [block_spec, P(row, col_axes[0], None), P(row, None, None)]
+    if auto:
+        in_specs.append(P())                  # deg, replicated
+    if weighted:
+        in_specs.append(block_spec)           # wts, in lockstep with cols
+    in_specs.append(P())                      # arg
+    in_specs.append(P())                      # ctx_args tuple (P() is a prefix)
+    sharded = shard_map(
+        shard_fn, mesh=mesh, in_specs=tuple(in_specs), out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(sharded)
 
 
-def dist_bfs_step(sr_name: str, dist: DistSlimSell, state: dict, k: Array,
-                  row_axes: Sequence[str], col_axes: Sequence[str],
-                  comm: str = "allreduce", backend: str = "jnp"):
-    """One frontier expansion inside shard_map. State is replicated."""
-    sr = sm.get(sr_name)
-    n, Co, n_col = dist.n, dist.Co, dist.n_col
-    x_full = state["f"] if sr_name != "selmax" else state["x"]
-    # local frontier slice for this column shard
-    j = jax.lax.axis_index(col_axes[0]) if col_axes else 0
-    x_pad = jnp.pad(x_full, (0, Co * n_col - n), constant_values=sr.zero)
-    x_local = jax.lax.dynamic_slice_in_dim(x_pad, j * n_col, n_col)
-
-    cols = dist.cols.reshape(dist.t_max, dist.C, dist.L)
-    row_block = dist.row_block.reshape(dist.t_max)
-    row_vertex = dist.row_vertex.reshape(dist.chunks_per_shard, dist.C)
-    y = _local_spmv(sr, cols, row_block, row_vertex, x_local, n,
-                    dist.chunks_per_shard, backend)
-    axes = tuple(col_axes) + tuple(row_axes)
-    if comm == "allreduce":
-        y = sr.pall(y, axes)
-    else:  # "reduce_gather": semiring-reduce over columns, gather over rows
-        y = sr.pall(y, tuple(col_axes))
-        # each row shard holds valid y only for its own rows -> combine over rows
-        y = sr.pall(y, tuple(row_axes))
-
-    # replicated state update, shared with the single-source engine
-    from .bfs import semiring_update
-    return semiring_update(sr_name, state, y, k,
-                           jnp.arange(n, dtype=jnp.float32) + 1.0)
+# ---------------------------------------------------- per-algorithm factories
+#
+# Each factory is only spec selection + a ``finalize`` projection — the
+# ROADMAP's "distributed multi-source / pull-auto / SSSP / CC" items fall
+# out of the engine with no per-algorithm distributed loop code.
 
 
 def make_dist_bfs(mesh: Mesh, meta: DistSlimSell, sr_name: str = "tropical", *,
                   row_axes: Sequence[str] = ("data",),
                   col_axes: Sequence[str] = ("model",),
                   max_iters: int = 64, comm: str = "allreduce",
-                  backend: Optional[str] = None):
-    """Returns a jitted distributed BFS: (cols, row_block, row_vertex, root)
+                  backend: Optional[str] = None, direction: str = "push"):
+    """Jitted distributed BFS: (cols, row_block, row_vertex[, deg], root)
     -> (distances, iterations). ``meta`` provides the static layout fields
-    (arrays in it may be ShapeDtypeStructs for AOT lowering)."""
-    from .bfs import _init_state  # replicated init, reused verbatim
+    (arrays in it may be ShapeDtypeStructs for AOT lowering); the extra
+    ``deg`` operand exists only under ``direction="auto"``."""
+    run = make_dist_fixpoint(
+        mesh, meta, bfs_spec(sr_name), row_axes=row_axes, col_axes=col_axes,
+        max_iters=max_iters, comm=comm, backend=backend, direction=direction,
+        finalize=lambda state, iters, dirs: (state["d"], iters))
+    return lambda *args: run(*args, ())
 
-    backend = resolve_backend(backend)
 
-    def bfs_shard(cols, row_block, row_vertex, root):
-        dist = dataclasses.replace(
-            meta,
-            cols=cols.reshape(meta.t_max, meta.C, meta.L),
-            row_block=row_block.reshape(-1),
-            row_vertex=row_vertex.reshape(meta.chunks_per_shard, meta.C),
-        )
-        state = _init_state(sr_name, meta.n, root)
+def make_dist_multi_bfs(mesh: Mesh, meta: DistSlimSell,
+                        sr_name: str = "tropical", *,
+                        row_axes: Sequence[str] = ("data",),
+                        col_axes: Sequence[str] = ("model",),
+                        max_iters: int = 64, comm: str = "allreduce",
+                        backend: Optional[str] = None,
+                        direction: str = "push"):
+    """Jitted distributed multi-source BFS over the column-sharded frontier
+    matrix: (cols, row_block, row_vertex[, deg], roots[B]) ->
+    (distances [B, n], iterations). One SpMM/pull-MM sweep per iteration
+    advances every root; under ``direction="auto"`` the whole batch switches
+    together (mean Beamer statistics — the partition has no per-shard push
+    index, so per-column masks would buy nothing)."""
+    run = make_dist_fixpoint(
+        mesh, meta, multi_bfs_spec(sr_name), row_axes=row_axes,
+        col_axes=col_axes, max_iters=max_iters, comm=comm, backend=backend,
+        direction=direction,
+        finalize=lambda state, iters, dirs: (state["d"].T, iters))
+    return lambda *args: run(*args, ())
 
-        def cond(carry):
-            _, k, changed = carry
-            return changed & (k <= max_iters)
 
-        def body(carry):
-            state, k, _ = carry
-            state, changed = dist_bfs_step(sr_name, dist, state, k,
-                                           row_axes, col_axes, comm, backend)
-            return state, k + 1, changed
+def make_dist_sssp(mesh: Mesh, meta: DistSlimSell, *,
+                   row_axes: Sequence[str] = ("data",),
+                   col_axes: Sequence[str] = ("model",),
+                   max_iters: int = 512, comm: str = "allreduce",
+                   backend: Optional[str] = None):
+    """Jitted distributed delta-stepping SSSP over the weighted partition:
+    (cols, row_block, row_vertex, wts, root, delta) ->
+    (distances float32[n], sweeps, buckets). ``partition_slimsell`` of a
+    weighted CSR supplies the ``wts`` blocks; delta rides as a traced
+    operand (same flattened light/heavy phase machine as single-device)."""
+    run = make_dist_fixpoint(
+        mesh, meta, SSSP_SPEC, row_axes=row_axes, col_axes=col_axes,
+        max_iters=max_iters, comm=comm, backend=backend, direction="push",
+        finalize=lambda state, iters, dirs:
+            (state["dist"], iters, state["buckets"]))
 
-        state, k, _ = jax.lax.while_loop(
-            cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True)))
-        return state["d"], k - 1
+    def fn(cols, row_block, row_vertex, wts, root, delta):
+        return run(cols, row_block, row_vertex, wts, root,
+                   (jnp.asarray(delta, jnp.float32),))
+    return fn
 
-    row = tuple(row_axes) if len(row_axes) > 1 else row_axes[0]
-    sharded = shard_map(
-        bfs_shard, mesh=mesh,
-        in_specs=(P(row, col_axes[0], None, None, None),
-                  P(row, col_axes[0], None),
-                  P(row, None, None),
-                  P()),
-        out_specs=(P(), P()),
-        check_vma=False,
-    )
-    return jax.jit(sharded)
+
+def make_dist_cc(mesh: Mesh, meta: DistSlimSell, *,
+                 row_axes: Sequence[str] = ("data",),
+                 col_axes: Sequence[str] = ("model",),
+                 max_iters: Optional[int] = None, comm: str = "allreduce",
+                 backend: Optional[str] = None):
+    """Jitted distributed connected components (sel-max label propagation):
+    (cols, row_block, row_vertex) -> (labels int32[n], iterations);
+    labels[v] = max vertex id of v's component."""
+    cap = int(max_iters) if max_iters is not None else meta.n + 1
+    run = make_dist_fixpoint(
+        mesh, meta, CC_SPEC, row_axes=row_axes, col_axes=col_axes,
+        max_iters=cap, comm=comm, backend=backend, direction="push",
+        finalize=lambda state, iters, dirs:
+            (state["x"].astype(jnp.int32) - 1, iters))
+    return lambda cols, row_block, row_vertex: run(
+        cols, row_block, row_vertex, jnp.asarray(0, jnp.int32), ())

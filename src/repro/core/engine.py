@@ -1,0 +1,540 @@
+"""The shared algebraic fixpoint engine (paper §III, generalized).
+
+The paper's central claim is that one SpMV-with-a-semiring abstraction
+carries a whole family of graph algorithms. This module cashes that claim
+structurally: an algorithm is a small **spec** (``FixpointSpec``) — initial
+state, how to read the sweep operands off the state (frontier payload, push
+source bits, not-final rows, per-sweep weights), and a semiring-update-style
+state merge that also decides convergence — and the *engine* owns every
+execution strategy:
+
+* ``run_fused``    — the whole fixpoint is one ``lax.while_loop`` on device;
+  under ``direction="auto"`` the Beamer heuristic runs inside the carry and
+  a ``lax.cond`` picks the push SpMV or the pull sweep each iteration.
+* ``run_hostloop`` — the loop runs on host; each iteration builds the
+  SlimWork mask in numpy (frontier-walk over the push-index incidence
+  ranges), gathers only the active tiles (bucketed to powers of two to
+  bound retracing) and invokes one jitted subset step.
+* ``dist_step``    — one iteration of the same spec over a 2D-partitioned
+  layout *inside* ``shard_map``: the local sweep is the ordinary
+  ``slimsell_spmv``/``pull``/``spmm`` over the device's localized tiles,
+  followed by a semiring all-reduce; the state update is the spec's own,
+  replicated. ``core.dist_bfs`` owns the mesh plumbing around this.
+
+``core.bfs``, ``core.multi_bfs``, ``core.sssp`` and ``core.cc`` are specs
+over this engine — none of them carries its own while_loop or hostloop
+anymore. Delta-stepping's nested bucket/fixpoint loops flatten into a
+single fixpoint by carrying the phase (light-relaxation vs heavy-settle) in
+the state; the spec's update does the phase transitions.
+
+Spec callables and their shapes (B = batch width for ``batched`` specs):
+
+  ================= ==========================================================
+  ``init_state``    (n, arg, ctx) -> state dict (pytree of [n] / [n, B])
+  ``frontier``      (ctx, state, k) -> sweep payload [n] / [n, B]
+  ``source_bits``   (ctx, state, k) -> bool[n] / [n, B] push sources
+  ``not_final``     (ctx, state) -> bool[n] / [n, B] rows that can change
+  ``update``        (ctx, state, y, k) -> (state, continue?)
+  ``setup``         (tiled, *ctx_args) -> ctx (per-run constants; leaves with
+                    a leading tile axis are gathered by the hostloop subset)
+  ``weights``       (ctx, state) -> stored per-slot weights [T, C, L] or None
+  ``host_bits``     (state, k, need_sb, need_nf) -> numpy (sb, nf)
+  ================= ==========================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import direction as dm
+from . import semiring as sm
+from .spmv import (slimsell_pull, slimsell_pull_mm, slimsell_spmm,
+                   slimsell_spmv)
+
+Array = jax.Array
+WORK_LOG = 512  # max logged iterations
+
+DIRECTIONS = ("push", "pull", "auto")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FixpointSpec:
+    """One algorithm as data. Frozen and hashed by identity so module-level
+    spec instances key the engine's jit caches stably."""
+    name: str
+    sr_name: str
+    init_state: Callable[..., dict]
+    frontier: Callable[..., Array]
+    update: Callable[..., tuple]
+    source_bits: Optional[Callable[..., Array]] = None
+    not_final: Optional[Callable[..., Array]] = None
+    setup: Optional[Callable[..., Any]] = None
+    weights: Optional[Callable[..., Array]] = None
+    host_bits: Optional[Callable[..., tuple]] = None
+    batched: bool = False
+    directions: tuple = ("push",)
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """What every strategy returns, before algorithm-specific post-processing."""
+    state: dict
+    iterations: int
+    work_log: Optional[np.ndarray] = None       # active tiles per iteration
+    dirs_log: Optional[np.ndarray] = None       # 0=push 1=pull per iteration
+    pull_cols_log: Optional[np.ndarray] = None  # batched: pull columns/iter
+
+
+# ------------------------------------------------------------------- helpers
+
+
+def _chunk_active_from(nf: Array, row_vertex: Array) -> Array:
+    """bool[n_chunks] from not-final bits (SlimWork §III-C; the pull
+    direction's tile criterion). ``nf`` is bool[n] in vertex space."""
+    safe = jnp.where(row_vertex < 0, 0, row_vertex)
+    per_row = jnp.where(row_vertex < 0, False, jnp.take(nf, safe, axis=0))
+    return per_row.any(axis=1)
+
+
+def _pull_tile_mask(tiled, nf_rows: Array) -> Array:
+    active = _chunk_active_from(nf_rows, tiled.row_vertex)
+    return jnp.take(active, tiled.row_block, axis=0)
+
+
+def _sweep(spec: FixpointSpec, tiled, x, w, tile_mask, rows, backend: str,
+           *, pull: bool):
+    """One semiring sweep: the spec's shape (vector/matrix) and direction
+    select between the three core primitives."""
+    sr = sm.get(spec.sr_name)
+    if pull:
+        if spec.batched:
+            return slimsell_pull_mm(sr, tiled, x, row_mask=rows,
+                                    tile_mask=tile_mask, backend=backend)
+        return slimsell_pull(sr, tiled, x, row_mask=rows,
+                             tile_mask=tile_mask, backend=backend)
+    if spec.batched:
+        return slimsell_spmm(sr, tiled, x, tile_mask=tile_mask,
+                             backend=backend)
+    return slimsell_spmv(sr, tiled, x, weights=w, tile_mask=tile_mask,
+                         backend=backend)
+
+
+def _subset_ctx(ctx, ids: Array, n_tiles: int):
+    """Gather the tile-space leaves of a spec ctx down to the active tiles;
+    scalars and non-tile leaves pass through untouched."""
+    if ctx is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda a: jnp.take(a, ids, axis=0)
+        if (hasattr(a, "ndim") and a.ndim >= 1 and a.shape[0] == n_tiles)
+        else a, ctx)
+
+
+# -------------------------------------------------------------------- fused
+
+
+@partial(jax.jit, static_argnames=("spec", "slimwork", "max_iters",
+                                   "log_work", "backend", "direction"))
+def _run_fused(spec: FixpointSpec, tiled, arg, ctx_args, *, slimwork: bool,
+               max_iters: int, log_work: bool, backend: str, direction: str):
+    n = tiled.n
+    ctx = spec.setup(tiled, *ctx_args) if spec.setup is not None else None
+    state = spec.init_state(n, arg, ctx)
+    log_n = WORK_LOG if log_work else 1
+    work = jnp.zeros((log_n,), jnp.int32)
+    dirs = jnp.full((log_n,), -1, jnp.int32)
+    plog = jnp.zeros((log_n,), jnp.int32)
+    use_push = direction in ("push", "auto")
+    n_tiles_c = jnp.asarray(tiled.cols.shape[0], jnp.int32)
+    if spec.batched:
+        B = arg.shape[0]
+        d0 = jnp.full((B,), dm.PULL if direction == "pull" else dm.PUSH,
+                      jnp.int32)
+    else:
+        d0 = jnp.asarray(dm.PULL if direction == "pull" else dm.PUSH,
+                         jnp.int32)
+
+    def cond(carry):
+        _, k, cont, _, _, _, _ = carry
+        return cont & (k <= max_iters)
+
+    def body(carry):
+        state, k, _, work, dcur, dirs, plog = carry
+        nf = spec.not_final(ctx, state) if direction != "push" else None
+        sb = spec.source_bits(ctx, state, k) if use_push else None
+        if direction == "auto":
+            mf, mu, nnz_f = dm.edge_counts(tiled.deg, sb, nf)
+            dnext = dm.choose_direction(dcur, mf, mu, nnz_f, n)
+        else:
+            dnext = dcur
+        x = spec.frontier(ctx, state, k)
+        w = spec.weights(ctx, state) if spec.weights is not None else None
+
+        if spec.batched:
+            # one SpMM/pull-MM sweep advances every column, so per-column
+            # directions compose into a single *union* tile mask
+            if direction == "pull":
+                mask = _pull_tile_mask(tiled, nf.any(axis=-1)) \
+                    if slimwork else None
+                y = _sweep(spec, tiled, x, w, mask, nf, backend, pull=True)
+            else:
+                mask = None
+                if slimwork:
+                    if direction == "push":
+                        mask = dm.push_tile_mask(tiled, sb)
+                    else:
+                        push_rows = (sb & (dnext == dm.PUSH)[None, :]).any(axis=1)
+                        pull_rows = (nf & (dnext == dm.PULL)[None, :]).any(axis=1)
+                        mask = dm.push_tile_mask(tiled, push_rows) \
+                            | _pull_tile_mask(tiled, pull_rows)
+                y = _sweep(spec, tiled, x, w, mask, None, backend, pull=False)
+            state, cont = spec.update(ctx, state, y, k)
+            used = mask.sum(dtype=jnp.int32) if (slimwork and mask is not None) \
+                else n_tiles_c
+        else:
+            # the tile masks are built INSIDE the branches so the untaken
+            # direction's mask is never materialized (lax.cond operands
+            # would be evaluated eagerly every iteration otherwise)
+            def push_fn(state):
+                mask = dm.push_tile_mask(tiled, sb) if slimwork else None
+                y = _sweep(spec, tiled, x, w, mask, None, backend, pull=False)
+                st, cont = spec.update(ctx, state, y, k)
+                used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
+                return st, cont, used
+
+            def pull_fn(state):
+                mask = _pull_tile_mask(tiled, nf) if slimwork else None
+                y = _sweep(spec, tiled, x, w, mask, nf, backend, pull=True)
+                st, cont = spec.update(ctx, state, y, k)
+                used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
+                return st, cont, used
+
+            if direction == "push":
+                state, cont, used = push_fn(state)
+            elif direction == "pull":
+                state, cont, used = pull_fn(state)
+            else:
+                state, cont, used = jax.lax.cond(dnext == dm.PUSH, push_fn,
+                                                 pull_fn, state)
+        if log_work:
+            idx = jnp.minimum(k - 1, WORK_LOG - 1)
+            if slimwork:
+                work = work.at[idx].set(used)
+            if spec.batched:
+                plog = plog.at[idx].set(jnp.sum(dnext == dm.PULL,
+                                                dtype=jnp.int32))
+            else:
+                dirs = dirs.at[idx].set(dnext)
+        return state, k + 1, cont, work, dnext, dirs, plog
+
+    state, k, _, work, _, dirs, plog = jax.lax.while_loop(
+        cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True),
+                     work, d0, dirs, plog))
+    return state, k - 1, work, dirs, plog
+
+
+def run_fused(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
+              slimwork: bool = True, max_iters: int, log_work: bool = False,
+              backend: str = "jnp", direction: str = "push") -> EngineResult:
+    """Run a spec to its fixpoint as one on-device ``lax.while_loop``."""
+    state, iters, work, dirs, plog = _run_fused(
+        spec, tiled, arg, tuple(ctx_args), slimwork=slimwork,
+        max_iters=max_iters, log_work=log_work, backend=backend,
+        direction=direction)
+    iters = int(iters)
+    dirs_out = plog_out = wl = None
+    if log_work:
+        if spec.batched:
+            # batched callers stack logs across batches, so both logs keep
+            # the fixed WORK_LOG length instead of truncating to iters
+            wl = np.asarray(work)
+            plog_out = np.asarray(plog)
+        else:
+            wl = np.asarray(work)[:iters]
+            dirs_out = np.asarray(dirs)[:iters]
+    elif direction != "auto" and not spec.batched:
+        dirs_out = np.full(iters, dm.PULL if direction == "pull" else dm.PUSH,
+                           np.int32)
+    return EngineResult(state=state, iterations=iters, work_log=wl,
+                        dirs_log=dirs_out, pull_cols_log=plog_out)
+
+
+# ------------------------------------------------------------------ hostloop
+
+
+@dataclasses.dataclass
+class _SubsetTiled:
+    """Duck-typed SlimSellTiled view over a compacted (or shard-local) tile
+    set. ``wts`` rides along only for weighted (SSSP) steps."""
+    cols: Array
+    row_block: Array
+    row_vertex: Array
+    n: int
+    n_chunks: int
+    wts: Optional[Array] = None
+
+
+jax.tree_util.register_pytree_node(
+    _SubsetTiled,
+    lambda t: ((t.cols, t.row_block, t.row_vertex, t.wts), (t.n, t.n_chunks)),
+    lambda aux, ch: _SubsetTiled(cols=ch[0], row_block=ch[1],
+                                 row_vertex=ch[2], n=aux[0], n_chunks=aux[1],
+                                 wts=ch[3]),
+)
+
+
+def _bucket(x: int) -> int:
+    return 1 if x <= 1 else 2 ** math.ceil(math.log2(x))
+
+
+def _pad_tile_ids(ids: np.ndarray, n_tiles: int):
+    """SlimWork hostloop compaction: bucket the active-tile count to a power
+    of two (bounds jit retracing) and pad with repeats of the LAST id — the
+    tail then stays on the final output block, so the pallas kernel's
+    first-visit re-init never revisits an earlier block."""
+    bucket = min(_bucket(ids.size), n_tiles)
+    ids_p = np.zeros(bucket, np.int32)
+    ids_p[: ids.size] = ids
+    if ids.size < bucket:
+        ids_p[ids.size:] = ids[-1]
+    return ids_p, bucket
+
+
+def _push_tile_mask_host(active: np.ndarray, inc_ptr: np.ndarray,
+                         inc_tile: np.ndarray, n_tiles: int) -> np.ndarray:
+    """Host twin of ``direction.push_tile_mask``: bool[T] of the tiles
+    holding ≥1 active column.
+
+    Walks only the *active columns'* incidence ranges (``inc_ptr`` is the
+    CSR-style offset vector over the vertex-sorted push index), so the cost
+    is O(frontier incidence), not O(K) over the whole index — the frontier-
+    restricted mask build of ROADMAP's hostloop perf item.
+    """
+    tmask = np.zeros(n_tiles, bool)
+    verts = np.nonzero(active)[0]
+    if verts.size == 0:
+        return tmask
+    starts = inc_ptr[verts]
+    counts = inc_ptr[verts + 1] - starts
+    total = int(counts.sum())
+    if total == 0:
+        return tmask
+    # ragged range gather: concatenate [starts_i, starts_i + counts_i)
+    ofs = np.repeat(starts - np.concatenate(([0], np.cumsum(counts)[:-1])),
+                    counts)
+    tmask[inc_tile[ofs + np.arange(total)]] = True
+    return tmask
+
+
+def _host_inc_ptr(tiled) -> np.ndarray:
+    """inc_ptr for layouts that predate the field (duck-typed tests)."""
+    ptr = getattr(tiled, "inc_ptr", None)
+    if ptr is not None:
+        return np.asarray(ptr)
+    inc_src = np.asarray(tiled.inc_src)
+    return np.searchsorted(inc_src, np.arange(tiled.n + 1)).astype(np.int64)
+
+
+@partial(jax.jit, static_argnames=("spec", "n", "n_chunks", "n_active",
+                                   "pull", "backend"))
+def _subset_step(spec: FixpointSpec, cols, row_block, row_vertex, n: int,
+                 n_chunks: int, ctx, tile_ids, n_active: int, state, k,
+                 pull: bool, backend: str):
+    """Gather the active tiles (bucketed size) and run one step on them only."""
+    ids = tile_ids[:n_active]
+    sub = _SubsetTiled(
+        cols=jnp.take(cols, ids, axis=0),
+        row_block=jnp.take(row_block, ids, axis=0),
+        row_vertex=row_vertex, n=n, n_chunks=n_chunks,
+    )
+    x = spec.frontier(ctx, state, k)
+    w = None
+    if spec.weights is not None:
+        w = spec.weights(_subset_ctx(ctx, ids, cols.shape[0]), state)
+    rows = spec.not_final(ctx, state) if pull else None
+    y = _sweep(spec, sub, x, w, None, rows, backend, pull=pull)
+    return spec.update(ctx, state, y, k)
+
+
+@partial(jax.jit, static_argnames=("spec", "pull", "backend"))
+def _full_step(spec: FixpointSpec, tiled, ctx, state, k, pull: bool,
+               backend: str):
+    x = spec.frontier(ctx, state, k)
+    w = spec.weights(ctx, state) if spec.weights is not None else None
+    rows = spec.not_final(ctx, state) if pull else None
+    y = _sweep(spec, tiled, x, w, None, rows, backend, pull=pull)
+    return spec.update(ctx, state, y, k)
+
+
+@partial(jax.jit, static_argnames=("spec", "n"))
+def _zero_step(spec: FixpointSpec, n: int, ctx, state, k):
+    """Update against an all-zero sweep result: what an empty tile set
+    computes. BFS-style specs report no change and terminate; phase-carrying
+    specs (delta-stepping) still advance their phase."""
+    sr = sm.get(spec.sr_name)
+    y = jnp.full((n,), sr.zero, sr.dtype)
+    return spec.update(ctx, state, y, k)
+
+
+def run_hostloop(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
+                 slimwork: bool = True, max_iters: int,
+                 backend: str = "jnp",
+                 direction: str = "push") -> EngineResult:
+    """Run a spec with the loop on host, gathering only the active tiles
+    per iteration (real work-skipping on any backend).
+
+    All mask and heuristic math happens in numpy via the spec's
+    ``host_bits`` twin — one device sync per state field per iteration
+    instead of ~20 dispatches.
+    """
+    if spec.batched:
+        raise NotImplementedError(f"{spec.name}: hostloop is single-column")
+    n = tiled.n
+    ctx = spec.setup(tiled, *ctx_args) if spec.setup is not None else None
+    state = spec.init_state(n, arg, ctx)
+    n_tiles = int(tiled.n_tiles)
+    dcur = dm.PULL if direction == "pull" else dm.PUSH
+    use_push = direction in ("push", "auto")
+    # host copies of the layout metadata the per-iteration masks need
+    rv_np = np.asarray(tiled.row_vertex)
+    rv_safe_np = np.where(rv_np < 0, 0, rv_np)
+    rb_np = np.asarray(tiled.row_block)
+    deg_np = np.asarray(tiled.deg, np.float64) if direction == "auto" else None
+    if use_push and slimwork:
+        inc_ptr_np = _host_inc_ptr(tiled)
+        inc_tile_np = np.asarray(tiled.inc_tile)
+    k, iters = 1, 0
+    work_list, dir_list = [], []
+    while k <= max_iters:
+        sb, nf = spec.host_bits(state, k, use_push, direction != "push")
+        if direction == "auto":
+            dcur = dm.choose_direction_host(
+                dcur, float(deg_np[sb].sum()), float(deg_np[nf].sum()),
+                float(sb.sum()), n)
+        kdev = jnp.asarray(k, jnp.int32)
+        if slimwork:
+            if dcur == dm.PUSH:
+                tmask = _push_tile_mask_host(sb, inc_ptr_np, inc_tile_np,
+                                             n_tiles)
+            else:
+                chunk_act = (nf[rv_safe_np] & (rv_np >= 0)).any(axis=1)
+                tmask = chunk_act[rb_np]
+            ids = np.nonzero(tmask)[0]
+            if ids.size == 0:
+                # empty tile set: the sweep would return all-zero; the
+                # zero-step lets phase-carrying specs advance anyway. It
+                # still counts as an iteration (0 tiles) so sweep counts
+                # and work logs match the fused strategy, whose while_loop
+                # body runs the all-masked sweep.
+                state, cont = _zero_step(spec, n, ctx, state, kdev)
+                work_list.append(0)
+                dir_list.append(dcur)
+                iters = k
+                k += 1
+                if not bool(cont):
+                    break
+                continue
+            work_list.append(ids.size)
+            dir_list.append(dcur)
+            ids_p, bucket = _pad_tile_ids(ids, n_tiles)
+            state, cont = _subset_step(
+                spec, tiled.cols, tiled.row_block, tiled.row_vertex, n,
+                tiled.n_chunks, ctx, jnp.asarray(ids_p), bucket, state,
+                kdev, dcur == dm.PULL, backend)
+        else:
+            work_list.append(n_tiles)
+            dir_list.append(dcur)
+            state, cont = _full_step(spec, tiled, ctx, state, kdev,
+                                     dcur == dm.PULL, backend)
+        iters = k
+        k += 1
+        if not bool(cont):
+            break
+    return EngineResult(state=state, iterations=iters,
+                        work_log=np.asarray(work_list, np.int32),
+                        dirs_log=np.asarray(dir_list, np.int32))
+
+
+# --------------------------------------------------------------- distributed
+
+
+def dist_step(spec: FixpointSpec, ctx, local, state, k, dnow, *,
+              n: int, Co: int, n_col: int,
+              row_axes: Sequence[str], col_axes: Sequence[str],
+              comm: str = "allreduce", backend: str = "jnp",
+              direction: str = "push"):
+    """One fixpoint iteration over the 2D partition, inside ``shard_map``.
+
+    ``local`` is a ``_SubsetTiled`` view of this device's tiles: localized
+    column ids, *global* ``row_vertex`` ids (so the ordinary sweep
+    primitives scatter straight into full vertex space), ``n_chunks`` = the
+    row shard's chunk count. State is replicated; the semiring all-reduce
+    combines the per-device partial sweeps (each edge lives in exactly one
+    (row, column) block, so the combine is exact for every semiring).
+
+    push — local SpMV/SpMM over the frontier's column slice;
+    pull — row sweep over the shard's own not-final rows only (SlimWork's
+    tile criterion on the local ``row_vertex``), which is the "local row
+    sweep + row-axis gather" decomposition: other shards' rows contribute
+    the semiring zero, so the same collectives double as the gather.
+    """
+    sr = sm.get(spec.sr_name)
+    x_full = spec.frontier(ctx, state, k)
+    j = jax.lax.axis_index(col_axes[0]) if col_axes else 0
+    pad = ((0, Co * n_col - n),) + ((0, 0),) * (x_full.ndim - 1)
+    x_pad = jnp.pad(x_full, pad, constant_values=sr.zero)
+    x_local = jax.lax.dynamic_slice_in_dim(x_pad, j * n_col, n_col, axis=0)
+    w = spec.weights(ctx, state) if spec.weights is not None else None
+
+    def push_fn(state):
+        return _sweep(spec, local, x_local, w, None, None, backend,
+                      pull=False)
+
+    def pull_fn(state):
+        nf = spec.not_final(ctx, state)
+        nf_rows = nf.any(axis=-1) if nf.ndim > 1 else nf
+        # SlimWork tile compaction turns the mask into per-device
+        # scalar-prefetch operands (tile_ids / n_active); under shard_map
+        # the jax-0.4.37 interpret-mode pallas grid mishandles
+        # device-varying values of those (observed: one shard's empty mask
+        # silencing every shard's sweep), so the tile mask is jnp-only on
+        # the mesh — the pallas path still early-exits per row via ``nf``
+        mask = _pull_tile_mask(local, nf_rows) if backend == "jnp" else None
+        return _sweep(spec, local, x_local, w, mask, nf, backend, pull=True)
+
+    if direction == "push":
+        y = push_fn(state)
+    elif direction == "pull":
+        y = pull_fn(state)
+    else:
+        y = jax.lax.cond(dnow == dm.PUSH, push_fn, pull_fn, state)
+
+    axes = tuple(col_axes) + tuple(row_axes)
+    if comm == "allreduce":
+        y = sr.pall(y, axes)
+    else:  # "reduce_gather": semiring-reduce over columns, gather over rows
+        y = sr.pall(y, tuple(col_axes))
+        y = sr.pall(y, tuple(row_axes))
+    return spec.update(ctx, state, y, k)
+
+
+def dist_choose_direction(spec: FixpointSpec, ctx, deg, state, k, dcur, n: int):
+    """Replicated Beamer α/β choice for the distributed strategy.
+
+    Batched specs collapse to ONE direction for the whole batch (mean of the
+    per-column statistics): the 2D partition has no per-shard push index, so
+    a per-column union mask would buy nothing — the batch-level switch keeps
+    the introspection meaningful while every column stays exact.
+    """
+    sb = spec.source_bits(ctx, state, k)
+    nf = spec.not_final(ctx, state)
+    mf, mu, nnz_f = dm.edge_counts(deg, sb, nf)
+    if spec.batched:
+        mf, mu, nnz_f = mf.mean(), mu.mean(), nnz_f.mean()
+    return dm.choose_direction(dcur, mf, mu, nnz_f, n)

@@ -139,7 +139,11 @@ class SlimSellTiled:
     (top-down/push work ∝ edges out of the frontier) without scanning
     ``cols``. K ≤ nnz pairs; this index is reported separately from the
     paper's Table III storage accounting (it only exists for traversal,
-    not for the SpMV operand).
+    not for the SpMV operand). ``inc_ptr`` (int64[n+1]) is the CSR-style
+    offset vector over the vertex-sorted pairs — vertex v's incidence
+    range is ``inc_tile[inc_ptr[v]:inc_ptr[v+1]]`` — which lets the
+    hostloop engine build the push tile mask by walking only the frontier's
+    ranges instead of scanning all K pairs.
 
     ``wts`` is the *weighted* SlimSell variant (SlimSell-W): a float32 array
     of the same [n_tiles, C, L] shape as ``cols`` holding the per-slot edge
@@ -163,6 +167,7 @@ class SlimSellTiled:
     deg: np.ndarray         # int64[n]
     inc_src: np.ndarray = None   # int32[K] column vertex of each incidence pair
     inc_tile: np.ndarray = None  # int32[K] tile containing that column
+    inc_ptr: np.ndarray = None   # int64[n+1] vertex offsets into the pairs
     wts: np.ndarray = None  # float32[n_tiles, C, L] slot weights (optional)
 
     def to_jax(self):
@@ -176,24 +181,27 @@ class SlimSellTiled:
             deg=jnp.asarray(self.deg, dtype=jnp.int32),
             inc_src=None if self.inc_src is None else jnp.asarray(self.inc_src),
             inc_tile=None if self.inc_tile is None else jnp.asarray(self.inc_tile),
+            inc_ptr=None if self.inc_ptr is None else jnp.asarray(self.inc_ptr),
             wts=None if self.wts is None else jnp.asarray(self.wts),
         )
 
 
 def _tiled_flatten(t: "SlimSellTiled"):
     children = (t.cols, t.row_block, t.row_vertex, t.cl, t.deg,
-                t.inc_src, t.inc_tile, t.wts)
+                t.inc_src, t.inc_tile, t.inc_ptr, t.wts)
     aux = (t.n, t.m_undirected, t.C, t.L, t.sigma, t.n_chunks, t.n_tiles)
     return children, aux
 
 
 def _tiled_unflatten(aux, children):
     n, m, C, L, sigma, n_chunks, n_tiles = aux
-    cols, row_block, row_vertex, cl, deg, inc_src, inc_tile, wts = children
+    (cols, row_block, row_vertex, cl, deg, inc_src, inc_tile, inc_ptr,
+     wts) = children
     return SlimSellTiled(n=n, m_undirected=m, C=C, L=L, sigma=sigma,
                          n_chunks=n_chunks, n_tiles=n_tiles, cols=cols,
                          row_block=row_block, row_vertex=row_vertex, cl=cl,
-                         deg=deg, inc_src=inc_src, inc_tile=inc_tile, wts=wts)
+                         deg=deg, inc_src=inc_src, inc_tile=inc_tile,
+                         inc_ptr=inc_ptr, wts=wts)
 
 
 def build_push_index(cols: np.ndarray,
@@ -274,11 +282,14 @@ def build_slimsell(csr: CSRGraph, *, C: int = 8, L: int = 128,
             wts[t0:tile_start[c + 1]] = buf_w.reshape(C, -1, L).transpose(1, 0, 2)
 
     inc_src, inc_tile = build_push_index(cols)
+    # vertex-range offsets over the sorted pairs: the hostloop push mask
+    # walks only the frontier's ranges through these (O(frontier incidence))
+    inc_ptr = np.searchsorted(inc_src, np.arange(n + 1)).astype(np.int64)
     return SlimSellTiled(
         n=n, m_undirected=csr.m_undirected, C=C, L=L, sigma=sigma,
         n_chunks=n_chunks, n_tiles=n_tiles, cols=cols, row_block=row_block,
         row_vertex=row_vertex, cl=cl, deg=deg,
-        inc_src=inc_src, inc_tile=inc_tile, wts=wts,
+        inc_src=inc_src, inc_tile=inc_tile, inc_ptr=inc_ptr, wts=wts,
     )
 
 

@@ -10,10 +10,15 @@ adjacency structure is read once per iteration instead of once per root, and
 on TPU the B axis maps onto the lane dimension of the SlimSell SpMM kernel.
 
 All four paper semirings are supported; the per-column math is identical to
-``bfs._step``. SlimWork generalizes column-wise: a chunk is active if ANY
-root can still improve one of its rows, so the batch shares one tile mask
-(the union of per-root masks — batching trades some work-skipping for
-structure reuse; the crossover is measured by benchmarks/bench_multisource.py).
+single-source BFS (it shares ``bfs.semiring_update`` verbatim). The module
+is the *batched spec* over ``core.engine`` — the iteration machinery
+(fused while_loop, union SlimWork masks, per-column direction state) is the
+engine's; this file owns only the [n, B] state algebra.
+
+SlimWork generalizes column-wise: a chunk is active if ANY root can still
+improve one of its rows, so the batch shares one tile mask (the union of
+per-root masks — batching trades some work-skipping for structure reuse;
+the crossover is measured by benchmarks/bench_multisource.py).
 
 Iterations run to the max depth over the batch: converged columns simply stop
 changing (their frontier no longer produces new vertices), which is exact for
@@ -21,17 +26,16 @@ every semiring.
 
 Direction optimization is **per column**: each root carries its own
 push/pull state in the while_loop carry (``direction="auto"`` runs Beamer's
-alpha/beta heuristic on per-column frontier statistics). Because one SpMM
-sweep advances the whole batch, the per-column directions compose into a
-single *union* tile mask — push columns contribute the tiles holding their
-frontier columns (via the push index), pull columns contribute the chunks
-with rows they can still finalize. The per-column math of the update is
-direction-independent, so mixing directions inside one batch is exact.
+alpha/beta heuristic on per-column frontier statistics), and the per-column
+directions compose into a single *union* tile mask. ``direction="pull"``
+runs the true batched bottom-up sweep (``slimsell_pull_mm``): the jnp path
+is the row-masked SpMM oracle; the pallas path early-exits per (chunk row,
+batch column).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import functools
 from typing import Optional, Sequence
 
 import jax
@@ -39,10 +43,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import direction as dm
+from . import engine as eng
 from . import semiring as sm
-from .bfs import (DIRECTIONS, WORK_LOG, _chunk_active_from, _not_final,
+from .bfs import (_check_bfs_options, _frontier_payload, _ids1, _not_final,
                   dp_transform, semiring_update)
-from .spmv import resolve_backend, slimsell_spmm
+from .engine import DIRECTIONS, WORK_LOG, FixpointSpec  # noqa: F401
+from .spmv import resolve_backend
 
 Array = jax.Array
 
@@ -92,81 +98,27 @@ def _init_state_multi(sr_name: str, n: int, roots: Array):
     raise ValueError(sr_name)
 
 
-def _chunk_active_multi(sr_name: str, state, row_vertex: Array) -> Array:
-    # union SlimWork: a row is live while ANY root can still change it
-    return _chunk_active_from(_not_final(sr_name, state).any(axis=1),
-                              row_vertex)
+# ----------------------------------------------------------------------- spec
 
 
-def _step_multi(sr_name: str, tiled, state, k: Array, tile_mask,
-                backend: str):
-    """One batched frontier expansion; per-column math == ``bfs._step``."""
-    sr = sm.get(sr_name)
-    frontier = state["x"] if sr_name == "selmax" else state["f"]
-    y = slimsell_spmm(sr, tiled, frontier, tile_mask=tile_mask,
-                      backend=backend)
-    ids1 = jnp.arange(tiled.n, dtype=jnp.float32)[:, None] + 1.0
-    return semiring_update(sr_name, state, y, k, ids1)
-
-
-# -------------------------------------------------------------------- fused
-
-
-@partial(jax.jit, static_argnames=("sr_name", "slimwork", "max_iters",
-                                   "log_work", "backend", "direction"))
-def _multi_bfs_fused(tiled, roots, *, sr_name: str, slimwork: bool,
-                     max_iters: int, log_work: bool, backend: str,
-                     direction: str = "push"):
-    n = tiled.n
-    B = roots.shape[0]
-    state = _init_state_multi(sr_name, n, roots)
-    work = jnp.zeros((WORK_LOG,), jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
-    plog = jnp.zeros((WORK_LOG,), jnp.int32) if log_work else jnp.zeros((1,), jnp.int32)
-    use_push = direction in ("push", "auto")
-    d0 = jnp.full((B,), dm.PULL if direction == "pull" else dm.PUSH, jnp.int32)
-
-    def cond(carry):
-        _, k, changed, _, _, _ = carry
-        return changed & (k <= max_iters)
-
-    def body(carry):
-        state, k, _, work, dirs, plog = carry
-        nf = _not_final(sr_name, state)                        # [n, B]
-        fbits = dm.frontier_bits(sr_name, state, k) if use_push else None
-        if direction == "auto":
-            mf, mu, nnz_f = dm.edge_counts(tiled.deg, fbits, nf)
-            dirs = dm.choose_direction(dirs, mf, mu, nnz_f, n)  # [B]
-        tile_mask = None
-        if slimwork:
-            # union of the per-column direction-specific masks: one SpMM
-            # sweep advances every column, so a tile is live if ANY column
-            # needs it in its own direction
-            if direction == "push":
-                tile_mask = dm.push_tile_mask(tiled, fbits)
-            elif direction == "pull":
-                active = _chunk_active_from(nf.any(axis=1), tiled.row_vertex)
-                tile_mask = jnp.take(active, tiled.row_block, axis=0)
-            else:
-                push_rows = (fbits & (dirs == dm.PUSH)[None, :]).any(axis=1)
-                pull_rows = (nf & (dirs == dm.PULL)[None, :]).any(axis=1)
-                active = _chunk_active_from(pull_rows, tiled.row_vertex)
-                tile_mask = dm.push_tile_mask(tiled, push_rows) \
-                    | jnp.take(active, tiled.row_block, axis=0)
-            if log_work:
-                idx = jnp.minimum(k - 1, WORK_LOG - 1)
-                work = work.at[idx].set(tile_mask.sum(dtype=jnp.int32))
-        if log_work:
-            idx = jnp.minimum(k - 1, WORK_LOG - 1)
-            plog = plog.at[idx].set(
-                jnp.sum(dirs == dm.PULL, dtype=jnp.int32))
-        state, changed = _step_multi(sr_name, tiled, state, k, tile_mask,
-                                     backend)
-        return state, k + 1, changed, work, dirs, plog
-
-    state, k, _, work, _, plog = jax.lax.while_loop(
-        cond, body, (state, jnp.asarray(1, jnp.int32), jnp.asarray(True),
-                     work, d0, plog))
-    return state, k - 1, work, plog
+@functools.lru_cache(maxsize=None)
+def multi_bfs_spec(sr_name: str) -> FixpointSpec:
+    """Multi-source BFS as a batched fixpoint spec: the single-source state
+    algebra with a trailing B axis (``bfs``'s extractors are shape-agnostic
+    and are reused verbatim); the engine supplies the union-mask SpMM loop
+    and the per-column direction carry."""
+    return FixpointSpec(
+        name=f"multi_bfs/{sr_name}",
+        sr_name=sr_name,
+        batched=True,
+        directions=DIRECTIONS,
+        init_state=lambda n, roots, ctx: _init_state_multi(sr_name, n, roots),
+        frontier=lambda ctx, state, k: _frontier_payload(sr_name, state),
+        source_bits=lambda ctx, state, k: dm.frontier_bits(sr_name, state, k),
+        not_final=lambda ctx, state: _not_final(sr_name, state),
+        update=lambda ctx, state, y, k: semiring_update(sr_name, state, y, k,
+                                                        _ids1(y)),
+    )
 
 
 # ----------------------------------------------------------------- public API
@@ -190,12 +142,7 @@ def multi_source_bfs(tiled, roots: Sequence[int],
     its own Beamer direction state; ``pull_cols_log`` (under ``log_work``)
     reports how many columns ran pull per iteration.
     """
-    if semiring not in sm.BFS_SEMIRINGS:
-        raise KeyError(f"multi_source_bfs supports {sm.BFS_SEMIRINGS}, got "
-                       f"{semiring!r} (minplus is the weighted operator — "
-                       "see core.sssp)")
-    if direction not in DIRECTIONS:
-        raise ValueError(f"unknown direction {direction!r}; available: {DIRECTIONS}")
+    _check_bfs_options("multi_source_bfs", semiring, direction)
     if direction in ("push", "auto") and slimwork \
             and getattr(tiled, "inc_src", None) is None:
         raise ValueError("direction-optimizing push masks need the push index;"
@@ -214,6 +161,7 @@ def multi_source_bfs(tiled, roots: Sequence[int],
         # one lane tile must divide evenly, so round up and let column
         # padding (repeat-last-root) absorb the slack
         B = -(-B // 128) * 128
+    spec = multi_bfs_spec(semiring)
 
     d_out = np.empty((roots.size, n), np.int32)
     p_out = np.empty((roots.size, n), np.int32) if need_parents else None
@@ -223,10 +171,11 @@ def multi_source_bfs(tiled, roots: Sequence[int],
         pad = B - batch.size
         batch_p = np.concatenate([batch, np.repeat(batch[-1:], pad)]) \
             if pad else batch
-        state, k, work, plog = _multi_bfs_fused(
-            tiled, jnp.asarray(batch_p), sr_name=semiring, slimwork=slimwork,
-            max_iters=max_iters, log_work=log_work, backend=backend,
-            direction=direction)
+        res = eng.run_fused(spec, tiled, jnp.asarray(batch_p),
+                            slimwork=slimwork, max_iters=max_iters,
+                            log_work=log_work, backend=backend,
+                            direction=direction)
+        state = res.state
         d = np.asarray(state["d"]).T          # [B, n]
         d_out[start:start + batch.size] = d[: batch.size]
         if need_parents:
@@ -240,10 +189,10 @@ def multi_source_bfs(tiled, roots: Sequence[int],
             p_out[start:start + batch.size] = p[: batch.size]
             for b, r in enumerate(batch):
                 p_out[start + b, int(r)] = int(r)
-        iters.append(int(k))
+        iters.append(res.iterations)
         if log_work:
-            work_rows.append(np.asarray(work))
-            plog_rows.append(np.asarray(plog))
+            work_rows.append(res.work_log)
+            plog_rows.append(res.pull_cols_log)
     return MultiBFSResult(
         distances=d_out, parents=p_out, iterations=np.asarray(iters, np.int32),
         roots=roots,

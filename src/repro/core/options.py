@@ -1,0 +1,32 @@
+"""Uniform validation of the engine's public string options.
+
+Every public entry point (``bfs``, ``multi_source_bfs``, ``sssp``, ``cc``,
+``run_graph500*``, the ``make_dist_*`` factories) funnels its ``mode`` /
+``direction`` / ``backend`` / ``semiring`` / ``comm`` strings through
+``check_choice`` so a bad value fails *at the boundary* with one consistent
+message — instead of deep inside a jit trace or, worse, silently falling
+into a default branch (the old ``comm`` dispatch treated any unknown string
+as ``reduce_gather``).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+MODES = ("fused", "hostloop")
+COMMS = ("allreduce", "reduce_gather")
+
+
+def check_choice(name: str, value, allowed: Sequence[str], *,
+                 hint: str = ""):
+    """Validate that ``value`` is one of ``allowed``; raise ValueError if not.
+
+    Returns the value so call sites can validate inline:
+    ``mode = check_choice("mode", mode, MODES)``.
+    """
+    if value not in allowed:
+        opts = ", ".join(repr(a) for a in allowed)
+        msg = f"unknown {name} {value!r}; expected one of: {opts}"
+        if hint:
+            msg += f" ({hint})"
+        raise ValueError(msg)
+    return value

@@ -179,6 +179,28 @@ def slimsell_pull(sr: Semiring, tiled, x: Array, *, row_mask: Array,
     return _combine_and_scatter(sr, tiled, tile_red, tile_mask)
 
 
+def slimsell_pull_mm(sr: Semiring, tiled, X: Array, *, row_mask: Array,
+                     tile_mask: Optional[Array] = None,
+                     backend: Optional[str] = None) -> Array:
+    """Batched bottom-up sweep: the matrix-RHS generalization of
+    ``slimsell_pull`` for multi-source traversal.
+
+    X is [n, B]; ``row_mask`` is bool[n, B] — (row, column) pairs whose
+    output is already final are masked to the semiring ``zero``. The jnp
+    path computes the full SpMM reduction and masks afterwards (the
+    oracle); the pallas path (``kernels/slimsell_pull.py``,
+    ``slimsell_pull_mm_pallas``) additionally early-exits per (chunk row,
+    column tile) once every pending (row, column) pair has accumulated a
+    hit — the same exactness contract as the single-source pull kernel,
+    per batch column.
+    """
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels import ops  # deferred: kernels import this module
+        return ops.pull_mm(sr.name, tiled, X, row_mask, tile_mask=tile_mask)
+    y = slimsell_spmm(sr, tiled, X, tile_mask=tile_mask, backend="jnp")
+    return jnp.where(row_mask, y, jnp.asarray(sr.zero, y.dtype))
+
+
 def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
                   edge_weight: Optional[Callable] = None,
                   tile_mask: Optional[Array] = None,

@@ -11,32 +11,34 @@ SlimSell-W): one relaxation sweep is one min-plus SpMV,
 and ``dist' = min(dist, y)`` is a batch of edge relaxations.
 
 The algorithm is Meyer & Sanders' delta-stepping, expressed entirely in
-sweeps so it runs on the same two engines as BFS:
+sweeps so it runs on the same engine strategies as BFS:
 
 * vertices are bucketed by ``floor(dist / delta)``; buckets settle in order;
 * **light** edges (w <= delta) are relaxed to a fixpoint *within* the current
-  bucket (an inner loop — improvements can land back in the same bucket);
+  bucket (improvements can land back in the same bucket);
 * **heavy** edges (w > delta) are relaxed once per bucket, after it settles
   (a heavy edge from bucket b always lands past bucket b).
 
+Since PR 4 the nested bucket/fixpoint loops are *flattened* into one
+``core.engine`` fixpoint: the state carries a **phase** (``_LIGHT`` — keep
+relaxing light edges within bucket b; ``_HEAVY`` — fire the settled
+bucket's heavy edges once), and the spec's update does the phase
+transitions and the jump to the next non-empty bucket. One engine iteration
+is exactly one relaxation sweep, so the fused ``lax.while_loop``, the
+hostloop with SlimWork tile gathering, and the 2D-distributed strategy all
+come from the engine with no SSSP-specific loop code.
+
 The light/heavy split is two masked views of the same ``wts`` array (the
 other class's slots are set to +inf, the min-plus zero, so they are inert) —
-no second layout is built. SlimWork applies per sweep: only the tiles holding
-a *source* column are touched, selected through the same push index BFS uses
-(a tile mask on the jnp backend, scalar-prefetch grid indirection on pallas).
+no second layout is built; the views live in the spec's ``ctx`` and a
+``lax.cond`` on the phase picks the sweep operand. SlimWork applies per
+sweep: only the tiles holding a *source* column are touched, selected
+through the same push index BFS uses.
 
 ``delta=inf`` degenerates to Bellman-Ford (one bucket, pure sweeps);
 ``delta -> 0`` approaches Dijkstra's settling order (many tiny buckets).
 The default delta is the mean edge weight — the classic bucket-width
 heuristic balancing re-relaxations against bucket count.
-
-Two execution modes, mirroring ``bfs``:
-
-* ``mode="fused"`` — both the bucket loop and the light fixpoint loop are
-  nested ``lax.while_loop``s on device; one dispatch for the whole SSSP.
-* ``mode="hostloop"`` — the loops run on host, each sweep gathers only the
-  active tiles (bucketed to powers of two to bound retracing) before the
-  jitted relaxation; real work-skipping on any backend.
 
 Weights must be non-negative (delta-stepping's bucket-ordering argument
 needs it); ``sssp`` raises on negative weights. With zero-weight edges the
@@ -48,20 +50,20 @@ path enters through a zero-weight edge).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import direction as dm
-from . import semiring as sm
-from .bfs import (WORK_LOG, _SubsetTiled, _pad_tile_ids,
-                  _push_tile_mask_host)
-from .spmv import resolve_backend, slimsell_spmv
+from . import engine as eng
+from .engine import FixpointSpec
+from .options import MODES, check_choice
+from .spmv import resolve_backend
 
 Array = jax.Array
+
+_LIGHT, _HEAVY = 0, 1
 
 
 @dataclasses.dataclass
@@ -114,170 +116,114 @@ def default_delta(tiled) -> float:
     return max(float(mean), 1e-6)
 
 
-# -------------------------------------------------------------------- fused
+# ----------------------------------------------------------------------- spec
 
 
-@partial(jax.jit, static_argnames=("slimwork", "max_iters", "log_work",
-                                   "backend"))
-def _sssp_fused(tiled, root, delta, *, slimwork: bool, max_iters: int,
-                log_work: bool, backend: str):
-    n = tiled.n
+def _begin_bucket(dist: Array, settled: Array, delta: Array):
+    """(bucket index, its members, any live?) — the jump to the next
+    non-empty bucket. All bucket math in float32 so the minimum's bucket
+    always contains the minimum; dist=inf gives floor(inf/delta) -> inf (or
+    nan under delta=inf), which compares False — exactly what unreached
+    rows need."""
+    live = ~settled & jnp.isfinite(dist)
+    b = jnp.floor(jnp.min(jnp.where(live, dist, jnp.inf)) / delta)
+    active = live & (jnp.floor(dist / delta) == b)
+    return b, active, jnp.any(live)
+
+
+def _sssp_setup(tiled, delta):
+    """Per-run constants: the light/heavy +inf-masked views of ``wts``.
+
+    These are tile-space leaves ([T, C, L]), so the engine's hostloop
+    subset step gathers them alongside ``cols``; ``delta`` is a scalar leaf
+    and passes through untouched.
+    """
     inf = jnp.inf
-    # light/heavy = two masked views of one wts array; +inf slots are inert
-    # under min-plus, so each view relaxes only its edge class
-    light = jnp.where(tiled.wts <= delta, tiled.wts, inf)
-    heavy = jnp.where(tiled.wts > delta, tiled.wts, inf)
-    dist0 = jnp.full((n,), inf, jnp.float32).at[root].set(0.0)
-    settled0 = jnp.zeros((n,), bool)
-    work0 = jnp.zeros((WORK_LOG,) if log_work else (1,), jnp.int32)
-    n_tiles_c = jnp.asarray(tiled.cols.shape[0], jnp.int32)
-
-    def relax(dist, active, wsel):
-        """One min-plus sweep from the ``active`` sources over one edge class."""
-        frontier = jnp.where(active, dist, inf)
-        mask = dm.push_tile_mask(tiled, active) if slimwork else None
-        y = slimsell_spmv(sm.MINPLUS, tiled, frontier, weights=wsel,
-                          tile_mask=mask, backend=backend)
-        nd = jnp.minimum(dist, y)
-        used = mask.sum(dtype=jnp.int32) if slimwork else n_tiles_c
-        return nd, nd < dist, used
-
-    def log(work, sweeps, used):
-        if log_work:
-            work = work.at[jnp.minimum(sweeps, WORK_LOG - 1)].set(used)
-        return work
-
-    def outer_cond(carry):
-        dist, settled, sweeps, nb, work = carry
-        return jnp.any(~settled & jnp.isfinite(dist)) & (sweeps < max_iters)
-
-    def outer_body(carry):
-        dist, settled, sweeps, nb, work = carry
-        live = ~settled & jnp.isfinite(dist)
-        # jump straight to the next non-empty bucket
-        b = jnp.floor(jnp.min(jnp.where(live, dist, inf)) / delta)
-        in_b = live & (jnp.floor(dist / delta) == b)
-
-        def inner_cond(c):
-            _, _, active, sweeps, _ = c
-            return jnp.any(active) & (sweeps < max_iters)
-
-        def inner_body(c):
-            dist, removed, active, sweeps, work = c
-            removed = removed | active
-            nd, improved, used = relax(dist, active, light)
-            # an improvement landing back in bucket b re-enters the fixpoint
-            active = improved & (jnp.floor(nd / delta) == b)
-            return nd, removed, active, sweeps + 1, log(work, sweeps, used)
-
-        dist, removed, _, sweeps, work = jax.lax.while_loop(
-            inner_cond, inner_body,
-            (dist, jnp.zeros_like(settled), in_b, sweeps, work))
-
-        # heavy edges once, from everything the bucket processed; a heavy
-        # relaxation always lands past bucket b, so b is final afterwards
-        dist, _, used = relax(dist, removed, heavy)
-        work = log(work, sweeps, used)
-        return dist, settled | removed, sweeps + 1, nb + 1, work
-
-    dist, _, sweeps, nb, work = jax.lax.while_loop(
-        outer_cond, outer_body,
-        (dist0, settled0, jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
-         work0))
-    return dist, sweeps, nb, work
+    return {
+        "light": jnp.where(tiled.wts <= delta, tiled.wts, inf),
+        "heavy": jnp.where(tiled.wts > delta, tiled.wts, inf),
+        "delta": jnp.asarray(delta, jnp.float32),
+    }
 
 
-# ------------------------------------------------------------------ hostloop
-
-
-@partial(jax.jit, static_argnames=("n_active", "n", "n_chunks", "backend"))
-def _relax_subset(tiled_cols, wsel, tiled_row_block, row_vertex, n: int,
-                  n_chunks: int, tile_ids, n_active: int, dist, active,
-                  backend: str):
-    """Gather the active tiles (bucketed size) and relax on them only."""
-    ids = tile_ids[:n_active]
-    sub = _SubsetTiled(
-        cols=jnp.take(tiled_cols, ids, axis=0),
-        wts=jnp.take(wsel, ids, axis=0),
-        row_block=jnp.take(tiled_row_block, ids, axis=0),
-        row_vertex=row_vertex, n=n, n_chunks=n_chunks,
-    )
-    frontier = jnp.where(active, dist, jnp.inf)
-    y = slimsell_spmv(sm.MINPLUS, sub, frontier, weights=sub.wts,
-                      backend=backend)
-    nd = jnp.minimum(dist, y)
-    return nd, nd < dist
-
-
-@partial(jax.jit, static_argnames=("backend",))
-def _relax_full(tiled, wsel, dist, active, backend: str):
-    frontier = jnp.where(active, dist, jnp.inf)
-    y = slimsell_spmv(sm.MINPLUS, tiled, frontier, weights=wsel,
-                      backend=backend)
-    nd = jnp.minimum(dist, y)
-    return nd, nd < dist
-
-
-def _sssp_hostloop(tiled, root: int, delta: float, *, slimwork: bool,
-                   max_iters: int, backend: str):
-    n = tiled.n
-    n_tiles = int(tiled.n_tiles)
-    light = jnp.where(tiled.wts <= delta, tiled.wts, jnp.inf)
-    heavy = jnp.where(tiled.wts > delta, tiled.wts, jnp.inf)
+def _sssp_init(n: int, root, ctx):
     dist = jnp.full((n,), jnp.inf, jnp.float32).at[root].set(0.0)
-    settled = np.zeros(n, bool)
-    inc_src_np = np.asarray(tiled.inc_src)
-    inc_tile_np = np.asarray(tiled.inc_tile)
-    sweeps, buckets = 0, 0
-    work_list: list[int] = []
+    settled = jnp.zeros((n,), bool)
+    b, active, _ = _begin_bucket(dist, settled, ctx["delta"])
+    return {"dist": dist, "settled": settled,
+            "removed": jnp.zeros((n,), bool), "active": active,
+            "phase": jnp.asarray(_LIGHT, jnp.int32), "b": b,
+            "buckets": jnp.asarray(0, jnp.int32)}
 
-    def relax(dist, active_np, wsel):
-        """Host twin of the fused ``relax``: mask math in numpy, sweep jitted."""
-        nonlocal sweeps
-        if slimwork:
-            tmask = _push_tile_mask_host(active_np, inc_src_np, inc_tile_np,
-                                         n_tiles)
-            ids = np.nonzero(tmask)[0]
-            if ids.size == 0:
-                return dist, np.zeros(n, bool)
-            work_list.append(ids.size)
-            ids_p, bucket = _pad_tile_ids(ids, n_tiles)
-            nd, improved = _relax_subset(
-                tiled.cols, wsel, tiled.row_block, tiled.row_vertex, n,
-                tiled.n_chunks, jnp.asarray(ids_p), bucket, dist,
-                jnp.asarray(active_np), backend)
-        else:
-            work_list.append(n_tiles)
-            nd, improved = _relax_full(tiled, wsel, dist,
-                                       jnp.asarray(active_np), backend)
-        sweeps += 1
-        return nd, np.asarray(improved)
 
-    delta32 = np.float32(delta)
-    while sweeps < max_iters:
-        dist_np = np.asarray(dist)
-        live = ~settled & np.isfinite(dist_np)
-        if not live.any():
-            break
-        # bucket indices computed in float32 everywhere so the minimum's
-        # bucket always contains the minimum (no float64/float32 skew);
-        # inf/inf -> nan compares False, which is what unreached rows need
-        with np.errstate(invalid="ignore"):
-            bidx = np.floor(dist_np / delta32)
-        b = bidx[live].min()
-        in_b = live & (bidx == b)
-        removed = np.zeros(n, bool)
-        active = in_b
-        while active.any() and sweeps < max_iters:
-            removed |= active
-            dist, improved = relax(dist, active, light)
-            dist_np = np.asarray(dist)
-            with np.errstate(invalid="ignore"):
-                active = improved & (np.floor(dist_np / delta32) == b)
-        dist, _ = relax(dist, removed, heavy)
-        settled |= removed
-        buckets += 1
-    return dist, sweeps, buckets, np.asarray(work_list, np.int32)
+def _sssp_sources(ctx, state, k) -> Array:
+    """The sweep's source set: the bucket's light-fixpoint frontier while in
+    the light phase; everything the bucket processed for the heavy shot."""
+    return jnp.where(state["phase"] == _LIGHT, state["active"],
+                     state["removed"])
+
+
+def _sssp_frontier(ctx, state, k) -> Array:
+    return jnp.where(_sssp_sources(ctx, state, k), state["dist"], jnp.inf)
+
+
+def _sssp_weights(ctx, state) -> Array:
+    return jax.lax.cond(state["phase"] == _LIGHT,
+                        lambda: ctx["light"], lambda: ctx["heavy"])
+
+
+def _sssp_update(ctx, state, y: Array, k):
+    """One relaxation merge + the delta-stepping phase machine.
+
+    light: re-enter the within-bucket fixpoint with the improvements that
+    landed back in bucket b; once none do, switch to the heavy phase.
+    heavy: the bucket is settled after its single heavy shot — commit it
+    and jump to the next non-empty bucket (done when none remains).
+    """
+    delta = ctx["delta"]
+    nd = jnp.minimum(state["dist"], y)
+    improved = nd < state["dist"]
+
+    def light_case():
+        removed = state["removed"] | state["active"]
+        active = improved & (jnp.floor(nd / delta) == state["b"])
+        has_more = jnp.any(active)
+        phase = jnp.where(has_more, _LIGHT, _HEAVY)
+        return {"dist": nd, "settled": state["settled"], "removed": removed,
+                "active": active, "phase": phase.astype(jnp.int32),
+                "b": state["b"], "buckets": state["buckets"]}, jnp.asarray(True)
+
+    def heavy_case():
+        settled = state["settled"] | state["removed"]
+        b, active, live = _begin_bucket(nd, settled, delta)
+        return {"dist": nd, "settled": settled,
+                "removed": jnp.zeros_like(settled), "active": active,
+                "phase": jnp.asarray(_LIGHT, jnp.int32), "b": b,
+                "buckets": state["buckets"] + 1}, live
+
+    return jax.lax.cond(state["phase"] == _LIGHT, light_case, heavy_case)
+
+
+def _sssp_host_bits(state, k, need_sb, need_nf):
+    """Host twin: one device->host transfer for the phase's source set."""
+    if int(state["phase"]) == _LIGHT:
+        return np.asarray(state["active"]), None
+    return np.asarray(state["removed"]), None
+
+
+SSSP_SPEC = FixpointSpec(
+    name="sssp",
+    sr_name="minplus",
+    directions=("push",),
+    init_state=_sssp_init,
+    frontier=_sssp_frontier,
+    source_bits=_sssp_sources,
+    not_final=lambda ctx, state: ~state["settled"] & jnp.isfinite(state["dist"]),
+    update=_sssp_update,
+    setup=_sssp_setup,
+    weights=_sssp_weights,
+    host_bits=_sssp_host_bits,
+)
 
 
 # -------------------------------------------------------- parents (weighted DP)
@@ -362,12 +308,13 @@ def sssp(tiled, root: int, *, delta: Optional[float] = None,
     """Single-source shortest paths from ``root`` by delta-stepping.
 
     delta: bucket width (None -> mean edge weight; ``inf`` -> Bellman-Ford).
-    mode: "fused" (nested lax.while_loops on device) or "hostloop" (host
-    bucket loop + SlimWork tile gathering per sweep).
+    mode: "fused" (one flattened lax.while_loop on device) or "hostloop"
+    (host loop + SlimWork tile gathering per sweep).
     backend: "jnp" (reference) or "pallas" (weighted SlimSell TPU kernel).
     Returns float32 distances (+inf where unreachable) and, when requested,
     the shortest-path-tree parents via the weighted DP sweep.
     """
+    check_choice("mode", mode, MODES)
     _require_weighted(tiled)
     backend = resolve_backend(backend)
     if slimwork and getattr(tiled, "inc_src", None) is None:
@@ -387,26 +334,25 @@ def sssp(tiled, root: int, *, delta: Optional[float] = None,
     root = int(root)
     if not 0 <= root < n:
         raise ValueError(f"root {root} out of range for n={n}")
+    ctx_args = (jnp.asarray(delta, jnp.float32),)
 
     if mode == "fused":
-        dist, sweeps, buckets, work = _sssp_fused(
-            tiled, jnp.asarray(root, jnp.int32), jnp.asarray(delta, jnp.float32),
-            slimwork=slimwork, max_iters=max_iters, log_work=log_work,
-            backend=backend)
-        wl = np.asarray(work)[: int(sweeps)] if log_work else None
-    elif mode == "hostloop":
-        dist, sweeps, buckets, wl = _sssp_hostloop(
-            tiled, root, delta, slimwork=slimwork, max_iters=max_iters,
-            backend=backend)
-        if not log_work:
-            wl = None
+        res = eng.run_fused(SSSP_SPEC, tiled, jnp.asarray(root, jnp.int32),
+                            ctx_args=ctx_args, slimwork=slimwork,
+                            max_iters=max_iters, log_work=log_work,
+                            backend=backend)
     else:
-        raise ValueError(mode)
+        res = eng.run_hostloop(SSSP_SPEC, tiled, jnp.asarray(root, jnp.int32),
+                               ctx_args=ctx_args, slimwork=slimwork,
+                               max_iters=max_iters, backend=backend)
 
+    dist = res.state["dist"]
+    buckets = int(res.state["buckets"])
+    wl = res.work_log if log_work else None
     parents = None
     if need_parents:
         parents = np.asarray(sssp_parents(tiled, jnp.asarray(dist),
                                           jnp.asarray(root, jnp.int32)))
     return SSSPResult(distances=np.asarray(dist), parents=parents,
-                      sweeps=int(sweeps), buckets=int(buckets),
+                      sweeps=res.iterations, buckets=buckets,
                       delta=delta, work_log=wl)

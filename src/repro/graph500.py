@@ -30,8 +30,11 @@ from typing import Optional
 import numpy as np
 
 from .core.bfs_traditional import bfs_traditional
+from .core.engine import DIRECTIONS
 from .core.formats import CSRGraph, SlimSellTiled, build_slimsell
 from .core.multi_bfs import multi_source_bfs
+from .core.options import MODES, check_choice
+from .core.spmv import resolve_backend
 from .core.sssp import dijkstra_reference, sssp
 from .graphs.generators import kronecker, with_random_weights
 
@@ -114,6 +117,9 @@ def run_graph500(*, scale: int = 10, edge_factor: int = 16, n_roots: int = 64,
     charged to a root is its batch's wall time divided by the batch width
     (the whole batch advances in the same kernel sweeps).
     """
+    # fail at the harness boundary, not per-batch inside the timed loop
+    check_choice("direction", direction, DIRECTIONS)
+    resolve_backend(backend)
     if csr is None:
         csr = kronecker(scale, edge_factor, seed=seed)
     if tiled is None:
@@ -235,6 +241,8 @@ def run_graph500_sssp(*, scale: int = 10, edge_factor: int = 16,
     (SSSP is single-source today — there is no SpMM batching across roots;
     that generalization is on the ROADMAP).
     """
+    check_choice("mode", mode, MODES)
+    resolve_backend(backend)
     if weight_low is None or weight_high is None:
         # deferred: repro.configs pulls the whole arch registry, which this
         # otherwise-light harness module shouldn't import eagerly

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core import semiring as sm
 from .slimsell_spmv import slimsell_spmv_pallas, semiring_ops
 from .slimsell_spmm import slimsell_spmm_pallas
-from .slimsell_pull import slimsell_pull_pallas
+from .slimsell_pull import slimsell_pull_mm_pallas, slimsell_pull_pallas
 from .embedding_bag import embedding_bag_pallas
 
 
@@ -110,6 +110,34 @@ def pull(sr_name: str, tiled, x, row_mask, tile_mask=None, interpret=None):
     nf = jnp.where(rv < 0, False, jnp.take(row_mask, safe, axis=0))
     y_blocks = slimsell_pull_pallas(
         tiled.cols, tile_ids, tiled.row_block, n_active, nf, x,
+        sr_name=sr_name, n_chunks=tiled.n_chunks, interpret=interpret)
+    return _scatter_blocks(sr, tiled, y_blocks[: tiled.n_chunks], tile_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("sr_name", "interpret"))
+def pull_mm(sr_name: str, tiled, X, row_mask, tile_mask=None, interpret=None):
+    """Batched bottom-up sweep via the Pallas pull-MM kernel; Y [n, B].
+
+    row_mask: bool[n, B] — (row, column) pairs still needing a value. The
+    kernel early-exits per (chunk row, column); same exactness contract as
+    ``pull``, per batch column (core.spmv.slimsell_pull_mm is the oracle).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    sr = sm.get(sr_name)
+    T = tiled.cols.shape[0]
+    if tile_mask is None:
+        tile_ids = jnp.arange(T, dtype=jnp.int32)
+        n_active = jnp.asarray([T], jnp.int32)
+    else:
+        tile_ids, n_active = compact_tile_ids(tile_mask)
+    X = X.astype(sr.dtype)
+    # per-column not-final bits in chunk-row space; padding rows never pend
+    rv = tiled.row_vertex                                  # [n_chunks, C]
+    safe = jnp.where(rv < 0, 0, rv)
+    nf = jnp.take(row_mask, safe, axis=0)                  # [n_chunks, C, B]
+    nf = jnp.where((rv < 0)[..., None], False, nf)
+    y_blocks = slimsell_pull_mm_pallas(
+        tiled.cols, tile_ids, tiled.row_block, n_active, nf, X,
         sr_name=sr_name, n_chunks=tiled.n_chunks, interpret=interpret)
     return _scatter_blocks(sr, tiled, y_blocks[: tiled.n_chunks], tile_mask)
 

@@ -26,10 +26,19 @@ computes the full reduction and is the oracle for that contract.
 SlimWork composes unchanged: the wrapper compacts active tile ids into
 ``tile_ids`` (scalar-prefetch grid indirection; inactive tail repeats the
 last active id, so skipped steps issue no DMA).
+
+``slimsell_pull_mm_pallas`` is the **batched** (matrix-RHS) variant for
+multi-source traversal: the frontier is [n, B], the not-final bitmap gains
+a per-column axis, and the early exit happens per (chunk row, batch
+column) — a (row, b) pair that has accumulated a hit stops contributing,
+and a whole tile is skipped only once every pair it covers is final (the
+batched analogue of "stop scanning once a parent is found"). The lane
+dimension carries the batch (d_tile = 128), matching the SpMM kernel.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -112,3 +121,99 @@ def slimsell_pull_pallas(cols, tile_ids, row_block, n_active, nf, x, *,
         out_shape=jax.ShapeDtypeStruct((n_blk * chunk_blk, C), x.dtype),
         interpret=interpret,
     )(tile_ids, row_block, n_active, cols, nf, x)
+
+
+# ----------------------------------------------------------- batched variant
+
+
+def _pull_mm_kernel(tile_ids_ref, row_block_ref, n_active_ref,
+                    cols_ref, nf_ref, x_ref, out_ref, *,
+                    sr_name: str, chunk_blk: int):
+    add, contrib_fn, zero = semiring_ops(sr_name)
+    t = pl.program_id(1)
+    tid = tile_ids_ref[t]
+    chunk = row_block_ref[tid]
+    blk = chunk // chunk_blk
+
+    prev_tid = tile_ids_ref[jnp.maximum(t - 1, 0)]
+    prev_blk = row_block_ref[prev_tid] // chunk_blk
+    first_visit = (t == 0) | (blk != prev_blk)
+
+    @pl.when(first_visit)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, zero)
+
+    row = chunk % chunk_blk
+    sl = (pl.ds(row, 1), slice(None), slice(None))
+    cur = pl.load(out_ref, sl)                           # [1, C, dt]
+    nf = pl.load(nf_ref, sl)                             # [1, C, dt] int32
+    # pending per (row, column): not final and no hit from earlier tiles
+    pending = (nf > 0) & (cur == jnp.asarray(zero, cur.dtype))
+
+    @pl.when((t < n_active_ref[0]) & jnp.any(pending))
+    def _work():
+        cols = cols_ref[0]                               # [C, L]
+        pad = cols < 0
+        safe = jnp.where(pad, 0, cols)
+        xv = x_ref[...]                                  # [n, dt] frontier
+        g = jnp.take(xv, safe.reshape(-1), axis=0)       # [C*L, dt]
+        g = g.reshape(*cols.shape, xv.shape[-1])         # [C, L, dt]
+        contrib = jnp.where(pad[..., None], jnp.asarray(zero, xv.dtype),
+                            contrib_fn(g))
+        red = _reduce_l(sr_name, contrib.swapaxes(1, 2))  # [C, dt]
+        new = jnp.where(pending[0], add(cur[0], red), cur[0])
+        pl.store(out_ref, sl, new[None])
+
+
+@functools.partial(jax.jit, static_argnames=("sr_name", "chunk_blk",
+                                             "n_chunks", "d_tile",
+                                             "interpret"))
+def slimsell_pull_mm_pallas(cols, tile_ids, row_block, n_active, nf, X, *,
+                            sr_name: str, n_chunks: int, chunk_blk: int = 8,
+                            d_tile: int = 128, interpret: bool = True):
+    """Batched tile-level pull sweep.  Returns [n_chunks_pad, C, B]
+    (chunk-row space).
+
+    cols:      int32[T, C, L]
+    tile_ids:  int32[T]  grid order (SlimWork compaction; tail repeats last)
+    row_block: int32[T]  owning chunk per tile
+    n_active:  int32[1]  number of live grid steps
+    nf:        int32[n_chunks, C, B]  1 where the (row, column) still needs
+               a value
+    X:         frontier matrix [n_pad, B]
+    """
+    T, C, L = cols.shape
+    n, B = X.shape
+    d_tile = min(d_tile, B)
+    if B % d_tile:
+        # widths the lane tiling cannot split evenly (B > 128, B % 128 != 0
+        # — e.g. the distributed engine feeds the raw batch, unlike
+        # multi_source_bfs which rounds up) fall back to the largest
+        # common divisor: correct on every backend, narrower lanes on TPU
+        d_tile = math.gcd(B, d_tile)
+    n_blk = -(-n_chunks // chunk_blk)
+    nf = jnp.pad(nf.astype(jnp.int32),
+                 ((0, n_blk * chunk_blk - n_chunks), (0, 0), (0, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B // d_tile, T),
+        in_specs=[
+            pl.BlockSpec((1, C, L),
+                         lambda dt, t, tids, rb, na: (tids[t], 0, 0)),
+            pl.BlockSpec((chunk_blk, C, d_tile),
+                         lambda dt, t, tids, rb, na:
+                         (rb[tids[t]] // chunk_blk, 0, dt)),
+            pl.BlockSpec((n, d_tile), lambda dt, t, tids, rb, na: (0, dt)),
+        ],
+        out_specs=pl.BlockSpec(
+            (chunk_blk, C, d_tile),
+            lambda dt, t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0, dt)),
+    )
+    kernel = functools.partial(_pull_mm_kernel, sr_name=sr_name,
+                               chunk_blk=chunk_blk)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blk * chunk_blk, C, B), X.dtype),
+        interpret=interpret,
+    )(tile_ids, row_block, n_active, cols, nf, X)

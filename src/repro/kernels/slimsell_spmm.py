@@ -25,6 +25,7 @@ Per-device use at scale: the mesh partitions vertices into column ranges
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -93,7 +94,12 @@ def slimsell_spmm_pallas(cols, tile_ids, row_block, n_active, rv_tiles, X,
     T, C, L = cols.shape
     n, d = X.shape
     d_tile = min(d_tile, d)
-    assert d % d_tile == 0, (d, d_tile)
+    if d % d_tile:
+        # widths the lane tiling cannot split evenly (d > 128, d % 128 != 0
+        # — the distributed engine feeds the raw batch, unlike
+        # multi_source_bfs which rounds up) fall back to the largest common
+        # divisor: correct on every backend, narrower lanes on TPU
+        d_tile = math.gcd(d, d_tile)
     n_blk = -(-n_chunks // chunk_blk)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,

@@ -1,0 +1,258 @@
+"""Refactor-regression suite for the shared fixpoint engine (core/engine.py).
+
+PR 4 rewrote bfs/multi_bfs/sssp/cc as specs over one engine; these tests pin
+the engine's behavior to the independent oracles (queue BFS, Dijkstra,
+scipy CC) across every strategy knob, plus the engine-internal helpers the
+algorithms used to own (hostloop push-mask build, tile-id bucketing,
+zero-step termination) and the uniform option validation.
+"""
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core.bfs import bfs, bfs_spec
+from repro.core.bfs_traditional import bfs_traditional
+from repro.core.cc import CC_SPEC, cc
+from repro.core.formats import build_csr, build_slimsell
+from repro.core.multi_bfs import multi_bfs_spec, multi_source_bfs
+from repro.core.sssp import SSSP_SPEC, dijkstra_reference, sssp
+from repro.graphs.generators import (erdos_renyi, kronecker, star,
+                                     two_components, with_random_weights)
+
+import scipy.sparse as sp
+import scipy.sparse.csgraph as csgraph
+
+
+def _layout(csr, C=8, L=32):
+    return build_slimsell(csr, C=C, L=L).to_jax()
+
+
+# ------------------------------------------------------------ spec plumbing
+
+
+def test_specs_are_cached_singletons():
+    """The engine's jit caches key on spec identity — the factories must
+    return the same object for the same semiring."""
+    assert bfs_spec("tropical") is bfs_spec("tropical")
+    assert multi_bfs_spec("selmax") is multi_bfs_spec("selmax")
+    assert bfs_spec("tropical") is not bfs_spec("boolean")
+
+
+def test_all_specs_declare_valid_semirings():
+    for spec in [bfs_spec("tropical"), multi_bfs_spec("real"), SSSP_SPEC,
+                 CC_SPEC]:
+        from repro.core import semiring as sm
+        sm.get(spec.sr_name)  # raises if unknown
+        assert spec.update is not None and spec.frontier is not None
+
+
+# --------------------------------------------- engine output pinned to oracles
+
+
+@pytest.mark.parametrize("semiring", ["tropical", "real", "boolean", "selmax"])
+@pytest.mark.parametrize("mode", ["fused", "hostloop"])
+def test_bfs_engine_matches_oracle(semiring, mode):
+    csr = kronecker(8, 8, seed=11)
+    tiled = _layout(csr)
+    root = int(np.argmax(csr.deg))
+    d_ref, _ = bfs_traditional(csr, root)
+    for direction in ["push", "pull", "auto"]:
+        res = bfs(tiled, root, semiring, mode=mode, direction=direction,
+                  need_parents=True)
+        assert np.array_equal(res.distances, d_ref), direction
+        # parents form a valid tree: level decreases by one along the edge
+        reach = res.distances > 0
+        pv = res.parents[reach]
+        assert (res.distances[pv] == res.distances[reach] - 1).all()
+
+
+@pytest.mark.parametrize("mode", ["fused", "hostloop"])
+def test_sssp_engine_matches_dijkstra(mode):
+    csr = with_random_weights(erdos_renyi(128, 6, seed=2), seed=3)
+    tiled = _layout(csr, L=16)
+    d_ref = dijkstra_reference(csr, 0)
+    for delta in [None, np.inf]:
+        res = sssp(tiled, 0, mode=mode, delta=delta)
+        assert np.allclose(res.distances, d_ref, rtol=1e-5, atol=1e-5)
+        assert res.sweeps > 0
+        assert res.buckets >= 1
+    # Bellman-Ford (delta=inf) is a single bucket
+    assert sssp(tiled, 0, mode=mode, delta=np.inf).buckets == 1
+
+
+@pytest.mark.parametrize("mode", ["fused", "hostloop"])
+def test_cc_engine_matches_scipy(mode):
+    csr = two_components(6, 6, seed=5)
+    tiled = _layout(csr, L=16)
+    res = cc(tiled, mode=mode)
+    adj = sp.csr_matrix((np.ones(csr.nnz), csr.indices, csr.indptr),
+                        shape=(csr.n, csr.n))
+    n_ref, comp = csgraph.connected_components(adj, directed=False)
+    assert res.n_components == n_ref
+    # canonical labels: identical partition
+    for c in range(n_ref):
+        assert len(np.unique(res.labels[comp == c])) == 1
+
+
+def test_fused_and_hostloop_agree_on_work_totals():
+    """Hostloop gathers the same active tiles the fused mask selects."""
+    csr = kronecker(8, 8, seed=1)
+    tiled = _layout(csr)
+    root = int(np.argmax(csr.deg))
+    a = bfs(tiled, root, "tropical", mode="fused", log_work=True)
+    b = bfs(tiled, root, "tropical", mode="hostloop")
+    assert a.iterations == b.iterations
+    assert np.array_equal(a.work_log, b.work_log)
+
+
+# ------------------------------------------------------- engine-internal bits
+
+
+def test_push_tile_mask_host_matches_bruteforce():
+    """The frontier-walk mask build (inc_ptr ranges) equals the full-scan
+    reference on random frontiers."""
+    csr = erdos_renyi(200, 5, seed=9)
+    tiled = build_slimsell(csr, C=8, L=16)
+    rng = np.random.default_rng(0)
+    inc_src = np.asarray(tiled.inc_src)
+    inc_tile = np.asarray(tiled.inc_tile)
+    inc_ptr = np.asarray(tiled.inc_ptr)
+    n_tiles = int(tiled.n_tiles)
+    for frac in [0.0, 0.01, 0.3, 1.0]:
+        active = rng.random(csr.n) < frac
+        got = eng._push_tile_mask_host(active, inc_ptr, inc_tile, n_tiles)
+        ref = np.zeros(n_tiles, bool)
+        ref[inc_tile[active[inc_src]]] = True  # the old O(K) full scan
+        assert np.array_equal(got, ref), frac
+
+
+def test_inc_ptr_indexes_sorted_push_index():
+    csr = kronecker(7, 6, seed=4)
+    tiled = build_slimsell(csr, C=8, L=16)
+    inc_src, inc_ptr = np.asarray(tiled.inc_src), np.asarray(tiled.inc_ptr)
+    assert inc_ptr.shape == (csr.n + 1,)
+    assert inc_ptr[0] == 0 and inc_ptr[-1] == inc_src.size
+    for v in [0, 1, csr.n // 2, csr.n - 1]:
+        assert (inc_src[inc_ptr[v]:inc_ptr[v + 1]] == v).all()
+
+
+def test_pad_tile_ids_buckets_and_repeats_last():
+    ids = np.asarray([3, 7, 9], np.int32)
+    padded, bucket = eng._pad_tile_ids(ids, n_tiles=100)
+    assert bucket == 4 and padded.tolist() == [3, 7, 9, 9]
+    padded, bucket = eng._pad_tile_ids(ids, n_tiles=3)
+    assert bucket == 3  # capped at the tile count
+    one, b1 = eng._pad_tile_ids(np.asarray([5], np.int32), 8)
+    assert b1 == 1 and one.tolist() == [5]
+
+
+def test_isolated_root_terminates_every_mode():
+    """An isolated root's push mask is empty: the engine's zero-step must
+    terminate cleanly (and delta-stepping must still advance its phase)."""
+    edges = np.array([[1, 2], [2, 3]])
+    csr = build_csr(edges, 5)  # vertices 0 and 4 isolated
+    tiled = _layout(csr, C=4, L=8)
+    for mode in ["fused", "hostloop"]:
+        res = bfs(tiled, 0, "tropical", mode=mode)
+        assert res.distances[0] == 0 and (res.distances[1:] == -1).all()
+    wcsr = build_csr(edges, 5, weights=np.asarray([1.0, 2.0], np.float32))
+    wtiled = _layout(wcsr, C=4, L=8)
+    for mode in ["fused", "hostloop"]:
+        res = sssp(wtiled, 0, mode=mode)
+        assert res.distances[0] == 0 and np.isinf(res.distances[1:]).all()
+
+
+def test_star_graph_pull_after_first_hop():
+    """On a star the auto heuristic must flip to pull once the hub expands."""
+    csr = star(256)
+    tiled = _layout(csr, L=16)
+    res = bfs(tiled, 0, "tropical", mode="hostloop", direction="auto")
+    d_ref, _ = bfs_traditional(csr, 0)
+    assert np.array_equal(res.distances, d_ref)
+
+
+# -------------------------------------------------- uniform option validation
+
+
+def test_bad_options_rejected_at_every_entry_point():
+    csr = kronecker(6, 4, seed=0)
+    tiled = _layout(csr, C=4, L=8)
+    wcsr = with_random_weights(csr, seed=1)
+    wtiled = _layout(wcsr, C=4, L=8)
+    with pytest.raises(ValueError, match="unknown mode"):
+        bfs(tiled, 0, "tropical", mode="warp")
+    with pytest.raises(ValueError, match="unknown direction"):
+        bfs(tiled, 0, "tropical", direction="sideways")
+    with pytest.raises(ValueError, match="unknown backend"):
+        bfs(tiled, 0, "tropical", backend="cuda")
+    with pytest.raises(ValueError, match="unknown direction"):
+        multi_source_bfs(tiled, [0], direction="diagonal")
+    with pytest.raises(ValueError, match="unknown mode"):
+        sssp(wtiled, 0, mode="warp")
+    with pytest.raises(ValueError, match="unknown backend"):
+        sssp(wtiled, 0, backend="cuda")
+    with pytest.raises(ValueError, match="unknown mode"):
+        cc(tiled, mode="warp")
+    with pytest.raises(ValueError, match="unknown cc semiring"):
+        cc(tiled, semiring="tropical")
+    from repro.graph500 import run_graph500, run_graph500_sssp
+    with pytest.raises(ValueError, match="unknown direction"):
+        run_graph500(scale=5, n_roots=1, direction="sideways")
+    with pytest.raises(ValueError, match="unknown backend"):
+        run_graph500(scale=5, n_roots=1, backend="cuda")
+    with pytest.raises(ValueError, match="unknown mode"):
+        run_graph500_sssp(scale=5, n_roots=1, mode="warp")
+    with pytest.raises(ValueError, match="unknown backend"):
+        run_graph500_sssp(scale=5, n_roots=1, backend="cuda")
+
+
+def test_dist_factories_validate_options():
+    """The mesh factories validate before any tracing happens (no mesh or
+    data needed to see the error)."""
+    from repro.core.dist_bfs import DistSlimSell, make_dist_bfs, make_dist_sssp
+    meta = DistSlimSell(n=16, C=4, L=8, R=2, Co=2, n_col=8,
+                        chunks_per_shard=2, t_max=1, cols=None,
+                        row_block=None, row_vertex=None)
+    with pytest.raises(ValueError, match="unknown direction"):
+        make_dist_bfs(None, meta, direction="sideways")
+    with pytest.raises(ValueError, match="unknown comm"):
+        make_dist_bfs(None, meta, comm="gossip")
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_dist_sssp(None, meta, backend="cuda")
+    with pytest.raises(ValueError, match="supported by sssp"):
+        from repro.core.dist_bfs import make_dist_fixpoint
+        from repro.core.sssp import SSSP_SPEC
+        make_dist_fixpoint(None, meta, SSSP_SPEC, direction="pull")
+
+
+# ------------------------------------------------------- batched pull engine
+
+
+def test_batched_pull_matches_push_and_pallas():
+    csr = kronecker(8, 8, seed=3)
+    tiled = _layout(csr)
+    roots = [int(np.argmax(csr.deg)), 0, 9]
+    ref = multi_source_bfs(tiled, roots, "tropical").distances
+    for semiring in ["tropical", "real", "boolean", "selmax"]:
+        for backend in ["jnp", "pallas"]:
+            got = multi_source_bfs(tiled, roots, semiring, direction="pull",
+                                   backend=backend).distances
+            assert np.array_equal(got, ref), (semiring, backend)
+
+
+def test_pull_mm_primitive_backends_agree_on_levels():
+    """ops.pull_mm vs the jnp oracle on a level-homogeneous frontier (the
+    kernel's exactness contract)."""
+    import jax.numpy as jnp
+    from repro.core import semiring as sm
+    from repro.core.spmv import slimsell_pull_mm
+    from repro.kernels import ops
+    csr = erdos_renyi(96, 5, seed=7)
+    tiled = _layout(csr, C=4, L=8)
+    rng = np.random.default_rng(1)
+    X = (rng.random((csr.n, 4)) < 0.2).astype(np.int32)
+    mask = rng.random((csr.n, 4)) < 0.5
+    y_ref = slimsell_pull_mm(sm.BOOLEAN, tiled, jnp.asarray(X),
+                             row_mask=jnp.asarray(mask), backend="jnp")
+    y_ker = ops.pull_mm("boolean", tiled, jnp.asarray(X), jnp.asarray(mask))
+    assert np.array_equal(np.asarray(y_ref), np.asarray(y_ker))

@@ -1,0 +1,160 @@
+"""TEPS trajectory over time: append bench runs to BENCH_rev.json, gate CI.
+
+``benchmarks/run.py`` writes one ``BENCH_<tag>.json`` snapshot per run
+(scheme -> metrics). This tool maintains the *committed trajectory file*
+``BENCH_rev.json`` — a list of those snapshots' headline metrics over time —
+and turns it into a CI gate:
+
+    # fail (exit 1) when any scheme's TEPS dropped >30% vs the last
+    # recorded point for that scheme
+    python tools/bench_trajectory.py check --bench BENCH_ci.json
+
+    # append the run as a new trajectory point (CI commits the result
+    # back to main from the bench-smoke job)
+    python tools/bench_trajectory.py append --bench BENCH_ci.json
+
+Only ``teps`` is compared (the one metric every traversal bench records);
+all scheme metrics are stored so the trajectory doubles as a perf history.
+Schemes appearing for the first time pass the check by definition, and a
+scheme missing from the new run is reported but not fatal (bench subsets
+vary by CI job). Comparisons are restricted to points from the same jax
+backend and graph scale; note that shared CI runners still add wall-clock
+noise — if the 30% gate proves too tight across runner generations, raise
+``--max-drop`` in ci.yml rather than deleting the gate. The gate compares
+against the *last* recorded point (the tracked quantity is "did this
+change regress perf"), so a slow drift of sub-threshold drops can
+accumulate; the committed history makes that drift visible and auditable
+even though no single run fails on it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+TRAJECTORY_FORMAT = "slimsell-bench-trajectory/1"
+DEFAULT_MAX_DROP = 0.30
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _snapshot_point(bench: dict) -> dict:
+    """One trajectory point from a benchmarks/run.py snapshot."""
+    return {
+        "tag": bench.get("tag", "?"),
+        "timestamp": bench.get("timestamp", ""),
+        "jax_version": bench.get("jax_version", ""),
+        "jax_backend": bench.get("jax_backend", ""),
+        "schemes": bench.get("schemes", {}),
+    }
+
+
+def load_trajectory(path: str) -> dict:
+    """Read the trajectory; a legacy single-snapshot BENCH file (pre-PR 4
+    BENCH_rev.json) is absorbed as the first point."""
+    if not os.path.exists(path):
+        return {"format": TRAJECTORY_FORMAT, "points": []}
+    data = _load(path)
+    if data.get("format") == TRAJECTORY_FORMAT:
+        return data
+    return {"format": TRAJECTORY_FORMAT, "points": [_snapshot_point(data)]}
+
+
+def last_teps(traj: dict, scheme: str, backend: str,
+              metrics: dict) -> float | None:
+    """Most recent recorded TEPS for ``scheme`` on the same jax backend
+    (cpu CI numbers must not gate a tpu run and vice versa — points with an
+    unknown backend are skipped rather than matched against everything)
+    and — when both sides record one — the same graph ``scale`` (a scale-8
+    local point must not gate a scale-10 CI run under the same scheme
+    key)."""
+    for point in reversed(traj["points"]):
+        if backend and point.get("jax_backend") != backend:
+            continue
+        m = point["schemes"].get(scheme)
+        if not m or "teps" not in m:
+            continue
+        if "scale" in m and "scale" in metrics and m["scale"] != metrics["scale"]:
+            continue
+        if math.isfinite(m["teps"]) and m["teps"] > 0:
+            return float(m["teps"])
+    return None
+
+
+def check(bench: dict, traj: dict, max_drop: float) -> int:
+    backend = bench.get("jax_backend", "")
+    schemes = {s: m for s, m in bench.get("schemes", {}).items()
+               if "teps" in m}
+    if not schemes:
+        print("# trajectory check FAILED: run recorded no TEPS at all")
+        return 1
+    failures, new, compared = [], [], 0
+    for scheme, metrics in sorted(schemes.items()):
+        prev = last_teps(traj, scheme, backend, metrics)
+        cur = float(metrics["teps"])
+        if not (math.isfinite(cur) and cur > 0):
+            # a NaN/zero current value must fail the gate, not slip through
+            # the drop comparison (NaN > max_drop is False)
+            print(f"# {scheme}: current TEPS is {cur!r} FAIL")
+            failures.append((scheme, prev, cur))
+            continue
+        if prev is None:
+            new.append(scheme)
+            continue
+        compared += 1
+        drop = 1.0 - cur / prev
+        status = "FAIL" if drop > max_drop else "ok"
+        print(f"# {scheme}: {prev:.3e} -> {cur:.3e} "
+              f"({-drop * 100:+.1f}%) {status}")
+        if drop > max_drop:
+            failures.append((scheme, prev, cur))
+    if new:
+        print(f"# {len(new)} new scheme(s) with no history: "
+              + ", ".join(new))
+    if failures:
+        print(f"# trajectory check FAILED: {len(failures)} scheme(s) "
+              f"regressed more than {max_drop * 100:.0f}%")
+        return 1
+    print(f"# trajectory check ok: {compared} compared, {len(new)} new, "
+          f"max allowed drop {max_drop * 100:.0f}%")
+    return 0
+
+
+def append(bench: dict, traj: dict, path: str, keep: int) -> int:
+    traj["points"].append(_snapshot_point(bench))
+    if keep > 0:
+        traj["points"] = traj["points"][-keep:]
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# appended point '{traj['points'][-1]['tag']}' -> {path} "
+          f"({len(traj['points'])} points)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("command", choices=["check", "append"])
+    ap.add_argument("--bench", default="BENCH_ci.json",
+                    help="snapshot written by benchmarks/run.py")
+    ap.add_argument("--trajectory", default="BENCH_rev.json",
+                    help="committed trajectory file")
+    ap.add_argument("--max-drop", type=float, default=DEFAULT_MAX_DROP,
+                    help="fail when TEPS drops more than this fraction")
+    ap.add_argument("--keep", type=int, default=200,
+                    help="retain at most this many trajectory points")
+    args = ap.parse_args(argv)
+    bench = _load(args.bench)
+    traj = load_trajectory(args.trajectory)
+    if args.command == "check":
+        return check(bench, traj, args.max_drop)
+    return append(bench, traj, args.trajectory, args.keep)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
