@@ -1,27 +1,160 @@
-"""Batched multi-source BFS vs per-root BFS: TEPS at several batch widths.
+"""Batched multi-source BFS and SSSP vs per-root: TEPS at several widths.
 
-The paper's Graph500 protocol amortizes graph construction over 64 BFS runs;
-the multi-source engine goes further and amortizes the *adjacency reads*:
-one semiring SpMM sweep advances every root in the batch. This benchmark
-quantifies the trade — batching reuses structure but unions the SlimWork
-masks (less work-skipping per root).
+The paper's Graph500 protocol amortizes graph construction over 64 search
+keys; the multi-source engines go further and amortize the *adjacency
+reads*: one semiring SpMM sweep advances every root in the batch. For the
+weighted kernel the batching win compounds — a min-plus SpMM reads the
+adjacency AND the weight slots once per sweep for the whole batch. This
+benchmark quantifies the trade for both kernels — batching reuses structure
+but unions the SlimWork masks (less work-skipping per root) — and records
+the batched-vs-per-root TEPS rows into the BENCH trajectory.
 
     PYTHONPATH=src python benchmarks/bench_multisource.py [--scale 9]
+    PYTHONPATH=src python benchmarks/bench_multisource.py --only sssp
+    PYTHONPATH=src python -m benchmarks.run --only multisource
 """
 import argparse
 import time
 
 import numpy as np
 
-import common
+try:  # package execution (benchmarks.run) or standalone script
+    from . import common
+except ImportError:
+    import common
+from repro.configs.sssp_graph500 import WEIGHT_HIGH, WEIGHT_LOW
 from repro.core.bfs import bfs
+from repro.core.formats import build_slimsell
 from repro.core.multi_bfs import multi_source_bfs
+from repro.core.multi_sssp import multi_source_sssp
+from repro.core.sssp import sssp
 from repro.graph500 import sample_roots
+from repro.graphs.generators import with_random_weights
+
+SECTIONS = ("bfs", "sssp")
 
 
-def _teps(csr, distances, seconds, n_runs):
-    edges = sum(max(1, int(csr.deg[d >= 0].sum()) // 2) for d in distances)
+def _teps(csr, distances, seconds, n_runs, *, weighted=False):
+    reached = (np.isfinite if weighted
+               else (lambda d: np.asarray(d) >= 0))
+    edges = sum(max(1, int(csr.deg[reached(d)].sum()) // 2)
+                for d in distances)
     return edges / seconds, edges / n_runs
+
+
+def run_bfs(scale: int = 9, ef: int = 8, n_roots: int = 16,
+            semiring: str = "tropical", backend: str = "jnp",
+            batches=(4, 8, 16)):
+    """Batched multi-source BFS vs per-root BFS (+ the direction sweep)."""
+    csr = common.graph("kron", scale, ef)
+    tiled = common.tiled("kron", scale, ef, C=8, L=32)
+    roots = sample_roots(csr, n_roots)
+    print(f"# bfs: n={csr.n} m={csr.m_undirected} roots={roots.size} "
+          f"semiring={semiring} backend={backend}")
+
+    # baseline: one bfs() per root (warm up the jit on the first root first)
+    bfs(tiled, int(roots[0]), semiring, backend=backend)
+    t0 = time.perf_counter()
+    base_d = [bfs(tiled, int(r), semiring, backend=backend).distances
+              for r in roots]
+    base_s = time.perf_counter() - t0
+    teps, _ = _teps(csr, base_d, base_s, roots.size)
+    common.emit(f"per_root/{semiring}/{backend}",
+                base_s / roots.size * 1e6, f"TEPS={teps:.3e}")
+
+    for B in batches:
+        # warm up this batch width's compiled loop, then time steady-state
+        multi_source_bfs(tiled, roots[:B], semiring, batch_size=B,
+                         backend=backend)
+        t0 = time.perf_counter()
+        res = multi_source_bfs(tiled, roots, semiring, batch_size=B,
+                               backend=backend)
+        dt = time.perf_counter() - t0
+        assert all(np.array_equal(res.distances[i], base_d[i])
+                   for i in range(roots.size)), f"batched != per-root at B={B}"
+        teps, _ = _teps(csr, res.distances, dt, roots.size)
+        common.emit(f"multisource/B={B}/{semiring}/{backend}",
+                    dt / roots.size * 1e6,
+                    f"TEPS={teps:.3e} speedup={base_s / dt:.2f}x")
+
+    # batched direction comparison: push SpMM vs the true batched pull sweep
+    # (slimsell_pull_mm; per-(row, column) early exit on pallas) vs the
+    # per-column auto switch, at one representative batch width
+    B = batches[-1]
+    for direction in ("push", "pull", "auto"):
+        multi_source_bfs(tiled, roots[:B], semiring, batch_size=B,
+                         backend=backend, direction=direction)
+        t0 = time.perf_counter()
+        res = multi_source_bfs(tiled, roots, semiring, batch_size=B,
+                               backend=backend, direction=direction)
+        dt = time.perf_counter() - t0
+        assert all(np.array_equal(res.distances[i], base_d[i])
+                   for i in range(roots.size)), \
+            f"direction={direction} != per-root"
+        teps, _ = _teps(csr, res.distances, dt, roots.size)
+        common.emit(f"multisource/B={B}/{direction}/{semiring}/"
+                    f"{backend}", dt / roots.size * 1e6,
+                    f"TEPS={teps:.3e}")
+        common.record(f"multisource/{direction}/{semiring}",
+                      teps=teps, batch=B, scale=scale,
+                      iterations=int(res.iterations.max()))
+
+
+def run_sssp(scale: int = 9, ef: int = 8, n_roots: int = 16,
+             backend: str = "jnp", batches=(4, 8, 16)):
+    """Batched multi-source SSSP (min-plus SpMM) vs per-root delta-stepping.
+
+    Every batched run is asserted bit-equal to the per-root distances before
+    its TEPS row is recorded, so a trajectory point can never come from a
+    wrong answer. Schemes: ``multisource/sssp/per_root`` and
+    ``multisource/sssp/B=<width>`` (the batched-vs-per-root comparison the
+    trajectory tracks).
+    """
+    csr = with_random_weights(common.graph("kron", scale, ef),
+                              low=WEIGHT_LOW, high=WEIGHT_HIGH, seed=2)
+    tiled = build_slimsell(csr, C=8, L=32).to_jax()
+    roots = sample_roots(csr, n_roots)
+    print(f"# sssp: n={csr.n} m={csr.m_undirected} roots={roots.size} "
+          f"backend={backend}")
+
+    sssp(tiled, int(roots[0]), backend=backend)  # jit warm-up
+    t0 = time.perf_counter()
+    base = [sssp(tiled, int(r), backend=backend) for r in roots]
+    base_s = time.perf_counter() - t0
+    base_d = [r.distances for r in base]
+    teps, _ = _teps(csr, base_d, base_s, roots.size, weighted=True)
+    common.emit(f"multisource/sssp/per_root/{backend}",
+                base_s / roots.size * 1e6,
+                f"TEPS={teps:.3e} sweeps={int(np.mean([r.sweeps for r in base]))}")
+    common.record("multisource/sssp/per_root", teps=teps, scale=scale,
+                  sweeps=int(max(r.sweeps for r in base)))
+
+    for B in batches:
+        multi_source_sssp(tiled, roots[:B], batch_size=B, backend=backend)
+        t0 = time.perf_counter()
+        res = multi_source_sssp(tiled, roots, batch_size=B, backend=backend)
+        dt = time.perf_counter() - t0
+        assert all(np.array_equal(res.distances[i], base_d[i])
+                   for i in range(roots.size)), \
+            f"batched sssp != per-root at B={B}"
+        assert all(res.sweeps[i] == base[i].sweeps
+                   for i in range(roots.size)), \
+            f"batched sweep counts != per-root at B={B}"
+        teps, _ = _teps(csr, res.distances, dt, roots.size, weighted=True)
+        common.emit(f"multisource/sssp/B={B}/{backend}",
+                    dt / roots.size * 1e6,
+                    f"TEPS={teps:.3e} speedup={base_s / dt:.2f}x")
+        common.record(f"multisource/sssp/B={B}", teps=teps, batch=B,
+                      scale=scale, speedup_vs_per_root=base_s / dt,
+                      iterations=int(res.iterations.max()))
+
+
+def run(scale: int = 9, ef: int = 8, only=SECTIONS):
+    """benchmarks/run.py entry point: both sections at one scale."""
+    if "bfs" in only:
+        run_bfs(scale, ef)
+    if "sssp" in only:
+        run_sssp(scale, ef)
 
 
 def main():
@@ -32,60 +165,28 @@ def main():
     ap.add_argument("--semiring", default="tropical")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--batches", type=int, nargs="+", default=[4, 8, 16])
+    ap.add_argument("--only", default="bfs,sssp",
+                    help="comma-separated subset of: bfs, sssp")
+    ap.add_argument("--tag", default="multisource",
+                    help="results file suffix: BENCH_<tag>.json")
     args = ap.parse_args()
+    sections = [s for s in args.only.split(",") if s]
+    for s in sections:
+        if s not in SECTIONS:
+            ap.error(f"unknown section {s!r}; expected subset of {SECTIONS}")
 
-    csr = common.graph("kron", args.scale, args.ef)
-    tiled = common.tiled("kron", args.scale, args.ef, C=8, L=32)
-    roots = sample_roots(csr, args.roots)
-    print(f"# n={csr.n} m={csr.m_undirected} roots={roots.size} "
-          f"semiring={args.semiring} backend={args.backend}")
+    if "bfs" in sections:
+        run_bfs(args.scale, args.ef, args.roots, args.semiring, args.backend,
+                tuple(args.batches))
+    if "sssp" in sections:
+        run_sssp(args.scale, args.ef, args.roots, args.backend,
+                 tuple(args.batches))
 
-    # baseline: one bfs() per root (warm up the jit on the first root first)
-    bfs(tiled, int(roots[0]), args.semiring, backend=args.backend)
-    t0 = time.perf_counter()
-    base_d = [bfs(tiled, int(r), args.semiring, backend=args.backend).distances
-              for r in roots]
-    base_s = time.perf_counter() - t0
-    teps, _ = _teps(csr, base_d, base_s, roots.size)
-    common.emit(f"per_root/{args.semiring}/{args.backend}",
-                base_s / roots.size * 1e6, f"TEPS={teps:.3e}")
-
-    for B in args.batches:
-        # warm up this batch width's compiled loop, then time steady-state
-        multi_source_bfs(tiled, roots[:B], args.semiring, batch_size=B,
-                         backend=args.backend)
-        t0 = time.perf_counter()
-        res = multi_source_bfs(tiled, roots, args.semiring, batch_size=B,
-                               backend=args.backend)
-        dt = time.perf_counter() - t0
-        assert all(np.array_equal(res.distances[i], base_d[i])
-                   for i in range(roots.size)), f"batched != per-root at B={B}"
-        teps, _ = _teps(csr, res.distances, dt, roots.size)
-        common.emit(f"multisource/B={B}/{args.semiring}/{args.backend}",
-                    dt / roots.size * 1e6,
-                    f"TEPS={teps:.3e} speedup={base_s / dt:.2f}x")
-
-    # batched direction comparison: push SpMM vs the true batched pull sweep
-    # (slimsell_pull_mm; per-(row, column) early exit on pallas) vs the
-    # per-column auto switch, at one representative batch width
-    B = args.batches[-1]
-    for direction in ("push", "pull", "auto"):
-        multi_source_bfs(tiled, roots[:B], args.semiring, batch_size=B,
-                         backend=args.backend, direction=direction)
-        t0 = time.perf_counter()
-        res = multi_source_bfs(tiled, roots, args.semiring, batch_size=B,
-                               backend=args.backend, direction=direction)
-        dt = time.perf_counter() - t0
-        assert all(np.array_equal(res.distances[i], base_d[i])
-                   for i in range(roots.size)), \
-            f"direction={direction} != per-root"
-        teps, _ = _teps(csr, res.distances, dt, roots.size)
-        common.emit(f"multisource/B={B}/{direction}/{args.semiring}/"
-                    f"{args.backend}", dt / roots.size * 1e6,
-                    f"TEPS={teps:.3e}")
-        common.record(f"multisource/{direction}/{args.semiring}",
-                      teps=teps, batch=B, scale=args.scale,
-                      iterations=int(res.iterations.max()))
+    # standalone runs write the same machine-readable snapshot as
+    # benchmarks/run.py (which owns the JSON when this module runs as a
+    # registered bench), so `--only sssp` trajectories are recordable via
+    # tools/bench_trajectory.py either way
+    common.write_json(f"BENCH_{args.tag}.json", args.tag)
 
 
 if __name__ == "__main__":

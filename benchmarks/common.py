@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+import json
 import time
 
 import jax
@@ -29,6 +30,27 @@ def record(scheme: str, **metrics):
     RESULTS.setdefault(scheme, {}).update(
         {k: (float(v) if isinstance(v, (int, float, np.floating, np.integer))
              else v) for k, v in metrics.items()})
+
+
+def write_json(path: str, tag: str) -> dict:
+    """Serialize the run's ROWS/RESULTS as one BENCH_<tag>.json snapshot —
+    the machine-readable format docs/BENCHMARKS.md documents and
+    tools/bench_trajectory.py consumes. The single serializer is shared by
+    benchmarks/run.py and the standalone benches so the schema cannot fork."""
+    payload = {
+        "tag": tag,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "schemes": RESULTS,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in ROWS],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path} ({len(RESULTS)} schemes, "
+          f"{len(ROWS)} rows)", flush=True)
+    return payload
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:

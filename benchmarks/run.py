@@ -13,14 +13,14 @@ from __future__ import annotations
 
 import argparse
 import inspect
-import json
 import math
 import sys
 import time
 
-from . import (bench_cc, bench_direction, bench_layout, bench_semirings,
-               bench_slimchunk, bench_slimsell, bench_slimwork, bench_sssp,
-               bench_storage, bench_vs_traditional, bench_work)
+from . import (bench_cc, bench_direction, bench_layout, bench_multisource,
+               bench_semirings, bench_slimchunk, bench_slimsell,
+               bench_slimwork, bench_sssp, bench_storage,
+               bench_vs_traditional, bench_work)
 from . import common
 
 ALL = {
@@ -35,25 +35,8 @@ ALL = {
     "direction": bench_direction,        # beyond-paper: push/pull/auto TEPS
     "sssp": bench_sssp,                  # beyond-paper: delta-stepping SSSP
     "cc": bench_cc,                      # beyond-paper: connected components
+    "multisource": bench_multisource,    # beyond-paper: batched BFS/SSSP
 }
-
-
-def write_json(path: str, tag: str) -> dict:
-    import jax
-    payload = {
-        "tag": tag,
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-        "jax_version": jax.__version__,
-        "jax_backend": jax.default_backend(),
-        "schemes": common.RESULTS,
-        "rows": [{"name": n, "us_per_call": us, "derived": d}
-                 for n, us, d in common.ROWS],
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-    print(f"# wrote {path} ({len(common.RESULTS)} schemes, "
-          f"{len(common.ROWS)} rows)", flush=True)
-    return payload
 
 
 def check_teps(payload: dict) -> int:
@@ -95,7 +78,8 @@ def main(argv=None) -> int:
         t0 = time.time()
         mod.run(**kwargs)
         print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
-    payload = write_json(args.json or f"BENCH_{args.tag}.json", args.tag)
+    payload = common.write_json(args.json or f"BENCH_{args.tag}.json",
+                                args.tag)
     return check_teps(payload) if args.check_teps else 0
 
 

@@ -4,8 +4,9 @@ Build a graph, build SlimSell, run algebraic BFS on every semiring and both
 execution backends, switch traversal direction with the Beamer heuristic
 (``direction="auto"``), batch 8 roots through the multi-source SpMM engine,
 run weighted SSSP (delta-stepping over the min-plus semiring) against the
-Dijkstra oracle, run connected components (sel-max label propagation and
-boolean peeling), compare against the traditional oracle, inspect storage.
+Dijkstra oracle — per-root and batched through the weighted min-plus SpMM
+engine — run connected components (sel-max label propagation and boolean
+peeling), compare against the traditional oracle, inspect storage.
 
 CI executes this script (docs job), so everything the README documents is
 exercised here and cannot rot.
@@ -29,6 +30,7 @@ from repro.core.bfs_traditional import bfs_traditional
 from repro.core.cc import cc
 from repro.core.formats import build_slimsell, storage_summary
 from repro.core.multi_bfs import multi_source_bfs
+from repro.core.multi_sssp import multi_source_sssp
 from repro.core.sssp import dijkstra_reference, sssp
 from repro.graphs.generators import kronecker, with_random_weights
 
@@ -126,8 +128,8 @@ def main():
 
     # 8. the same specs over a 2D device mesh (here 2x2 forced host devices):
     #    rows x columns of the adjacency sharded over ("data", "model"), one
-    #    semiring all-reduce per iteration; bfs/multi/sssp/cc all come from
-    #    the shared engine's distributed strategy.
+    #    semiring all-reduce per iteration; bfs/multi/sssp/multi-sssp/cc all
+    #    come from the shared engine's distributed strategy.
     import jax
     import jax.numpy as jnp
     from repro.compat import make_mesh
@@ -136,40 +138,71 @@ def main():
         # backend there is no 2x2 mesh to build — skip the demo, don't crash
         print(f"dist demo skipped: {jax.local_device_count()} device(s) on "
               f"backend={jax.default_backend()} (needs 4; run on CPU)")
-        return
-    from repro.core.dist_bfs import (make_dist_bfs, make_dist_cc,
-                                     make_dist_multi_bfs, make_dist_sssp,
-                                     partition_slimsell)
-    mesh = make_mesh((2, 2), ("data", "model"))
-    dist = partition_slimsell(csr, R=2, Co=2, C=8, L=128)
-    dfn = make_dist_bfs(mesh, dist, "tropical", max_iters=64,
-                        direction="auto")
-    d, iters = dfn(dist.cols, dist.row_block, dist.row_vertex,
-                   jnp.asarray(dist.deg, jnp.int32), np.int32(root))
-    print(f"dist bfs (2x2 mesh, auto): iters={int(iters)} "
-          f"matches_oracle={np.array_equal(np.asarray(d), d_ref)}")
-    mfn = make_dist_multi_bfs(mesh, dist, "selmax", max_iters=64,
-                              direction="pull")
-    md, _ = mfn(dist.cols, dist.row_block, dist.row_vertex,
-                roots.astype(np.int32))
-    ok = all(np.array_equal(np.asarray(md)[i],
-                            bfs_traditional(csr, int(r))[0])
-             for i, r in enumerate(roots))
-    print(f"dist multi-source (pull): {len(roots)} roots, matches_oracle={ok}")
-    wdist = partition_slimsell(wcsr, R=2, Co=2, C=8, L=128)
-    sfn = make_dist_sssp(mesh, wdist, max_iters=512)
-    # the mean-edge-weight default from step 6, so the mesh run exercises
-    # real multi-bucket delta-stepping (bf.delta is inf == Bellman-Ford)
-    sd, sweeps, buckets = sfn(wdist.cols, wdist.row_block, wdist.row_vertex,
-                              wdist.wts, np.int32(root),
-                              np.float32(delta_default))
-    print(f"dist sssp: sweeps={int(sweeps)} buckets={int(buckets)} "
-          f"matches_dijkstra="
-          f"{np.allclose(np.asarray(sd), sp_ref, rtol=1e-4, atol=1e-5)}")
-    cfn = make_dist_cc(mesh, dist)
-    labels, _ = cfn(dist.cols, dist.row_block, dist.row_vertex)
-    print(f"dist cc: matches_single_device="
-          f"{np.array_equal(np.asarray(labels), res_lp.labels)}")
+    else:
+        from repro.core.dist_bfs import (make_dist_bfs, make_dist_cc,
+                                         make_dist_multi_bfs,
+                                         make_dist_multi_sssp, make_dist_sssp,
+                                         partition_slimsell)
+        mesh = make_mesh((2, 2), ("data", "model"))
+        dist = partition_slimsell(csr, R=2, Co=2, C=8, L=128)
+        dfn = make_dist_bfs(mesh, dist, "tropical", max_iters=64,
+                            direction="auto")
+        d, iters = dfn(dist.cols, dist.row_block, dist.row_vertex,
+                       jnp.asarray(dist.deg, jnp.int32), np.int32(root))
+        print(f"dist bfs (2x2 mesh, auto): iters={int(iters)} "
+              f"matches_oracle={np.array_equal(np.asarray(d), d_ref)}")
+        mfn = make_dist_multi_bfs(mesh, dist, "selmax", max_iters=64,
+                                  direction="pull")
+        md, _ = mfn(dist.cols, dist.row_block, dist.row_vertex,
+                    roots.astype(np.int32))
+        ok = all(np.array_equal(np.asarray(md)[i],
+                                bfs_traditional(csr, int(r))[0])
+                 for i, r in enumerate(roots))
+        print(f"dist multi-source (pull): {len(roots)} roots, "
+              f"matches_oracle={ok}")
+        wdist = partition_slimsell(wcsr, R=2, Co=2, C=8, L=128)
+        sfn = make_dist_sssp(mesh, wdist, max_iters=512)
+        # the mean-edge-weight default from step 6, so the mesh run exercises
+        # real multi-bucket delta-stepping (bf.delta is inf == Bellman-Ford)
+        sd, sweeps, buckets = sfn(wdist.cols, wdist.row_block,
+                                  wdist.row_vertex, wdist.wts, np.int32(root),
+                                  np.float32(delta_default))
+        print(f"dist sssp: sweeps={int(sweeps)} buckets={int(buckets)} "
+              f"matches_dijkstra="
+              f"{np.allclose(np.asarray(sd), sp_ref, rtol=1e-4, atol=1e-5)}")
+        msfn = make_dist_multi_sssp(mesh, wdist, max_iters=512)
+        msd, _, msweeps, _ = msfn(wdist.cols, wdist.row_block,
+                                  wdist.row_vertex, wdist.wts,
+                                  roots[:4].astype(np.int32),
+                                  np.float32(delta_default))
+        ok = all(np.allclose(np.asarray(msd)[i],
+                             dijkstra_reference(wcsr, int(r)),
+                             rtol=1e-4, atol=1e-5)
+                 for i, r in enumerate(roots[:4]))
+        print(f"dist multi-source sssp: {len(roots[:4])} roots over the "
+              f"column-sharded distance matrix, matches_dijkstra={ok}")
+        cfn = make_dist_cc(mesh, dist)
+        labels, _ = cfn(dist.cols, dist.row_block, dist.row_vertex)
+        print(f"dist cc: matches_single_device="
+              f"{np.array_equal(np.asarray(labels), res_lp.labels)}")
+
+    # 9. batched multi-source SSSP: B roots' distance columns advance
+    #    together through one weighted min-plus SpMM per relaxation sweep
+    #    (core.multi_sssp) — the weighted twin of step 5's SpMM batching,
+    #    with per-column delta buckets and union SlimWork tile masks. The
+    #    per-root sweeps/buckets match the per-root engine of step 6
+    #    exactly, on both backends (the pallas kernel's wts block shares the
+    #    cols block's scalar-prefetch indirection).
+    sp_refs = [dijkstra_reference(wcsr, int(r)) for r in roots]
+    for backend in ("jnp", "pallas"):
+        ms = multi_source_sssp(wtiled, roots, backend=backend)
+        ok = all(np.allclose(ms.distances[i], sp_refs[i],
+                             rtol=1e-4, atol=1e-5)
+                 for i in range(len(roots)))
+        print(f"multi-source sssp/{backend:6s}: {len(roots)} roots in "
+              f"{int(ms.iterations.max())} batch sweeps "
+              f"(per-root sweeps={ms.sweeps.tolist()}), "
+              f"matches_dijkstra={ok}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Core: SlimSell + the semiring sweep engine, and the algorithms built on it
-(BFS, multi-source BFS, delta-stepping SSSP, connected components) — each a
-``FixpointSpec`` over the shared ``engine`` (fused / hostloop / distributed
-strategies)."""
+(BFS, multi-source BFS, delta-stepping SSSP — single-source and batched
+multi-source, connected components) — each a ``FixpointSpec`` over the
+shared ``engine`` (fused / hostloop / distributed strategies)."""
 from . import (semiring, formats, spmv, engine, bfs, bfs_traditional,  # noqa: F401
-               dist_bfs, multi_bfs, complexity, sssp, cc, options)
+               dist_bfs, multi_bfs, multi_sssp, complexity, sssp, cc, options)

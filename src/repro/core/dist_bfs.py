@@ -7,9 +7,10 @@ with column indices *localized* to its column range.
 
 Since PR 4 the distributed loop is the third strategy of the shared fixpoint
 engine (``core.engine``): **any** ``FixpointSpec`` — single-source BFS,
-batched multi-source BFS, flattened delta-stepping SSSP, CC label
-propagation — runs over the 2D partition with no per-algorithm distributed
-code. One iteration on device (i, j):
+batched multi-source BFS, flattened delta-stepping SSSP (single-source and
+batched over the column-sharded distance matrix), CC label propagation —
+runs over the 2D partition with no per-algorithm distributed code. One
+iteration on device (i, j):
 
   1. local sweep over the owned tiles via the ordinary ``slimsell_spmv`` /
      ``slimsell_pull`` / ``slimsell_spmm`` primitives (the local layout is a
@@ -49,6 +50,7 @@ from .cc import CC_SPEC
 from .engine import DIRECTIONS, WORK_LOG, FixpointSpec
 from .formats import CSRGraph, sellcs_order
 from .multi_bfs import multi_bfs_spec
+from .multi_sssp import MULTI_SSSP_SPEC
 from .options import COMMS, check_choice
 from .spmv import resolve_backend
 from .sssp import SSSP_SPEC
@@ -434,6 +436,33 @@ def make_dist_sssp(mesh: Mesh, meta: DistSlimSell, *,
 
     def fn(cols, row_block, row_vertex, wts, root, delta):
         return run(cols, row_block, row_vertex, wts, root,
+                   (jnp.asarray(delta, jnp.float32),))
+    return fn
+
+
+def make_dist_multi_sssp(mesh: Mesh, meta: DistSlimSell, *,
+                         row_axes: Sequence[str] = ("data",),
+                         col_axes: Sequence[str] = ("model",),
+                         max_iters: int = 512, comm: str = "allreduce",
+                         backend: Optional[str] = None):
+    """Jitted distributed batched multi-source SSSP over the column-sharded
+    distance matrix: (cols, row_block, row_vertex, wts, roots[B], delta) ->
+    (distances float32[B, n], iterations, sweeps int32[B], buckets int32[B]).
+
+    One weighted min-plus SpMM per iteration relaxes every root's column;
+    the per-column phase machines run replicated (same flattened
+    delta-stepping state as ``multi_source_sssp``), so per-root sweeps and
+    buckets match the single-device engine exactly. The local sweep feeds
+    the raw batch width to the SpMM kernel (gcd lane-tile fallback for
+    widths that 128 does not divide)."""
+    run = make_dist_fixpoint(
+        mesh, meta, MULTI_SSSP_SPEC, row_axes=row_axes, col_axes=col_axes,
+        max_iters=max_iters, comm=comm, backend=backend, direction="push",
+        finalize=lambda state, iters, dirs:
+            (state["dist"].T, iters, state["sweeps"], state["buckets"]))
+
+    def fn(cols, row_block, row_vertex, wts, roots, delta):
+        return run(cols, row_block, row_vertex, wts, roots,
                    (jnp.asarray(delta, jnp.float32),))
     return fn
 

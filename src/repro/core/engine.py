@@ -119,7 +119,7 @@ def _sweep(spec: FixpointSpec, tiled, x, w, tile_mask, rows, backend: str,
         return slimsell_pull(sr, tiled, x, row_mask=rows,
                              tile_mask=tile_mask, backend=backend)
     if spec.batched:
-        return slimsell_spmm(sr, tiled, x, tile_mask=tile_mask,
+        return slimsell_spmm(sr, tiled, x, weights=w, tile_mask=tile_mask,
                              backend=backend)
     return slimsell_spmv(sr, tiled, x, weights=w, tile_mask=tile_mask,
                          backend=backend)
@@ -372,13 +372,16 @@ def _full_step(spec: FixpointSpec, tiled, ctx, state, k, pull: bool,
     return spec.update(ctx, state, y, k)
 
 
-@partial(jax.jit, static_argnames=("spec", "n"))
-def _zero_step(spec: FixpointSpec, n: int, ctx, state, k):
+@partial(jax.jit, static_argnames=("spec", "n", "width"))
+def _zero_step(spec: FixpointSpec, n: int, ctx, state, k,
+               width: Optional[int] = None):
     """Update against an all-zero sweep result: what an empty tile set
     computes. BFS-style specs report no change and terminate; phase-carrying
-    specs (delta-stepping) still advance their phase."""
+    specs (delta-stepping) still advance their phase. ``width`` is the batch
+    width for batched specs (their sweep result is [n, B])."""
     sr = sm.get(spec.sr_name)
-    y = jnp.full((n,), sr.zero, sr.dtype)
+    shape = (n,) if width is None else (n, width)
+    y = jnp.full(shape, sr.zero, sr.dtype)
     return spec.update(ctx, state, y, k)
 
 
@@ -392,9 +395,17 @@ def run_hostloop(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
     All mask and heuristic math happens in numpy via the spec's
     ``host_bits`` twin — one device sync per state field per iteration
     instead of ~20 dispatches.
+
+    Batched specs run push-only: their ``host_bits`` source matrix
+    [n, B] is unioned over columns into the shared SlimWork tile set
+    (mirroring the fused strategy's union masks); per-column pull/auto
+    state is a fused-strategy feature.
     """
-    if spec.batched:
-        raise NotImplementedError(f"{spec.name}: hostloop is single-column")
+    if spec.batched and direction != "push":
+        raise NotImplementedError(
+            f"{spec.name}: batched hostloop is push-only "
+            "(per-column pull/auto state needs the fused strategy)")
+    width = int(np.asarray(arg).shape[0]) if spec.batched else None
     n = tiled.n
     ctx = spec.setup(tiled, *ctx_args) if spec.setup is not None else None
     state = spec.init_state(n, arg, ctx)
@@ -413,6 +424,10 @@ def run_hostloop(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
     work_list, dir_list = [], []
     while k <= max_iters:
         sb, nf = spec.host_bits(state, k, use_push, direction != "push")
+        if sb is not None and sb.ndim > 1:
+            # batched spec: one shared tile set — the union of the
+            # per-column source sets (the SpMM advances every column)
+            sb = sb.any(axis=1)
         if direction == "auto":
             dcur = dm.choose_direction_host(
                 dcur, float(deg_np[sb].sum()), float(deg_np[nf].sum()),
@@ -432,7 +447,7 @@ def run_hostloop(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
                 # still counts as an iteration (0 tiles) so sweep counts
                 # and work logs match the fused strategy, whose while_loop
                 # body runs the all-masked sweep.
-                state, cont = _zero_step(spec, n, ctx, state, kdev)
+                state, cont = _zero_step(spec, n, ctx, state, kdev, width)
                 work_list.append(0)
                 dir_list.append(dcur)
                 iters = k

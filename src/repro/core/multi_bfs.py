@@ -98,6 +98,30 @@ def _init_state_multi(sr_name: str, n: int, roots: Array):
     raise ValueError(sr_name)
 
 
+def _iter_batches(roots: np.ndarray, batch_size: Optional[int], backend: str):
+    """Resolve the device batch width and yield ``(start, batch, padded)``
+    slices — the batching scaffold shared by the multi-source BFS and SSSP
+    front doors.
+
+    The width defaults to all roots in one batch. On the pallas backend the
+    SpMM kernels tile the batch axis in lanes of 128, so widths over one
+    lane tile must divide evenly: round up and let column padding (repeat
+    the last root) absorb the slack — callers drop the padded columns. The
+    final partial batch is padded the same way.
+    """
+    B = int(batch_size) if batch_size is not None else roots.size
+    if B <= 0:
+        raise ValueError(f"batch_size must be positive, got {batch_size}")
+    if backend == "pallas" and B > 128 and B % 128:
+        B = -(-B // 128) * 128
+    for start in range(0, roots.size, B):
+        batch = roots[start:start + B]
+        pad = B - batch.size
+        batch_p = np.concatenate([batch, np.repeat(batch[-1:], pad)]) \
+            if pad else batch
+        yield start, batch, batch_p
+
+
 # ----------------------------------------------------------------------- spec
 
 
@@ -153,24 +177,12 @@ def multi_source_bfs(tiled, roots: Sequence[int],
         raise ValueError("multi_source_bfs needs at least one root")
     n = tiled.n
     max_iters = int(max_iters) if max_iters is not None else n
-    B = int(batch_size) if batch_size is not None else roots.size
-    if B <= 0:
-        raise ValueError(f"batch_size must be positive, got {batch_size}")
-    if backend == "pallas" and B > 128 and B % 128:
-        # the SpMM kernel tiles the batch axis in lanes of 128; widths over
-        # one lane tile must divide evenly, so round up and let column
-        # padding (repeat-last-root) absorb the slack
-        B = -(-B // 128) * 128
     spec = multi_bfs_spec(semiring)
 
     d_out = np.empty((roots.size, n), np.int32)
     p_out = np.empty((roots.size, n), np.int32) if need_parents else None
     iters, work_rows, plog_rows = [], [], []
-    for start in range(0, roots.size, B):
-        batch = roots[start:start + B]
-        pad = B - batch.size
-        batch_p = np.concatenate([batch, np.repeat(batch[-1:], pad)]) \
-            if pad else batch
+    for start, batch, batch_p in _iter_batches(roots, batch_size, backend):
         res = eng.run_fused(spec, tiled, jnp.asarray(batch_p),
                             slimwork=slimwork, max_iters=max_iters,
                             log_work=log_work, backend=backend,

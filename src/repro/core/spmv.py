@@ -32,7 +32,9 @@ Per-edge weights come in two flavors:
 * **stored** (``weights=`` — SlimSell-W): a [T, C, L] float array aligned
   with ``cols`` (``SlimSellTiled.wts``); the edge contributes
   ``mul(w, x[col])`` — ``w + x[col]`` under min-plus. Supported on both
-  backends; this is the SSSP operand.
+  backends and on both RHS shapes: the SpMV form is the SSSP operand, the
+  SpMM form (weights broadcast over the RHS columns) is the batched
+  multi-source SSSP operand.
 * **derived** (``edge_weight=`` callable): computed in-register from the
   (row, col) vertex ids, keeping the Slim no-``val`` property for weights
   that are functions of vertex state, e.g. GCN's D^-1/2 A D^-1/2. Derived
@@ -203,25 +205,43 @@ def slimsell_pull_mm(sr: Semiring, tiled, X: Array, *, row_mask: Array,
 
 def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
                   edge_weight: Optional[Callable] = None,
+                  weights: Optional[Array] = None,
                   tile_mask: Optional[Array] = None,
                   backend: Optional[str] = None) -> Array:
     """Matrix RHS generalization: X is [n, d]; returns [n, d] (DESIGN.md §2).
 
-    The GNN aggregation backend (real semiring == sum aggregation) and the
-    multi-source BFS engine (d == number of concurrent roots, any semiring).
+    The GNN aggregation backend (real semiring == sum aggregation), the
+    multi-source BFS engine (d == number of concurrent roots, any semiring)
+    and — with ``weights=`` — the batched multi-source SSSP engine, where
+    one min-plus sweep relaxes B distance columns at once.
+    ``weights``: optional stored per-slot weights [T, C, L] (SlimSell-W),
+    broadcast over the RHS columns: each edge contributes
+    ``mul(w, X[col, :])`` — ``w + X[col, :]`` under min-plus. Supported on
+    both backends, like the SpMV's stored-weight path.
     ``tile_mask`` applies SlimWork to the whole RHS batch at once.
     """
+    if sr.name == "minplus" and weights is None:
+        # same guard as the SpMV: minplus without stored weights would
+        # silently degrade the weighted operator to hop counts
+        raise ValueError("the minplus semiring needs stored weights "
+                         "(weights=tiled.wts); for the implicit-1 edge value "
+                         "use the tropical semiring")
+    if weights is not None and edge_weight is not None:
+        raise ValueError("pass stored weights= or derived edge_weight=, not both")
     if resolve_backend(backend) == "pallas":
         if edge_weight is not None:
             raise NotImplementedError(
                 "callable edge weights are jnp-only; the pallas backend "
                 "derives the GCN weight via repro.kernels.ops.spmm(weighted=True)")
         from repro.kernels import ops  # deferred: kernels import this module
-        return ops.spmm(sr.name, tiled, X, tile_mask=tile_mask)
+        return ops.spmm(sr.name, tiled, X, tile_mask=tile_mask,
+                        weights=weights)
     pad = tiled.cols < 0
     safe = jnp.where(pad, 0, tiled.cols)
     gathered = jnp.take(X, safe, axis=0)  # [T, C, L, d]
-    if edge_weight is not None:
+    if weights is not None:
+        gathered = sr.mul(weights.astype(gathered.dtype)[..., None], gathered)
+    elif edge_weight is not None:
         rv_tile = jnp.take(tiled.row_vertex, tiled.row_block, axis=0)[:, :, None]
         w = edge_weight(rv_tile, safe)
         gathered = sr.mul(w[..., None], gathered)

@@ -116,6 +116,22 @@ def default_delta(tiled) -> float:
     return max(float(mean), 1e-6)
 
 
+def _resolve_delta(tiled, delta: Optional[float]) -> float:
+    """Shared front-door validation for the SSSP engines (single-source and
+    batched multi-source): non-negative weights, positive bucket width,
+    mean-edge-weight default. Returns the delta actually used."""
+    wmin, _ = _weight_stats(tiled)  # cached per layout; also warms default_delta
+    if wmin < 0:
+        raise ValueError(f"delta-stepping needs non-negative weights; "
+                         f"min weight is {wmin}")
+    if delta is None:
+        delta = default_delta(tiled)  # cached stats: no second scan
+    delta = float(delta)
+    if not delta > 0:
+        raise ValueError(f"delta must be positive, got {delta}")
+    return delta
+
+
 # ----------------------------------------------------------------------- spec
 
 
@@ -320,15 +336,7 @@ def sssp(tiled, root: int, *, delta: Optional[float] = None,
     if slimwork and getattr(tiled, "inc_src", None) is None:
         raise ValueError("SlimWork source masks need the push index; rebuild "
                          "the layout with formats.build_slimsell")
-    wmin, _ = _weight_stats(tiled)  # cached per layout; also warms default_delta
-    if wmin < 0:
-        raise ValueError(f"delta-stepping needs non-negative weights; "
-                         f"min weight is {wmin}")
-    if delta is None:
-        delta = default_delta(tiled)  # cached stats: no second scan
-    delta = float(delta)
-    if not delta > 0:
-        raise ValueError(f"delta must be positive, got {delta}")
+    delta = _resolve_delta(tiled, delta)
     n = tiled.n
     max_iters = int(max_iters) if max_iters is not None else 4 * n + 16
     root = int(root)

@@ -17,9 +17,11 @@ reachability agrees with the reference oracle).
     print(rep.summary())
 
 ``run_graph500_sssp`` is the weighted twin (Graph500's second kernel):
-uniform (0, 1]-style edge weights, one delta-stepping run per key through
-``core.sssp``, distances validated against the host Dijkstra oracle and
-parents against the tight-relaxation check.
+uniform (0, 1]-style edge weights, delta-stepping per key through
+``core.sssp`` — or, with ``batched=True``, in key batches through the
+multi-source min-plus SpMM engine (``core.multi_sssp``) — distances
+validated against the host Dijkstra oracle and parents against the
+tight-relaxation check.
 """
 from __future__ import annotations
 
@@ -33,6 +35,7 @@ from .core.bfs_traditional import bfs_traditional
 from .core.engine import DIRECTIONS
 from .core.formats import CSRGraph, SlimSellTiled, build_slimsell
 from .core.multi_bfs import multi_source_bfs
+from .core.multi_sssp import multi_source_sssp
 from .core.options import MODES, check_choice
 from .core.spmv import resolve_backend
 from .core.sssp import dijkstra_reference, sssp
@@ -207,18 +210,21 @@ class Graph500SSSPReport:
     delta: float
     roots: np.ndarray
     teps: np.ndarray           # per-root TEPS-equivalent (relaxed edges / s)
-    sweeps: np.ndarray         # relaxation SpMVs per root
+    sweeps: np.ndarray         # relaxation sweeps per root
     buckets: np.ndarray        # delta buckets per root
     validated: int
+    batched: bool = False      # min-plus SpMM batching across roots?
+    batch_size: int = 1        # roots per SpMM batch when batched
 
     @property
     def harmonic_mean_teps(self) -> float:
         return float(1.0 / np.mean(1.0 / self.teps))
 
     def summary(self) -> str:
+        batch = f"batch={self.batch_size} " if self.batched else ""
         return (f"graph500-sssp scale={self.scale} ef={self.edge_factor} "
                 f"n={self.n} m={self.m} backend={self.backend} "
-                f"mode={self.mode} delta={self.delta:.4g} "
+                f"mode={self.mode} {batch}delta={self.delta:.4g} "
                 f"roots={len(self.roots)} validated={self.validated} "
                 f"hmean_TEPS={self.harmonic_mean_teps:.3e} "
                 f"sweeps/root={float(self.sweeps.mean()):.1f}")
@@ -227,6 +233,7 @@ class Graph500SSSPReport:
 def run_graph500_sssp(*, scale: int = 10, edge_factor: int = 16,
                       n_roots: int = 16, delta: Optional[float] = None,
                       backend: Optional[str] = None, mode: str = "fused",
+                      batched: bool = False, batch_size: int = 16,
                       C: int = 8, L: int = 128, seed: int = 1,
                       weight_low: Optional[float] = None,
                       weight_high: Optional[float] = None,
@@ -236,13 +243,21 @@ def run_graph500_sssp(*, scale: int = 10, edge_factor: int = 16,
                       ) -> Graph500SSSPReport:
     """Weighted Graph500 kernel: delta-stepping from sampled keys, validated.
 
-    TEPS accounting mirrors the BFS harness: the edges charged to a root are
-    the undirected edges with a reached endpoint, over that root's wall time
-    (SSSP is single-source today — there is no SpMM batching across roots;
-    that generalization is on the ROADMAP).
+    ``batched=True`` runs the keys in batches through the multi-source
+    min-plus SpMM engine (``core.multi_sssp``) — one relaxation sweep
+    advances every root in the batch, the weighted twin of the BFS
+    harness's batching. Per-root distances, sweeps and buckets are
+    identical to the per-root engine (asserted by the validation).
+
+    TEPS accounting mirrors the BFS harness: the edges charged to a root
+    are the undirected edges with a reached endpoint; the time charged is
+    its own wall time per-root, or its batch's wall time divided by the
+    batch width when batched (the whole batch advances in the same sweeps).
     """
     check_choice("mode", mode, MODES)
     resolve_backend(backend)
+    if batch_size <= 0:
+        raise ValueError(f"batch_size must be positive, got {batch_size}")
     if weight_low is None or weight_high is None:
         # deferred: repro.configs pulls the whole arch registry, which this
         # otherwise-light harness module shouldn't import eagerly
@@ -266,23 +281,43 @@ def run_graph500_sssp(*, scale: int = 10, edge_factor: int = 16,
     buckets = np.empty(roots.size, np.int32)
     validated = 0
     delta_used = None
-    for i, r in enumerate(roots):
-        t0 = time.perf_counter()
-        res = sssp(tiled, int(r), delta=delta, mode=mode, backend=backend,
-                   need_parents=need_parents)
-        dt = time.perf_counter() - t0
-        delta_used = res.delta
-        d = res.distances
+
+    def account(i, r, dt, d, n_sweeps, n_buckets, parents):
+        """Per-root Graph500 accounting + validation, shared by both loops."""
+        nonlocal validated
         reached_edges = max(1, int(csr.deg[np.isfinite(d)].sum()) // 2)
         teps[i] = reached_edges / dt
-        sweeps[i] = res.sweeps
-        buckets[i] = res.buckets
+        sweeps[i] = n_sweeps
+        buckets[i] = n_buckets
         if validate:
-            validate_sssp_tree(csr, int(r), d,
-                               res.parents if need_parents else None)
+            validate_sssp_tree(csr, int(r), d, parents)
             validated += 1
+
+    if batched:
+        for start in range(0, roots.size, batch_size):
+            batch = roots[start:start + batch_size]
+            t0 = time.perf_counter()
+            res = multi_source_sssp(tiled, batch, delta=delta, mode=mode,
+                                    backend=backend, batch_size=batch.size,
+                                    need_parents=need_parents)
+            dt = time.perf_counter() - t0
+            delta_used = res.delta
+            for b, r in enumerate(batch):
+                account(start + b, r, dt / batch.size, res.distances[b],
+                        res.sweeps[b], res.buckets[b],
+                        res.parents[b] if need_parents else None)
+    else:
+        for i, r in enumerate(roots):
+            t0 = time.perf_counter()
+            res = sssp(tiled, int(r), delta=delta, mode=mode, backend=backend,
+                       need_parents=need_parents)
+            dt = time.perf_counter() - t0
+            delta_used = res.delta
+            account(i, r, dt, res.distances, res.sweeps, res.buckets,
+                    res.parents if need_parents else None)
     return Graph500SSSPReport(
         scale=scale, edge_factor=edge_factor, n=csr.n, m=csr.m_undirected,
         backend=backend or "jnp", mode=mode, delta=float(delta_used),
         roots=roots, teps=teps, sweeps=sweeps, buckets=buckets,
-        validated=validated)
+        validated=validated, batched=batched,
+        batch_size=batch_size if batched else 1)

@@ -144,8 +144,14 @@ def pull_mm(sr_name: str, tiled, X, row_mask, tile_mask=None, interpret=None):
 
 @functools.partial(jax.jit, static_argnames=("sr_name", "weighted", "interpret"))
 def spmm(sr_name: str, tiled, X, deg=None, weighted=False, tile_mask=None,
-         interpret=None):
-    """SlimSell SpMM (feature aggregation / multi-source BFS); Y [n, d]."""
+         weights=None, interpret=None):
+    """SlimSell SpMM (feature aggregation / multi-source BFS/SSSP); Y [n, d].
+
+    weights: optional stored per-slot weights float32[T, C, L] (SlimSell-W);
+    routes to the stored-weight kernel, whose weight block shares the cols
+    block's tile indirection — the batched min-plus (multi-source SSSP)
+    operand. Mutually exclusive with the derived GCN ``weighted=`` path.
+    """
     interpret = _default_interpret() if interpret is None else interpret
     sr = sm.get(sr_name)
     T = tiled.cols.shape[0]
@@ -160,7 +166,7 @@ def spmm(sr_name: str, tiled, X, deg=None, weighted=False, tile_mask=None,
         X.astype(sr.dtype) if not weighted else X,
         deg if deg is not None else jnp.ones((tiled.n,), jnp.float32),
         sr_name=sr_name, n_chunks=tiled.n_chunks, weighted=weighted,
-        interpret=interpret)
+        interpret=interpret, wts=weights)
     return _scatter_blocks(sr, tiled, y_blocks[: tiled.n_chunks], tile_mask)
 
 

@@ -13,6 +13,10 @@ VMEM across the SlimChunk tiles of a chunk. Two workloads share the kernel:
   vector — no val array is ever stored.
 * batched multi-source BFS (Graph500) — d = number of concurrent roots, any
   of the four semirings; one kernel sweep advances every root's frontier.
+* batched multi-source SSSP — d = number of concurrent roots under min-plus
+  with a *stored* weight block (``wts``, SlimSell-W) riding the cols block's
+  scalar-prefetch indirection; one kernel sweep relaxes every root's
+  distance column.
 
 **SlimWork** is the same scalar-prefetch grid *indirection* as the SpMV
 kernel: the wrapper compacts active tile ids into ``tile_ids`` (inactive tail
@@ -32,12 +36,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .slimsell_spmv import semiring_ops, _reduce_l
+from .slimsell_spmv import semiring_ops, _reduce_l, _weighted_contrib
 
 
 def _spmm_kernel(tile_ids_ref, row_block_ref, n_active_ref,
-                 cols_ref, rv_ref, x_ref, deg_ref, out_ref, *,
-                 sr_name: str, chunk_blk: int, weighted: bool):
+                 cols_ref, *refs, sr_name: str, chunk_blk: int,
+                 weighted: bool, stored: bool):
+    """One grid step = one SlimSell tile of the SpMM. When ``stored``
+    (SlimSell-W), ``refs`` leads with the slot-weight block — mapped in
+    lockstep with ``cols``, so SlimWork's grid indirection also skips the
+    weight DMA — and each edge contributes ``mul(w, X[col, :])`` (the
+    weight broadcast over the RHS lane tile; ``w + X[col, :]`` under
+    min-plus, one batched relaxation). ``weighted`` is the GCN-derived
+    weight path; the two are mutually exclusive.
+    """
+    wts_ref = refs[0] if stored else None
+    rv_ref, x_ref, deg_ref, out_ref = refs[-4:]
     add, contrib_fn, zero = semiring_ops(sr_name)
     t = pl.program_id(1)
     tid = tile_ids_ref[t]
@@ -59,7 +73,10 @@ def _spmm_kernel(tile_ids_ref, row_block_ref, n_active_ref,
         xv = x_ref[...]                                     # [n_pad, d_tile]
         g = jnp.take(xv, safe.reshape(-1), axis=0)          # [C*L, d_tile]
         g = g.reshape(*cols.shape, xv.shape[-1])            # [C, L, d_tile]
-        if weighted:
+        if stored:
+            w = wts_ref[0].astype(xv.dtype)                 # [C, L]
+            g = _weighted_contrib(sr_name, w[..., None], g)
+        elif weighted:
             degv = deg_ref[...]
             rv = rv_ref[0]                                  # [C]
             w_row = jax.lax.rsqrt(jnp.take(degv, jnp.maximum(rv, 0)))   # [C]
@@ -80,7 +97,8 @@ def _spmm_kernel(tile_ids_ref, row_block_ref, n_active_ref,
 def slimsell_spmm_pallas(cols, tile_ids, row_block, n_active, rv_tiles, X,
                          deg, *, sr_name: str, n_chunks: int,
                          chunk_blk: int = 8, weighted=False,
-                         d_tile: int = 128, interpret: bool = True):
+                         d_tile: int = 128, interpret: bool = True,
+                         wts=None):
     """Tile-level SpMM.  Returns y_blocks [n_chunks_pad, C, d] (chunk-row space).
 
     cols:      int32[T, C, L]
@@ -90,9 +108,17 @@ def slimsell_spmm_pallas(cols, tile_ids, row_block, n_active, rv_tiles, X,
     rv_tiles:  int32[T, C] row vertex per tile (weighted path)
     X:         RHS [n_pad, d]
     deg:       degree vector [n_pad] (weighted path; ignored otherwise)
+    wts:       optional float32[T, C, L] stored slot weights (SlimSell-W),
+               block-mapped in lockstep with ``cols`` — the same tile
+               indirection as the weighted SpMV kernel, so SlimWork
+               skipping also skips the weight DMA
     """
     T, C, L = cols.shape
     n, d = X.shape
+    stored = wts is not None
+    if stored and weighted:
+        raise ValueError("pass stored wts= or the derived GCN weighted= "
+                         "path, not both")
     d_tile = min(d_tile, d)
     if d % d_tile:
         # widths the lane tiling cannot split evenly (d > 128, d % 128 != 0
@@ -101,11 +127,11 @@ def slimsell_spmm_pallas(cols, tile_ids, row_block, n_active, rv_tiles, X,
         # divisor: correct on every backend, narrower lanes on TPU
         d_tile = math.gcd(d, d_tile)
     n_blk = -(-n_chunks // chunk_blk)
+    tile_spec = pl.BlockSpec((1, C, L), lambda dt, t, tids, rb, na: (tids[t], 0, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(d // d_tile, T),
-        in_specs=[
-            pl.BlockSpec((1, C, L), lambda dt, t, tids, rb, na: (tids[t], 0, 0)),
+        in_specs=[tile_spec] + ([tile_spec] if stored else []) + [
             pl.BlockSpec((1, C), lambda dt, t, tids, rb, na: (tids[t], 0)),
             pl.BlockSpec((n, d_tile), lambda dt, t, tids, rb, na: (0, dt)),
             pl.BlockSpec((n,), lambda dt, t, tids, rb, na: (0,)),
@@ -115,10 +141,14 @@ def slimsell_spmm_pallas(cols, tile_ids, row_block, n_active, rv_tiles, X,
             lambda dt, t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0, dt)),
     )
     kernel = functools.partial(_spmm_kernel, sr_name=sr_name,
-                               chunk_blk=chunk_blk, weighted=weighted)
+                               chunk_blk=chunk_blk, weighted=weighted,
+                               stored=stored)
+    operands = (tile_ids, row_block, n_active, cols) \
+        + ((wts,) if stored else ()) \
+        + (rv_tiles, X, deg.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blk * chunk_blk, C, d), X.dtype),
         interpret=interpret,
-    )(tile_ids, row_block, n_active, cols, rv_tiles, X, deg.astype(jnp.float32))
+    )(*operands)

@@ -1,13 +1,21 @@
-"""Markdown link check for the docs suite (CI docs job).
+"""Markdown link + API-coverage check for the docs suite (CI docs job).
 
 Offline by design: relative links must resolve to an existing file (plus an
 existing anchor-ish heading when one is given); absolute http(s) links are
 only format-checked, never fetched — CI must not flake on the network.
 
+``--api`` additionally imports ``repro.core`` and fails on any public API
+symbol (public class/callable defined in a ``core/__init__.py`` submodule)
+that appears in NO checked docs page — the guard that keeps the docs suite
+from silently drifting behind the engine surface again (the PR 3 docs
+predated the engine/distributed layers and described half the API).
+
     python tools/check_docs.py README.md docs/*.md
+    python tools/check_docs.py --api README.md docs/*.md
 """
 from __future__ import annotations
 
+import argparse
 import re
 import sys
 from pathlib import Path
@@ -46,9 +54,53 @@ def check_file(md: Path, root: Path) -> list[str]:
     return errors
 
 
-def main(argv: list[str]) -> int:
+def api_symbols(root: Path) -> dict[str, str]:
+    """Public API: name -> defining module, for every class/callable defined
+    in a submodule that ``repro.core/__init__.py`` imports.
+
+    Module re-exports (``from .engine import FixpointSpec`` in bfs.py etc.)
+    are attributed to their defining module only; private names and
+    third-party imports are skipped.
+    """
+    import importlib
+    import inspect
+    sys.path.insert(0, str(root / "src"))
+    core = importlib.import_module("repro.core")
+    out: dict[str, str] = {}
+    for mod in vars(core).values():
+        if not inspect.ismodule(mod) \
+                or not mod.__name__.startswith("repro.core."):
+            continue
+        for name, obj in vars(mod).items():
+            if name.startswith("_") or not callable(obj):
+                continue
+            if getattr(obj, "__module__", None) != mod.__name__:
+                continue  # re-export or third-party
+            out[name] = mod.__name__
+    return out
+
+
+def check_api_coverage(files: list[Path], root: Path) -> list[str]:
+    """Every public API symbol must appear (as a word) in ≥1 docs page."""
+    text = "\n".join(md.read_text(encoding="utf-8") for md in files)
+    words = set(re.findall(r"[A-Za-z_][A-Za-z0-9_]*", text))
+    errors = []
+    for name, mod in sorted(api_symbols(root).items()):
+        if name not in words:
+            errors.append(f"{mod}.{name} appears in no checked docs page")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", help="markdown files to check "
+                    "(default: *.md + docs/*.md)")
+    ap.add_argument("--api", action="store_true",
+                    help="also fail on public repro.core API symbols "
+                         "absent from every checked page")
+    args = ap.parse_args(argv)
     root = Path(__file__).resolve().parent.parent
-    files = [Path(a) for a in argv] or \
+    files = [Path(a) for a in args.files] or \
         sorted(root.glob("*.md")) + sorted((root / "docs").glob("*.md"))
     errors = []
     for md in files:
@@ -57,7 +109,14 @@ def main(argv: list[str]) -> int:
         print(f"LINKCHECK FAIL: {e}")
     print(f"# link check: {len(files)} files, "
           f"{'FAILED' if errors else 'ok'}")
-    return 1 if errors else 0
+    api_errors = []
+    if args.api:
+        api_errors = check_api_coverage(files, root)
+        for e in api_errors:
+            print(f"APICHECK FAIL: {e}")
+        print(f"# api coverage: {len(api_symbols(root))} public symbols, "
+              f"{'FAILED' if api_errors else 'ok'}")
+    return 1 if (errors or api_errors) else 0
 
 
 if __name__ == "__main__":
