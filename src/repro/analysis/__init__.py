@@ -1,0 +1,10 @@
+"""Static analysis for the SlimSell engine: kernel contract checker
+(``contracts``), semiring-law verifier (``laws``), and the AST lint pass
+(``lint``), each runnable as ``python -m repro.analysis.<pass>``. The
+runtime counterpart (checkify sanitizer) lives in ``repro.core.debug``.
+
+Import note: kernel modules import ``repro.analysis.registry`` to register
+their contracts, so this package must not import the kernels at package
+level — the checker imports them lazily inside ``contracts.check_all``.
+"""
+from . import registry  # noqa: F401

@@ -1,0 +1,188 @@
+"""Kernel contract checker: prove BlockSpec index maps safe over the grid.
+
+For every registered kernel case (``repro.analysis.registry``) the checker
+enumerates the **full grid in Pallas iteration order** (row-major, last
+dimension varies fastest) and evaluates every ``index_map`` with the case's
+real scalar-prefetch operands, proving three properties the runtime never
+checks:
+
+1. **Bounds** — every block index is non-negative and addresses an
+   existing block of the (padded) operand: Pallas *clamps* out-of-bounds
+   block indices, so a wrong map silently reads/writes the wrong block
+   instead of crashing.
+2. **Lockstep** — block pairs declared lockstep (the SlimSell-W weight
+   block riding the cols block, the pull kernel's not-final bitmap riding
+   the output block) evaluate to identical indices at every grid point.
+3. **Chunk contiguity** — for outputs under SlimChunk accumulation, all
+   visits to one output block form a single contiguous run in grid order;
+   the kernels re-initialize on ``first_visit = (t == 0) | (blk !=
+   prev_blk)``, which silently drops contributions if a block is revisited
+   after an intervening different block.
+
+CLI::
+
+    python -m repro.analysis.contracts        # checks every registered case
+
+Exit status 0 iff every case of every registered kernel passes.
+"""
+from __future__ import annotations
+
+import itertools
+import sys
+from typing import List, Optional, Sequence, Tuple
+
+from .registry import REGISTRY, KernelCase
+
+
+def _block_shape(spec) -> Optional[Tuple[int, ...]]:
+    bs = getattr(spec, "block_shape", None)
+    if bs is None:
+        return None
+    return tuple(int(b) for b in bs)
+
+
+def _selector_spec(case: KernelCase, sel):
+    kind, i = sel
+    if kind == "in":
+        return case.grid_spec.in_specs[i]
+    out = case.grid_spec.out_specs
+    if isinstance(out, (list, tuple)):
+        return out[i]
+    assert i == 0, sel
+    return out
+
+
+def _selector_shape(case: KernelCase, sel):
+    kind, i = sel
+    return case.in_shapes[i] if kind == "in" else case.out_shapes[i]
+
+
+def _grid_points(grid) -> List[Tuple[int, ...]]:
+    # itertools.product iterates the LAST dimension fastest — exactly the
+    # Pallas grid order (row-major)
+    return list(itertools.product(*(range(int(g)) for g in grid)))
+
+
+def _eval_map(spec, point, scalar_args) -> Tuple[int, ...]:
+    idx = spec.index_map(*point, *scalar_args)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(v) for v in idx)
+
+
+def check_case(case: KernelCase) -> List[str]:
+    """Run all three contract properties over one case; returns violations
+    (empty = the case passes)."""
+    errors: List[str] = []
+    grid = case.grid_spec.grid
+    points = _grid_points(grid)
+
+    selectors = [("in", i) for i in range(len(case.grid_spec.in_specs))]
+    out = case.grid_spec.out_specs
+    n_out = len(out) if isinstance(out, (list, tuple)) else 1
+    selectors += [("out", i) for i in range(n_out)]
+
+    # evaluate every mapped spec over the full grid once
+    trace = {}
+    for sel in selectors:
+        spec = _selector_spec(case, sel)
+        bs = _block_shape(spec)
+        shape = _selector_shape(case, sel)
+        if bs is None or shape is None:
+            continue  # untiled / ANY-memory-space operand: no index map
+        if len(bs) != len(shape):
+            errors.append(f"{case.name} {sel}: block rank {len(bs)} != "
+                          f"operand rank {len(shape)}")
+            continue
+        n_blocks = tuple(-(-s // b) for s, b in zip(shape, bs))
+        seq = []
+        for p in points:
+            idx = _eval_map(spec, p, case.scalar_args)
+            if len(idx) != len(bs):
+                errors.append(f"{case.name} {sel} at grid{p}: index rank "
+                              f"{len(idx)} != block rank {len(bs)}")
+                break
+            for d, (v, nb) in enumerate(zip(idx, n_blocks)):
+                if not (0 <= v < nb):
+                    errors.append(
+                        f"{case.name} {sel} at grid{p}: block index "
+                        f"{idx}[{d}]={v} outside [0, {nb}) for operand "
+                        f"shape {shape} / block {bs} (Pallas would "
+                        f"silently clamp)")
+            seq.append(idx)
+        trace[sel] = seq
+
+    # lockstep pairs: identical indices at every grid point
+    for a, b in case.lockstep:
+        sa, sb = trace.get(tuple(a)), trace.get(tuple(b))
+        if sa is None or sb is None:
+            errors.append(f"{case.name}: lockstep pair {a}/{b} references "
+                          f"an unmapped operand")
+            continue
+        for p, (ia, ib) in zip(points, zip(sa, sb)):
+            if ia != ib:
+                errors.append(
+                    f"{case.name}: lockstep blocks {a}={ia} vs {b}={ib} "
+                    f"diverge at grid{p} — paired operands would read "
+                    f"different tiles")
+                break
+
+    # chunked outputs: visits to one block form one contiguous run
+    for sel in case.chunked_out:
+        seq = trace.get(tuple(sel))
+        if seq is None:
+            errors.append(f"{case.name}: chunked_out {sel} references an "
+                          f"unmapped operand")
+            continue
+        seen_done = set()
+        prev = None
+        for p, idx in zip(points, seq):
+            if idx != prev:
+                if idx in seen_done:
+                    errors.append(
+                        f"{case.name}: output block {idx} revisited "
+                        f"non-contiguously at grid{p} — the first_visit "
+                        f"re-init would drop the earlier accumulation")
+                    break
+                if prev is not None:
+                    seen_done.add(prev)
+                prev = idx
+        else:
+            continue
+    return errors
+
+
+def check_all(verbose: bool = False) -> List[str]:
+    """Check every case of every registered kernel; returns violations."""
+    # importing the kernel modules populates the registry
+    import repro.kernels.ops  # noqa: F401
+    errors: List[str] = []
+    for name in sorted(REGISTRY):
+        for case in REGISTRY[name].cases():
+            errs = check_case(case)
+            errors.extend(errs)
+            if verbose:
+                status = "FAIL" if errs else "ok"
+                grid = tuple(int(g) for g in case.grid_spec.grid)
+                print(f"  [{status}] {name}: {case.name} grid={grid}")
+    return errors
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    errors = check_all(verbose=not args.quiet)
+    if errors:
+        print(f"\n{len(errors)} contract violation(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n = sum(len(REGISTRY[k].cases()) for k in REGISTRY)
+    print(f"kernel contracts OK: {len(REGISTRY)} kernels, {n} cases")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

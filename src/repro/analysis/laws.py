@@ -1,0 +1,188 @@
+"""Semiring-law verifier + kernel-table cross-check.
+
+The whole engine rests on each registered ``Semiring`` actually *being* a
+semiring: the SlimChunk split (tile partial sums combined by
+``segment_reduce``), SlimWork's skipped-tile zeros, the cross-device
+``pall`` combine and the fused loop's iteration order are all only correct
+if ``add`` is an associative commutative monoid with identity ``zero``,
+``mul`` distributes over it, and ``zero`` annihilates (padding slots must
+be no-ops). None of this is visible to the type system, so this module
+checks it exhaustively on small value domains:
+
+* **laws** per semiring — add associativity/commutativity/identity, mul
+  associativity/identity (both sides), annihilation by zero (both sides),
+  distributivity (both sides), and agreement of the three reduction
+  surfaces (``reduce_last``, ``segment_reduce``, ``reduction`` kind) with
+  a fold of ``add``;
+* **kernel cross-check** — the kernel-side dispatch
+  (``kernels.slimsell_spmv.semiring_ops`` / ``_reduce_l`` /
+  ``_weighted_contrib``) is *derived* from ``core.semiring``, and this
+  check proves the derivation behaviorally: add/zero/implicit-1
+  contribution/weighted contribution/last-axis reduction must agree with
+  the core object on the whole domain, for **every** name in
+  ``core.options.SEMIRINGS`` — a semiring registered in core but
+  unhandled (or mishandled) by the kernel table is a hard failure.
+
+CLI::
+
+    python -m repro.analysis.laws
+
+Exit status 0 iff every registered semiring passes both checks.
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import options
+from repro.core import semiring as sm
+
+
+def _domain(sr) -> np.ndarray:
+    """A small closed-enough value domain: both identities plus a few
+    ordinary payloads (valid for all registered semirings — sel-max payloads
+    are 1-based ids, hence positive)."""
+    vals = []
+    for v in (sr.zero, sr.one, 1, 2, 5):
+        if not any(v == w or (np.isnan(v) and np.isnan(w)) for w in vals):
+            vals.append(v)
+    return np.asarray(vals, dtype=sr.dtype)
+
+
+def _eq(a, b) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    return bool(np.all((a == b) | (np.isnan(a) & np.isnan(b))))
+
+
+def verify_semiring(sr, domain: Optional[np.ndarray] = None) -> List[str]:
+    """Exhaustively check the semiring laws on ``domain``; returns the
+    violations (empty = ``sr`` is a semiring on that domain)."""
+    dom = _domain(sr) if domain is None else np.asarray(domain, sr.dtype)
+    errs: List[str] = []
+    add = lambda a, b: np.asarray(sr.add(jnp.asarray(a), jnp.asarray(b)))  # noqa: E731
+    mul = lambda a, b: np.asarray(sr.mul(jnp.asarray(a), jnp.asarray(b)))  # noqa: E731
+    zero, one = sr.zero, sr.one
+
+    for a in dom:
+        if not _eq(add(a, zero), a) or not _eq(add(zero, a), a):
+            errs.append(f"{sr.name}: add identity fails at a={a}")
+        if not _eq(mul(a, one), a):
+            errs.append(f"{sr.name}: right mul identity fails at a={a}")
+        if not _eq(mul(one, a), a):
+            errs.append(f"{sr.name}: left mul identity fails at a={a}")
+        if not _eq(mul(a, zero), zero):
+            errs.append(f"{sr.name}: right annihilation fails at a={a}")
+        if not _eq(mul(zero, a), zero):
+            errs.append(f"{sr.name}: left annihilation fails at a={a}")
+        for b in dom:
+            if not _eq(add(a, b), add(b, a)):
+                errs.append(f"{sr.name}: add commutativity fails at "
+                            f"(a={a}, b={b})")
+            for c in dom:
+                if not _eq(add(add(a, b), c), add(a, add(b, c))):
+                    errs.append(f"{sr.name}: add associativity fails at "
+                                f"(a={a}, b={b}, c={c})")
+                if not _eq(mul(mul(a, b), c), mul(a, mul(b, c))):
+                    errs.append(f"{sr.name}: mul associativity fails at "
+                                f"(a={a}, b={b}, c={c})")
+                if not _eq(mul(a, add(b, c)), add(mul(a, b), mul(a, c))):
+                    errs.append(f"{sr.name}: left distributivity fails at "
+                                f"(a={a}, b={b}, c={c})")
+                if not _eq(mul(add(a, b), c), add(mul(a, c), mul(b, c))):
+                    errs.append(f"{sr.name}: right distributivity fails at "
+                                f"(a={a}, b={b}, c={c})")
+
+    # the three reduction surfaces must agree with a fold of add
+    if getattr(sr, "reduction", None) not in ("min", "max", "sum"):
+        errs.append(f"{sr.name}: unknown reduction kind "
+                    f"{getattr(sr, 'reduction', None)!r}")
+        return errs
+    x = jnp.asarray(np.stack([dom, dom[::-1]]))        # [2, |dom|]
+    fold = np.asarray(x)[:, 0]
+    for j in range(1, x.shape[1]):
+        fold = np.asarray(sr.add(jnp.asarray(fold), x[:, j]))
+    if not _eq(sr.reduce_last(x), fold):
+        errs.append(f"{sr.name}: reduce_last disagrees with an add-fold")
+    seg_ids = jnp.asarray(np.repeat(np.arange(2), len(dom)))
+    seg = sr.segment_reduce(jnp.asarray(np.concatenate([dom, dom[::-1]])),
+                            seg_ids, num_segments=2)
+    if not _eq(seg, fold):
+        errs.append(f"{sr.name}: segment_reduce disagrees with an add-fold")
+    return errs
+
+
+def verify_all() -> Dict[str, List[str]]:
+    """Run the law check for every registered semiring."""
+    return {name: verify_semiring(sr) for name, sr in sm.SEMIRINGS.items()}
+
+
+def cross_check_kernel_tables() -> List[str]:
+    """Prove the kernel-side semiring dispatch agrees with ``core.semiring``
+    for every registered name (dispatch exhaustiveness included: an
+    unhandled name raising in ``semiring_ops`` is reported, not skipped)."""
+    from repro.kernels.slimsell_spmv import (_reduce_l, _weighted_contrib,
+                                             semiring_ops)
+    errs: List[str] = []
+    if tuple(sm.SEMIRINGS) != options.SEMIRINGS:
+        errs.append(f"core.semiring registry {tuple(sm.SEMIRINGS)} != "
+                    f"options.SEMIRINGS {options.SEMIRINGS}")
+    for name in options.SEMIRINGS:
+        sr = sm.SEMIRINGS[name]
+        try:
+            add, contrib, zero = semiring_ops(name)
+        except ValueError:
+            errs.append(f"kernel semiring_ops has no dispatch for "
+                        f"registered semiring {name!r}")
+            continue
+        dom = _domain(sr)
+        x = jnp.asarray(dom)
+        if not _eq(np.asarray(zero, sr.dtype), np.asarray(sr.zero, sr.dtype)):
+            errs.append(f"{name}: kernel zero {zero!r} != core zero "
+                        f"{sr.zero!r}")
+        # the implicit SlimSell edge value is the NUMBER 1 (one hop / one
+        # path / one reachability bit), i.e. mul(1, x) — not mul(one, x)
+        if not _eq(contrib(x), sr.mul(jnp.asarray(1, x.dtype), x)):
+            errs.append(f"{name}: kernel edge contribution != sr.mul(1, x)")
+        for a in dom:
+            if not _eq(add(jnp.asarray(a), x), sr.add(jnp.asarray(a), x)):
+                errs.append(f"{name}: kernel add != core add at a={a}")
+                break
+        w = jnp.asarray(np.tile(dom, (len(dom), 1)))
+        g = jnp.asarray(np.tile(dom[:, None], (1, len(dom))))
+        if not _eq(_weighted_contrib(name, w, g), sr.mul(w, g)):
+            errs.append(f"{name}: kernel _weighted_contrib != sr.mul(w, x)")
+        pair = jnp.asarray(np.stack([dom, dom[::-1]], axis=-1))   # [|dom|, 2]
+        if not _eq(_reduce_l(name, pair), sr.add(pair[:, 0], pair[:, 1])):
+            errs.append(f"{name}: kernel _reduce_l != core add-fold")
+    return errs
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    failures: List[str] = []
+    for name, errs in verify_all().items():
+        if not args.quiet:
+            print(f"  [{'FAIL' if errs else 'ok'}] laws: {name}")
+        failures.extend(errs)
+    cross = cross_check_kernel_tables()
+    if not args.quiet:
+        print(f"  [{'FAIL' if cross else 'ok'}] kernel-table cross-check")
+    failures.extend(cross)
+    if failures:
+        print(f"\n{len(failures)} semiring violation(s):")
+        for e in failures:
+            print(f"  {e}")
+        return 1
+    print(f"semiring laws OK: {len(sm.SEMIRINGS)} semirings verified, "
+          f"kernel tables agree")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

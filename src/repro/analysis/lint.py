@@ -1,0 +1,397 @@
+"""AST lint pass for the failure modes this codebase has actually hit.
+
+Rules (each with golden bad-example fixtures under ``tests/fixtures/lint``
+and an allowlist at ``src/repro/analysis/lint_allow.txt``):
+
+``traced-branch``
+    Python ``if``/``bool()`` on a parameter of a jit-compiled function
+    that is not in ``static_argnames`` — inside a trace this branches on
+    the *tracer*, raising ``TracerBoolConversionError`` at best and baking
+    in one branch at worst. Tests on ``is (not) None`` and shape/dtype
+    attributes are structural, not traced, and are exempt.
+
+``string-option``
+    A public function takes an option-like string parameter (``mode``,
+    ``direction``, ``backend``, ``semiring``, ``comm``, ``sr_name``) and
+    compares it against string literals without validating it through
+    ``check_choice`` / ``resolve_backend`` / ``sm.get`` — an unknown value
+    silently falls into the default branch (the old ``comm`` dispatch bug).
+
+``f32-vertex-id``
+    Vertex ids / labels cast to float32 in a file with no ``1 << 24``
+    guard: float32 carries integers exactly only up to 2^24, so bigger
+    graphs silently corrupt ids (``core.cc`` shows the guarded pattern).
+
+``pallas-contract``
+    A function in ``repro/kernels`` that issues a ``pallas_call`` without
+    the ``@kernel_contract`` registration decorator — unregistered kernels
+    escape the contract checker, so coverage would silently rot.
+
+``interpret-literal``
+    A literal boolean default for an ``interpret`` parameter — the
+    repo-wide default lives in ``core.options`` (env-overridable); literal
+    defaults drift from it per call site. Use ``interpret=None``.
+
+CLI::
+
+    python -m repro.analysis.lint [paths...]        # default: src/repro
+
+Allowlist entries are ``rule:path`` or ``rule:path::qualname`` lines
+(repo-relative forward-slash paths, ``#`` comments). Exit 0 iff no
+finding survives the allowlist.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import sys
+from typing import List, Optional, Sequence, Set
+
+OPTION_PARAMS = {"mode", "direction", "backend", "semiring", "comm",
+                 "sr_name"}
+VALIDATOR_CALLS = {"check_choice", "resolve_backend", "get"}
+ID_HINTS = {"id", "ids", "label", "labels", "vertex", "vertices", "parent",
+            "parents"}
+F32_GUARDS = ("1 << 24", "2 ** 24", "2**24", "16777216")
+
+
+def _idish(name: str) -> bool:
+    """True when a name plausibly denotes vertex ids/labels (word-part
+    match, so ``valid`` does not match ``id``)."""
+    import re
+    for part in re.split(r"[^a-z]+", name.lower()):
+        if part.rstrip("0123456789") in ID_HINTS:
+            return True
+    return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str        # repo-relative, forward slashes
+    line: int
+    qualname: str
+    message: str
+
+    def key_candidates(self) -> List[str]:
+        return [f"{self.rule}:{self.path}::{self.qualname}",
+                f"{self.rule}:{self.path}"]
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] {self.qualname}: "
+                f"{self.message}")
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target / decorator."""
+    if isinstance(node, ast.Attribute):
+        return f"{_dotted(node.value)}.{node.attr}"
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Call):
+        return _dotted(node.func)
+    return ""
+
+
+def _call_names(tree: ast.AST) -> Set[str]:
+    """Last components of every call target inside ``tree``."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            if dotted:
+                names.add(dotted.split(".")[-1])
+    return names
+
+
+def _static_argnames(func: ast.FunctionDef) -> Optional[Set[str]]:
+    """static_argnames of a jit decorator, or None if ``func`` is not
+    jitted. Handles ``@jax.jit``, ``@jit(...)`` and
+    ``@functools.partial(jax.jit, static_argnames=...)``."""
+    for dec in func.decorator_list:
+        dotted = _dotted(dec)
+        is_jit = dotted.split(".")[-1] == "jit"
+        is_partial_jit = (dotted.split(".")[-1] == "partial"
+                          and isinstance(dec, ast.Call) and dec.args
+                          and _dotted(dec.args[0]).split(".")[-1] == "jit")
+        if not (is_jit or is_partial_jit):
+            continue
+        statics: Set[str] = set()
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    for el in ast.walk(kw.value):
+                        if isinstance(el, ast.Constant) \
+                                and isinstance(el.value, str):
+                            statics.add(el.value)
+        return statics
+    return None
+
+
+def _params(func: ast.FunctionDef) -> List[ast.arg]:
+    a = func.args
+    return list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+
+
+def _is_structural(test: ast.AST) -> bool:
+    """True for tests that are fine under tracing: ``is (not) None``
+    comparisons and shape/dtype/size/ndim attribute access."""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return True
+        if isinstance(node, ast.Attribute) and node.attr in (
+                "shape", "ndim", "dtype", "size"):
+            return True
+    return False
+
+
+def _functions(tree: ast.Module):
+    """(qualname, node) for every function, including nested/methods."""
+    out = []
+
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                out.append((q, child))
+                visit(child, f"{q}.")
+            elif isinstance(child, ast.ClassDef):
+                visit(child, f"{prefix}{child.name}.")
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+# ------------------------------------------------------------------- rules
+
+
+def _rule_traced_branch(path, src, tree, findings):
+    for qual, func in _functions(tree):
+        statics = _static_argnames(func)
+        if statics is None:
+            continue  # not jitted
+        traced = {a.arg for a in _params(func)} - statics
+        for node in ast.walk(func):
+            tests = []
+            if isinstance(node, ast.If):
+                tests.append(node.test)
+            elif isinstance(node, (ast.IfExp,)):
+                tests.append(node.test)
+            elif isinstance(node, ast.Call) \
+                    and _dotted(node.func) == "bool" and node.args:
+                tests.append(node.args[0])
+            for test in tests:
+                if _is_structural(test):
+                    continue
+                for sub in ast.walk(test):
+                    if isinstance(sub, ast.Name) and sub.id in traced:
+                        findings.append(Finding(
+                            "traced-branch", path, node.lineno, qual,
+                            f"Python branch on non-static jit parameter "
+                            f"{sub.id!r} (TracerBoolConversionError under "
+                            f"tracing; mark it static or use lax.cond / "
+                            f"jnp.where)"))
+                        break
+
+
+def _rule_string_option(path, src, tree, findings):
+    for qual, func in _functions(tree):
+        if func.name.startswith("_"):
+            continue  # private helpers validate at their public boundary
+        params = {a.arg for a in _params(func)} & OPTION_PARAMS
+        if not params:
+            continue
+        if _call_names(func) & VALIDATOR_CALLS:
+            continue
+        for node in ast.walk(func):
+            if not isinstance(node, ast.Compare):
+                continue
+            operands = [node.left] + list(node.comparators)
+            names = {o.id for o in operands if isinstance(o, ast.Name)}
+            has_str = any(isinstance(o, ast.Constant)
+                          and isinstance(o.value, str) for o in operands)
+            hit = names & params
+            if hit and has_str:
+                findings.append(Finding(
+                    "string-option", path, node.lineno, qual,
+                    f"dispatch on option parameter {sorted(hit)[0]!r} "
+                    f"without validating against core.options (unknown "
+                    f"values silently fall through; call check_choice)"))
+                break
+
+
+def _rule_f32_vertex_id(path, src, tree, findings):
+    if any(g in src for g in F32_GUARDS):
+        return  # the file knows about the 2^24 limit
+    for qual, func in _functions(tree):
+        for node in ast.walk(func):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            is_cast = dotted.endswith(".astype")
+            is_arange = dotted.split(".")[-1] == "arange"
+            if not (is_cast or is_arange):
+                continue
+            to_f32 = any(
+                _dotted(a).endswith("float32")
+                for a in list(node.args)
+                + [kw.value for kw in node.keywords if kw.arg == "dtype"])
+            if not to_f32:
+                continue
+            idish = ""
+            if is_cast:
+                # only a *direct* cast of an id-named array (not a cast of
+                # a comparison/mask derived from it)
+                base = node.func.value
+                if isinstance(base, (ast.Name, ast.Attribute)):
+                    name = base.id if isinstance(base, ast.Name) else base.attr
+                    if _idish(name):
+                        idish = name
+            else:
+                # float32 arange minted inside an id-named function
+                if _idish(qual):
+                    idish = "arange"
+            if idish:
+                findings.append(Finding(
+                    "f32-vertex-id", path, node.lineno, qual,
+                    f"vertex-id-like value {idish!r} cast to float32 with "
+                    f"no 2^24 guard in this file (ids above 16777216 "
+                    f"round; see core.cc for the guarded pattern)"))
+
+
+def _rule_pallas_contract(path, src, tree, findings):
+    if "/kernels/" not in path:
+        return
+    for qual, func in _functions(tree):
+        calls = _call_names(func)
+        if "pallas_call" not in calls:
+            continue
+        decorated = any(
+            _dotted(d).split(".")[-1] == "kernel_contract"
+            for d in func.decorator_list)
+        if not decorated:
+            findings.append(Finding(
+                "pallas-contract", path, func.lineno, qual,
+                "pallas_call wrapper without @kernel_contract — it "
+                "escapes the contract checker (register cases in "
+                "repro.analysis.registry)"))
+
+
+def _rule_interpret_literal(path, src, tree, findings):
+    for qual, func in _functions(tree):
+        a = func.args
+        pos = list(a.posonlyargs) + list(a.args)
+        defaults = [None] * (len(pos) - len(a.defaults)) + list(a.defaults)
+        pairs = list(zip(pos, defaults)) + list(zip(a.kwonlyargs, a.kw_defaults))
+        for arg, default in pairs:
+            if arg.arg == "interpret" and isinstance(default, ast.Constant) \
+                    and isinstance(default.value, bool):
+                findings.append(Finding(
+                    "interpret-literal", path, arg.lineno, qual,
+                    f"literal interpret={default.value} default — use "
+                    f"interpret=None and core.options.resolve_interpret "
+                    f"(env-overridable repo-wide default)"))
+
+
+RULES = (_rule_traced_branch, _rule_string_option, _rule_f32_vertex_id,
+         _rule_pallas_contract, _rule_interpret_literal)
+RULE_NAMES = ("traced-branch", "string-option", "f32-vertex-id",
+              "pallas-contract", "interpret-literal")
+
+
+# --------------------------------------------------------------- allowlist
+
+
+def load_allowlist(path: pathlib.Path) -> Set[str]:
+    if not path.exists():
+        return set()
+    entries = set()
+    for line in path.read_text().splitlines():
+        line = line.split("#", 1)[0].strip()
+        if line:
+            entries.add(line)
+    return entries
+
+
+def _repo_rel(p: pathlib.Path, root: pathlib.Path) -> str:
+    try:
+        return p.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return p.as_posix()
+
+
+def lint_file(p: pathlib.Path, root: pathlib.Path) -> List[Finding]:
+    src = p.read_text()
+    try:
+        tree = ast.parse(src, filename=str(p))
+    except SyntaxError as e:
+        return [Finding("syntax", _repo_rel(p, root), e.lineno or 0, "-",
+                        f"syntax error: {e.msg}")]
+    findings: List[Finding] = []
+    rel = _repo_rel(p, root)
+    for rule in RULES:
+        rule(rel, src, tree, findings)
+    return findings
+
+
+def lint_paths(paths: Sequence[pathlib.Path], root: pathlib.Path,
+               allow: Set[str],
+               used: Optional[Set[str]] = None) -> List[Finding]:
+    """Lint every file under ``paths``; findings whose key is in ``allow``
+    are dropped (and recorded in ``used`` so callers can report allowlist
+    entries that no longer match anything)."""
+    files: List[pathlib.Path] = []
+    for p in paths:
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    out = []
+    for f in files:
+        for finding in lint_file(f, root):
+            hits = [k for k in finding.key_candidates() if k in allow]
+            if hits:
+                if used is not None:
+                    used.update(hits)
+            else:
+                out.append(finding)
+    return out
+
+
+def repo_root() -> pathlib.Path:
+    # src/repro/analysis/lint.py -> repo root is three parents above src
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", help="files/dirs (default src/repro)")
+    ap.add_argument("--allowlist", default=None,
+                    help="allowlist file (default src/repro/analysis/"
+                         "lint_allow.txt)")
+    args = ap.parse_args(argv)
+    root = repo_root()
+    paths = [pathlib.Path(p) for p in args.paths] \
+        or [root / "src" / "repro"]
+    allow_path = pathlib.Path(args.allowlist) if args.allowlist \
+        else pathlib.Path(__file__).with_name("lint_allow.txt")
+    allow = load_allowlist(allow_path)
+    used: Set[str] = set()
+    findings = lint_paths(paths, root, allow, used)
+    for f in findings:
+        print(f)
+    stale = sorted(allow - used) if not args.paths else []
+    for entry in stale:  # only when linting the default tree: partial runs
+        print(f"stale allowlist entry (matches nothing): {entry}")
+    if findings or stale:
+        print(f"\n{len(findings)} lint finding(s), {len(stale)} stale "
+              f"allowlist entrie(s) (allowlist: {allow_path})")
+        return 1
+    print(f"lint OK ({', '.join(RULE_NAMES)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,4 +3,5 @@
 multi-source, connected components) — each a ``FixpointSpec`` over the
 shared ``engine`` (fused / hostloop / distributed strategies)."""
 from . import (semiring, formats, spmv, engine, bfs, bfs_traditional,  # noqa: F401
-               dist_bfs, multi_bfs, multi_sssp, complexity, sssp, cc, options)
+               dist_bfs, multi_bfs, multi_sssp, complexity, sssp, cc, options,
+               debug)

@@ -261,6 +261,11 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
         raise ValueError("direction-optimizing push masks need the push index;"
                          " rebuild the layout with formats.build_slimsell")
     n = tiled.n
+    if semiring == "selmax" and n > (1 << 24):
+        # sel-max carries 1-based vertex ids in its float32 payload; ids
+        # above 2^24 would round (same guard as core.cc)
+        raise ValueError("selmax BFS carries vertex ids in float32 (exact "
+                         f"up to 2^24); use another semiring for n={n}")
     max_iters = int(max_iters) if max_iters is not None else n
     root = jnp.asarray(root, jnp.int32)
     spec = bfs_spec(semiring)

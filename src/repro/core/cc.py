@@ -38,12 +38,10 @@ import numpy as np
 from . import engine as eng
 from .bfs import bfs
 from .engine import FixpointSpec
-from .options import MODES, check_choice
+from .options import CC_SEMIRINGS, MODES, check_choice  # noqa: F401 (re-export)
 from .spmv import resolve_backend
 
 Array = jax.Array
-
-CC_SEMIRINGS = ("selmax", "boolean")
 
 
 @dataclasses.dataclass

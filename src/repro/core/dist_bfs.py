@@ -44,6 +44,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
+from . import debug
 from . import engine as eng
 from .bfs import bfs_spec
 from .cc import CC_SPEC
@@ -278,7 +279,7 @@ def make_dist_bfs_sliced(mesh: Mesh, meta: DistSlimSell, *,
         out_specs=(P(row_axis, None), P()),
         check_vma=False,
     )
-    return jax.jit(sharded)
+    return debug.jit_checked(sharded)
 
 
 # --------------------------------------------- generic engine-backed runner
@@ -371,7 +372,7 @@ def make_dist_fixpoint(mesh: Mesh, meta: DistSlimSell, spec: FixpointSpec, *,
         shard_fn, mesh=mesh, in_specs=tuple(in_specs), out_specs=P(),
         check_vma=False,
     )
-    return jax.jit(sharded)
+    return debug.jit_checked(sharded)
 
 
 # ---------------------------------------------------- per-algorithm factories

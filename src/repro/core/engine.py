@@ -52,15 +52,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import debug
 from . import direction as dm
 from . import semiring as sm
+from .options import (BACKENDS, DIRECTIONS,  # noqa: F401 (home is options)
+                      check_choice)
 from .spmv import (slimsell_pull, slimsell_pull_mm, slimsell_spmm,
                    slimsell_spmv)
 
 Array = jax.Array
 WORK_LOG = 512  # max logged iterations
-
-DIRECTIONS = ("push", "pull", "auto")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -114,15 +115,21 @@ def _sweep(spec: FixpointSpec, tiled, x, w, tile_mask, rows, backend: str,
     sr = sm.get(spec.sr_name)
     if pull:
         if spec.batched:
-            return slimsell_pull_mm(sr, tiled, x, row_mask=rows,
-                                    tile_mask=tile_mask, backend=backend)
-        return slimsell_pull(sr, tiled, x, row_mask=rows,
-                             tile_mask=tile_mask, backend=backend)
+            y = slimsell_pull_mm(sr, tiled, x, row_mask=rows,
+                                 tile_mask=tile_mask, backend=backend)
+        else:
+            y = slimsell_pull(sr, tiled, x, row_mask=rows,
+                              tile_mask=tile_mask, backend=backend)
+        debug.check_sweep(sr, y)
+        return y
     if spec.batched:
-        return slimsell_spmm(sr, tiled, x, weights=w, tile_mask=tile_mask,
-                             backend=backend)
-    return slimsell_spmv(sr, tiled, x, weights=w, tile_mask=tile_mask,
-                         backend=backend)
+        y = slimsell_spmm(sr, tiled, x, weights=w, tile_mask=tile_mask,
+                          backend=backend)
+    else:
+        y = slimsell_spmv(sr, tiled, x, weights=w, tile_mask=tile_mask,
+                          backend=backend)
+    debug.check_sweep(sr, y)
+    return y
 
 
 def _subset_ctx(ctx, ids: Array, n_tiles: int):
@@ -139,11 +146,15 @@ def _subset_ctx(ctx, ids: Array, n_tiles: int):
 # -------------------------------------------------------------------- fused
 
 
-@partial(jax.jit, static_argnames=("spec", "slimwork", "max_iters",
-                                   "log_work", "backend", "direction"))
-def _run_fused(spec: FixpointSpec, tiled, arg, ctx_args, *, slimwork: bool,
-               max_iters: int, log_work: bool, backend: str, direction: str):
+_FUSED_STATICS = ("spec", "slimwork", "max_iters", "log_work", "backend",
+                  "direction")
+
+
+def _run_fused_impl(spec: FixpointSpec, tiled, arg, ctx_args, *,
+                    slimwork: bool, max_iters: int, log_work: bool,
+                    backend: str, direction: str):
     n = tiled.n
+    debug.check_layout(tiled)
     ctx = spec.setup(tiled, *ctx_args) if spec.setup is not None else None
     state = spec.init_state(n, arg, ctx)
     log_n = WORK_LOG if log_work else 1
@@ -239,11 +250,23 @@ def _run_fused(spec: FixpointSpec, tiled, arg, ctx_args, *, slimwork: bool,
     return state, k - 1, work, dirs, plog
 
 
+_run_fused = partial(jax.jit, static_argnames=_FUSED_STATICS)(_run_fused_impl)
+
+
 def run_fused(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
               slimwork: bool = True, max_iters: int, log_work: bool = False,
               backend: str = "jnp", direction: str = "push") -> EngineResult:
-    """Run a spec to its fixpoint as one on-device ``lax.while_loop``."""
-    state, iters, work, dirs, plog = _run_fused(
+    """Run a spec to its fixpoint as one on-device ``lax.while_loop``.
+
+    Under ``debug.checked()`` the whole loop runs through a checkified twin
+    (layout bounds once, per-sweep NaN/inf checks in the carry).
+    """
+    check_choice("direction", direction, DIRECTIONS)
+    check_choice("backend", backend, BACKENDS)
+    runner = partial(debug.call_checked, _run_fused_impl,
+                     static_argnames=_FUSED_STATICS) \
+        if debug.enabled() else _run_fused
+    state, iters, work, dirs, plog = runner(
         spec, tiled, arg, tuple(ctx_args), slimwork=slimwork,
         max_iters=max_iters, log_work=log_work, backend=backend,
         direction=direction)
@@ -341,11 +364,12 @@ def _host_inc_ptr(tiled) -> np.ndarray:
     return np.searchsorted(inc_src, np.arange(tiled.n + 1)).astype(np.int64)
 
 
-@partial(jax.jit, static_argnames=("spec", "n", "n_chunks", "n_active",
-                                   "pull", "backend"))
-def _subset_step(spec: FixpointSpec, cols, row_block, row_vertex, n: int,
-                 n_chunks: int, ctx, tile_ids, n_active: int, state, k,
-                 pull: bool, backend: str):
+_SUBSET_STATICS = ("spec", "n", "n_chunks", "n_active", "pull", "backend")
+
+
+def _subset_step_impl(spec: FixpointSpec, cols, row_block, row_vertex, n: int,
+                      n_chunks: int, ctx, tile_ids, n_active: int, state, k,
+                      pull: bool, backend: str):
     """Gather the active tiles (bucketed size) and run one step on them only."""
     ids = tile_ids[:n_active]
     sub = _SubsetTiled(
@@ -362,9 +386,14 @@ def _subset_step(spec: FixpointSpec, cols, row_block, row_vertex, n: int,
     return spec.update(ctx, state, y, k)
 
 
-@partial(jax.jit, static_argnames=("spec", "pull", "backend"))
-def _full_step(spec: FixpointSpec, tiled, ctx, state, k, pull: bool,
-               backend: str):
+_subset_step = partial(jax.jit,
+                       static_argnames=_SUBSET_STATICS)(_subset_step_impl)
+
+_FULLSTEP_STATICS = ("spec", "pull", "backend")
+
+
+def _full_step_impl(spec: FixpointSpec, tiled, ctx, state, k, pull: bool,
+                    backend: str):
     x = spec.frontier(ctx, state, k)
     w = spec.weights(ctx, state) if spec.weights is not None else None
     rows = spec.not_final(ctx, state) if pull else None
@@ -372,9 +401,14 @@ def _full_step(spec: FixpointSpec, tiled, ctx, state, k, pull: bool,
     return spec.update(ctx, state, y, k)
 
 
-@partial(jax.jit, static_argnames=("spec", "n", "width"))
-def _zero_step(spec: FixpointSpec, n: int, ctx, state, k,
-               width: Optional[int] = None):
+_full_step = partial(jax.jit,
+                     static_argnames=_FULLSTEP_STATICS)(_full_step_impl)
+
+_ZEROSTEP_STATICS = ("spec", "n", "width")
+
+
+def _zero_step_impl(spec: FixpointSpec, n: int, ctx, state, k,
+                    width: Optional[int] = None):
     """Update against an all-zero sweep result: what an empty tile set
     computes. BFS-style specs report no change and terminate; phase-carrying
     specs (delta-stepping) still advance their phase. ``width`` is the batch
@@ -383,6 +417,10 @@ def _zero_step(spec: FixpointSpec, n: int, ctx, state, k,
     shape = (n,) if width is None else (n, width)
     y = jnp.full(shape, sr.zero, sr.dtype)
     return spec.update(ctx, state, y, k)
+
+
+_zero_step = partial(jax.jit,
+                     static_argnames=_ZEROSTEP_STATICS)(_zero_step_impl)
 
 
 def run_hostloop(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
@@ -401,10 +439,24 @@ def run_hostloop(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
     (mirroring the fused strategy's union masks); per-column pull/auto
     state is a fused-strategy feature.
     """
+    check_choice("direction", direction, DIRECTIONS)
+    check_choice("backend", backend, BACKENDS)
     if spec.batched and direction != "push":
         raise NotImplementedError(
             f"{spec.name}: batched hostloop is push-only "
             "(per-column pull/auto state needs the fused strategy)")
+    if debug.enabled():
+        # eager twin of check_layout, then checkified per-step twins so the
+        # in-sweep checks ride inside each jitted step
+        debug.validate_layout_host(tiled)
+        zero_step = partial(debug.call_checked, _zero_step_impl,
+                            static_argnames=_ZEROSTEP_STATICS)
+        subset_step = partial(debug.call_checked, _subset_step_impl,
+                              static_argnames=_SUBSET_STATICS)
+        full_step = partial(debug.call_checked, _full_step_impl,
+                            static_argnames=_FULLSTEP_STATICS)
+    else:
+        zero_step, subset_step, full_step = _zero_step, _subset_step, _full_step
     width = int(np.asarray(arg).shape[0]) if spec.batched else None
     n = tiled.n
     ctx = spec.setup(tiled, *ctx_args) if spec.setup is not None else None
@@ -447,7 +499,7 @@ def run_hostloop(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
                 # still counts as an iteration (0 tiles) so sweep counts
                 # and work logs match the fused strategy, whose while_loop
                 # body runs the all-masked sweep.
-                state, cont = _zero_step(spec, n, ctx, state, kdev, width)
+                state, cont = zero_step(spec, n, ctx, state, kdev, width)
                 work_list.append(0)
                 dir_list.append(dcur)
                 iters = k
@@ -458,15 +510,15 @@ def run_hostloop(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
             work_list.append(ids.size)
             dir_list.append(dcur)
             ids_p, bucket = _pad_tile_ids(ids, n_tiles)
-            state, cont = _subset_step(
+            state, cont = subset_step(
                 spec, tiled.cols, tiled.row_block, tiled.row_vertex, n,
                 tiled.n_chunks, ctx, jnp.asarray(ids_p), bucket, state,
                 kdev, dcur == dm.PULL, backend)
         else:
             work_list.append(n_tiles)
             dir_list.append(dcur)
-            state, cont = _full_step(spec, tiled, ctx, state, kdev,
-                                     dcur == dm.PULL, backend)
+            state, cont = full_step(spec, tiled, ctx, state, kdev,
+                                    dcur == dm.PULL, backend)
         iters = k
         k += 1
         if not bool(cont):

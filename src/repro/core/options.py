@@ -1,4 +1,4 @@
-"""Uniform validation of the engine's public string options.
+"""Single source of truth for the engine's public string options.
 
 Every public entry point (``bfs``, ``multi_source_bfs``, ``sssp``, ``cc``,
 ``run_graph500*``, the ``make_dist_*`` factories) funnels its ``mode`` /
@@ -7,13 +7,71 @@ Every public entry point (``bfs``, ``multi_source_bfs``, ``sssp``, ``cc``,
 message — instead of deep inside a jit trace or, worse, silently falling
 into a default branch (the old ``comm`` dispatch treated any unknown string
 as ``reduce_gather``).
+
+This module is the canonical home of the option *vocabularies* themselves:
+``MODES``, ``COMMS``, ``BACKENDS``, ``DIRECTIONS``, ``SEMIRINGS`` (names —
+the semiring *objects* live in ``core.semiring``, which asserts its registry
+against this tuple at import time so the two can never drift), and the
+subsets consumed by individual algorithms (``BFS_SEMIRINGS``,
+``CC_SEMIRINGS``). The ``string-option`` lint rule in
+``repro.analysis.lint`` enforces that public entry points dispatch only on
+values validated against these constants.
+
+It also owns the Pallas ``interpret`` default (``default_interpret``):
+interpret mode on every non-TPU backend so the kernels are validated in CI,
+compiled on real TPUs, overridable through the ``REPRO_PALLAS_INTERPRET``
+environment variable for the ROADMAP ``interpret=False`` calibration runs.
 """
 from __future__ import annotations
 
-from typing import Sequence
+import os
+from typing import Optional, Sequence
 
 MODES = ("fused", "hostloop")
 COMMS = ("allreduce", "reduce_gather")
+BACKENDS = ("jnp", "pallas")
+DEFAULT_BACKEND = "jnp"
+DIRECTIONS = ("push", "pull", "auto")
+
+# registered semiring names; core.semiring builds the object registry and
+# asserts it matches this tuple at import time (the law verifier's
+# cross-check then guarantees the kernel-side tables agree behaviorally)
+SEMIRINGS = ("tropical", "real", "boolean", "selmax", "minplus")
+
+# the BFS engines accept exactly the paper's four; minplus is the
+# SSSP/weighted operator and is rejected by bfs()/multi_source_bfs()
+BFS_SEMIRINGS = ("tropical", "real", "boolean", "selmax")
+
+# connected components: sel-max label propagation or boolean BFS peeling
+CC_SEMIRINGS = ("selmax", "boolean")
+
+# Pallas interpret-mode override: "auto" (default) = interpret off-TPU,
+# compiled on TPU; "1"/"0" force it either way (calibration runs)
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """The repo-wide Pallas ``interpret`` default.
+
+    ``REPRO_PALLAS_INTERPRET=1|0`` forces interpret mode on or off;
+    unset/"auto" interprets everywhere except on a real TPU backend —
+    identical to the old per-wrapper behavior on CPU CI.
+    """
+    v = os.environ.get(INTERPRET_ENV, "auto").strip().lower()
+    if v in ("1", "true", "yes"):
+        return True
+    if v in ("0", "false", "no"):
+        return False
+    if v not in ("", "auto"):
+        raise ValueError(
+            f"bad {INTERPRET_ENV}={v!r}; expected 1, 0 or auto")
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Map None -> the env-overridable repo default; pass explicit bools."""
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def check_choice(name: str, value, allowed: Sequence[str], *,

@@ -55,6 +55,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from . import options
+
 Array = jax.Array
 
 
@@ -126,9 +128,14 @@ MINPLUS = Semiring(
 
 SEMIRINGS = {s.name: s for s in (TROPICAL, REAL, BOOLEAN, SELMAX, MINPLUS)}
 
+# core.options is the canonical name list (the single source of truth the
+# lint rule and law verifier check against); drift is an import-time failure
+assert tuple(SEMIRINGS) == options.SEMIRINGS, \
+    (tuple(SEMIRINGS), options.SEMIRINGS)
+
 # the BFS engines accept exactly the paper's four; minplus is the SSSP/weighted
 # operator and is rejected by bfs()/multi_source_bfs() (it needs a wts array)
-BFS_SEMIRINGS = ("tropical", "real", "boolean", "selmax")
+BFS_SEMIRINGS = options.BFS_SEMIRINGS
 
 
 def get(name: str) -> Semiring:

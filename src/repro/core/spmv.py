@@ -50,11 +50,9 @@ import jax
 import jax.numpy as jnp
 
 from .semiring import Semiring
+from .options import BACKENDS, DEFAULT_BACKEND  # noqa: F401 (canonical home)
 
 Array = jax.Array
-
-BACKENDS = ("jnp", "pallas")
-DEFAULT_BACKEND = "jnp"
 
 
 def resolve_backend(backend: Optional[str]) -> str:

@@ -15,7 +15,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.registry import KernelCase, kernel_contract
 from repro.compat import tpu_memory_space
+from repro.core.options import resolve_interpret
 
 
 def _bag_kernel(bags_ref, table_ref, out_ref, scratch_ref, sem, *,
@@ -48,16 +50,11 @@ def _bag_kernel(bags_ref, table_ref, out_ref, scratch_ref, sem, *,
     jax.lax.fori_loop(0, b_blk, one_bag, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "b_blk", "d_tile",
-                                             "interpret"))
-def embedding_bag_pallas(table, bags, *, mode: str = "sum", b_blk: int = 8,
-                         d_tile: int = 128, interpret: bool = True):
-    """table f32[V, d], bags int32[B, K] (-1 pads) -> [B, d]."""
-    V, d = table.shape
-    B, K = bags.shape
-    d_tile = min(d_tile, d)
-    assert d % d_tile == 0 and B % b_blk == 0, (d, d_tile, B, b_blk)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+def bag_grid_spec(B, K, d, b_blk, d_tile, dtype):
+    """The embedding-bag grid contract, shared by the wrapper and its
+    registered contract cases. The table operand lives in ANY memory space
+    (pulled HBM -> VMEM manually) and has no block map."""
+    return pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=0,
         grid=(B // b_blk, d // d_tile),
         in_specs=[
@@ -67,10 +64,36 @@ def embedding_bag_pallas(table, bags, *, mode: str = "sum", b_blk: int = 8,
         ],
         out_specs=pl.BlockSpec((b_blk, d_tile), lambda b, dt: (b, dt)),
         scratch_shapes=[
-            pltpu.VMEM((1, d_tile), table.dtype),
+            pltpu.VMEM((1, d_tile), dtype),
             pltpu.SemaphoreType.DMA,
         ],
     )
+
+
+def _bag_cases():
+    B, K, d, b_blk, d_tile = 16, 3, 8, 8, 4
+    return [KernelCase(
+        name="embedding_bag/demo",
+        grid_spec=bag_grid_spec(B, K, d, b_blk, d_tile, jnp.float32),
+        scalar_args=(),
+        in_shapes=[(B, K), None],   # table block is ANY-space: no index map
+        out_shapes=[(B, d)],
+        chunked_out=[("out", 0)],   # visited once each — trivially contiguous
+    )]
+
+
+@kernel_contract(_bag_cases)
+@functools.partial(jax.jit, static_argnames=("mode", "b_blk", "d_tile",
+                                             "interpret"))
+def embedding_bag_pallas(table, bags, *, mode: str = "sum", b_blk: int = 8,
+                         d_tile: int = 128, interpret=None):
+    """table f32[V, d], bags int32[B, K] (-1 pads) -> [B, d]."""
+    interpret = resolve_interpret(interpret)
+    V, d = table.shape
+    B, K = bags.shape
+    d_tile = min(d_tile, d)
+    assert d % d_tile == 0 and B % b_blk == 0, (d, d_tile, B, b_blk)
+    grid_spec = bag_grid_spec(B, K, d, b_blk, d_tile, table.dtype)
     kernel = functools.partial(_bag_kernel, b_blk=b_blk, K=K, d_tile=d_tile,
                                mode=mode)
     return pl.pallas_call(

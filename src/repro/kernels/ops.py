@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import semiring as sm
+from repro.core.options import check_choice, resolve_interpret
 from .slimsell_spmv import slimsell_spmv_pallas, semiring_ops
 from .slimsell_spmm import slimsell_spmm_pallas
 from .slimsell_pull import slimsell_pull_mm_pallas, slimsell_pull_pallas
@@ -20,7 +21,10 @@ from .embedding_bag import embedding_bag_pallas
 
 
 def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # kept as a name for callers; the policy (env override + backend
+    # detection) lives in core.options
+    from repro.core.options import default_interpret
+    return default_interpret()
 
 
 def compact_tile_ids(tile_mask):
@@ -71,7 +75,7 @@ def spmv(sr_name: str, tiled, x, tile_mask=None, weights=None, interpret=None):
     routes to the weighted kernel, whose weight block shares the cols block's
     tile indirection.
     """
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     sr = sm.get(sr_name)
     T = tiled.cols.shape[0]
     if tile_mask is None:
@@ -95,7 +99,7 @@ def pull(sr_name: str, tiled, x, row_mask, tile_mask=None, interpret=None):
     rows return the semiring zero. The kernel early-exits per chunk row (see
     slimsell_pull.py for the exactness contract vs. the jnp oracle).
     """
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     sr = sm.get(sr_name)
     T = tiled.cols.shape[0]
     if tile_mask is None:
@@ -122,7 +126,7 @@ def pull_mm(sr_name: str, tiled, X, row_mask, tile_mask=None, interpret=None):
     kernel early-exits per (chunk row, column); same exactness contract as
     ``pull``, per batch column (core.spmv.slimsell_pull_mm is the oracle).
     """
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     sr = sm.get(sr_name)
     T = tiled.cols.shape[0]
     if tile_mask is None:
@@ -152,7 +156,7 @@ def spmm(sr_name: str, tiled, X, deg=None, weighted=False, tile_mask=None,
     block's tile indirection — the batched min-plus (multi-source SSSP)
     operand. Mutually exclusive with the derived GCN ``weighted=`` path.
     """
-    interpret = _default_interpret() if interpret is None else interpret
+    interpret = resolve_interpret(interpret)
     sr = sm.get(sr_name)
     T = tiled.cols.shape[0]
     if tile_mask is None:
@@ -173,5 +177,6 @@ def spmm(sr_name: str, tiled, X, deg=None, weighted=False, tile_mask=None,
 @functools.partial(jax.jit, static_argnames=("mode", "interpret"))
 def embedding_bag(table, bags, mode: str = "sum", interpret=None):
     """SlimSell-layout embedding bag; bags int32[B, K], -1 pads; -> [B, d]."""
-    interpret = _default_interpret() if interpret is None else interpret
+    check_choice("embedding_bag mode", mode, ("sum", "mean"))
+    interpret = resolve_interpret(interpret)
     return embedding_bag_pallas(table, bags, mode=mode, interpret=interpret)

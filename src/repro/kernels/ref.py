@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import semiring as sm
+from repro.core.options import check_choice
 from repro.core.spmv import slimsell_spmv as _spmv_jnp
 from repro.core.spmv import slimsell_spmm as _spmm_jnp
 
@@ -36,6 +37,7 @@ def gcn_edge_weight(deg):
 
 def embedding_bag_ref(table, bags, mode: str = "sum"):
     """bags int32[B, K] (-1 pads); returns [B, d]."""
+    check_choice("embedding_bag mode", mode, ("sum", "mean"))
     pad = bags < 0
     safe = jnp.where(pad, 0, bags)
     g = jnp.take(table, safe, axis=0)                    # [B, K, d]

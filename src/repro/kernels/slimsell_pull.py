@@ -45,6 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.registry import KernelCase, demo_layout, kernel_contract
+from repro.core.options import resolve_interpret
 from .slimsell_spmv import _reduce_l, semiring_ops
 
 
@@ -84,11 +86,45 @@ def _pull_kernel(tile_ids_ref, row_block_ref, n_active_ref,
         pl.store(out_ref, (pl.ds(row, 1), slice(None)), new[None])
 
 
+def pull_grid_spec(T, C, L, x_shape, chunk_blk):
+    """The pull-sweep grid contract, shared by the wrapper and its
+    registered contract cases. The not-final bitmap block is mapped in
+    lockstep with the output block (same chunk-row space)."""
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, C, L), lambda t, tids, rb, na: (tids[t], 0, 0)),
+            pl.BlockSpec((chunk_blk, C),
+                         lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
+            pl.BlockSpec(x_shape, lambda t, tids, rb, na: (0,)),
+        ],
+        out_specs=pl.BlockSpec((chunk_blk, C),
+                               lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
+    )
+
+
+def _pull_cases():
+    d = demo_layout()
+    T, C, L, cb = d["T"], d["C"], d["L"], d["chunk_blk"]
+    nf_rows = d["n_blk"] * cb
+    return [KernelCase(
+        name=f"pull/{scen}",
+        grid_spec=pull_grid_spec(T, C, L, (d["n_pad"],), cb),
+        scalar_args=(ids, d["row_block"], n_active),
+        in_shapes=[(T, C, L), (nf_rows, C), (d["n_pad"],)],
+        out_shapes=[(nf_rows, C)],
+        lockstep=[(("in", 1), ("out", 0))],
+        chunked_out=[("out", 0)],
+    ) for scen, ids, n_active in d["scenarios"]]
+
+
+@kernel_contract(_pull_cases)
 @functools.partial(jax.jit, static_argnames=("sr_name", "chunk_blk", "n_chunks",
                                              "interpret"))
 def slimsell_pull_pallas(cols, tile_ids, row_block, n_active, nf, x, *,
                          sr_name: str, n_chunks: int, chunk_blk: int = 8,
-                         interpret: bool = True):
+                         interpret=None):
     """Tile-level pull sweep.  Returns y_blocks [n_chunks_pad, C] (chunk-row space).
 
     cols:      int32[T, C, L]
@@ -98,22 +134,12 @@ def slimsell_pull_pallas(cols, tile_ids, row_block, n_active, nf, x, *,
     nf:        int32[n_chunks, C]  1 where the row still needs a value
     x:         frontier [n_pad]
     """
+    interpret = resolve_interpret(interpret)
     T, C, L = cols.shape
     n_blk = -(-n_chunks // chunk_blk)
     nf = jnp.pad(nf.astype(jnp.int32),
                  ((0, n_blk * chunk_blk - n_chunks), (0, 0)))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(T,),
-        in_specs=[
-            pl.BlockSpec((1, C, L), lambda t, tids, rb, na: (tids[t], 0, 0)),
-            pl.BlockSpec((chunk_blk, C),
-                         lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
-            pl.BlockSpec(x.shape, lambda t, tids, rb, na: (0,)),
-        ],
-        out_specs=pl.BlockSpec((chunk_blk, C),
-                               lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
-    )
+    grid_spec = pull_grid_spec(T, C, L, x.shape, chunk_blk)
     kernel = functools.partial(_pull_kernel, sr_name=sr_name, chunk_blk=chunk_blk)
     return pl.pallas_call(
         kernel,
@@ -165,36 +191,11 @@ def _pull_mm_kernel(tile_ids_ref, row_block_ref, n_active_ref,
         pl.store(out_ref, sl, new[None])
 
 
-@functools.partial(jax.jit, static_argnames=("sr_name", "chunk_blk",
-                                             "n_chunks", "d_tile",
-                                             "interpret"))
-def slimsell_pull_mm_pallas(cols, tile_ids, row_block, n_active, nf, X, *,
-                            sr_name: str, n_chunks: int, chunk_blk: int = 8,
-                            d_tile: int = 128, interpret: bool = True):
-    """Batched tile-level pull sweep.  Returns [n_chunks_pad, C, B]
-    (chunk-row space).
-
-    cols:      int32[T, C, L]
-    tile_ids:  int32[T]  grid order (SlimWork compaction; tail repeats last)
-    row_block: int32[T]  owning chunk per tile
-    n_active:  int32[1]  number of live grid steps
-    nf:        int32[n_chunks, C, B]  1 where the (row, column) still needs
-               a value
-    X:         frontier matrix [n_pad, B]
-    """
-    T, C, L = cols.shape
-    n, B = X.shape
-    d_tile = min(d_tile, B)
-    if B % d_tile:
-        # widths the lane tiling cannot split evenly (B > 128, B % 128 != 0
-        # — e.g. the distributed engine feeds the raw batch, unlike
-        # multi_source_bfs which rounds up) fall back to the largest
-        # common divisor: correct on every backend, narrower lanes on TPU
-        d_tile = math.gcd(B, d_tile)
-    n_blk = -(-n_chunks // chunk_blk)
-    nf = jnp.pad(nf.astype(jnp.int32),
-                 ((0, n_blk * chunk_blk - n_chunks), (0, 0), (0, 0)))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+def pull_mm_grid_spec(T, C, L, n, B, d_tile, chunk_blk):
+    """The batched pull-sweep grid contract, shared by the wrapper and its
+    registered contract cases. As in the SpMM, the tile axis is the LAST
+    grid dim; the per-column not-final block rides the output block."""
+    return pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B // d_tile, T),
         in_specs=[
@@ -209,6 +210,56 @@ def slimsell_pull_mm_pallas(cols, tile_ids, row_block, n_active, nf, X, *,
             (chunk_blk, C, d_tile),
             lambda dt, t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0, dt)),
     )
+
+
+def _pull_mm_cases():
+    d = demo_layout()
+    T, C, L, cb = d["T"], d["C"], d["L"], d["chunk_blk"]
+    n, B, d_tile = d["n_pad"], 8, 4  # 2 lane tiles: exercises the revisit
+    nf_rows = d["n_blk"] * cb
+    return [KernelCase(
+        name=f"pull_mm/{scen}",
+        grid_spec=pull_mm_grid_spec(T, C, L, n, B, d_tile, cb),
+        scalar_args=(ids, d["row_block"], n_active),
+        in_shapes=[(T, C, L), (nf_rows, C, B), (n, B)],
+        out_shapes=[(nf_rows, C, B)],
+        lockstep=[(("in", 1), ("out", 0))],
+        chunked_out=[("out", 0)],
+    ) for scen, ids, n_active in d["scenarios"]]
+
+
+@kernel_contract(_pull_mm_cases)
+@functools.partial(jax.jit, static_argnames=("sr_name", "chunk_blk",
+                                             "n_chunks", "d_tile",
+                                             "interpret"))
+def slimsell_pull_mm_pallas(cols, tile_ids, row_block, n_active, nf, X, *,
+                            sr_name: str, n_chunks: int, chunk_blk: int = 8,
+                            d_tile: int = 128, interpret=None):
+    """Batched tile-level pull sweep.  Returns [n_chunks_pad, C, B]
+    (chunk-row space).
+
+    cols:      int32[T, C, L]
+    tile_ids:  int32[T]  grid order (SlimWork compaction; tail repeats last)
+    row_block: int32[T]  owning chunk per tile
+    n_active:  int32[1]  number of live grid steps
+    nf:        int32[n_chunks, C, B]  1 where the (row, column) still needs
+               a value
+    X:         frontier matrix [n_pad, B]
+    """
+    interpret = resolve_interpret(interpret)
+    T, C, L = cols.shape
+    n, B = X.shape
+    d_tile = min(d_tile, B)
+    if B % d_tile:
+        # widths the lane tiling cannot split evenly (B > 128, B % 128 != 0
+        # — e.g. the distributed engine feeds the raw batch, unlike
+        # multi_source_bfs which rounds up) fall back to the largest
+        # common divisor: correct on every backend, narrower lanes on TPU
+        d_tile = math.gcd(B, d_tile)
+    n_blk = -(-n_chunks // chunk_blk)
+    nf = jnp.pad(nf.astype(jnp.int32),
+                 ((0, n_blk * chunk_blk - n_chunks), (0, 0), (0, 0)))
+    grid_spec = pull_mm_grid_spec(T, C, L, n, B, d_tile, chunk_blk)
     kernel = functools.partial(_pull_mm_kernel, sr_name=sr_name,
                                chunk_blk=chunk_blk)
     return pl.pallas_call(

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.registry import KernelCase, demo_layout, kernel_contract
+from repro.core.options import resolve_interpret
 from .slimsell_spmv import semiring_ops, _reduce_l, _weighted_contrib
 
 
@@ -92,12 +94,54 @@ def _spmm_kernel(tile_ids_ref, row_block_ref, n_active_ref,
                  add(cur, red[None]))
 
 
+def spmm_grid_spec(T, C, L, n, d, d_tile, chunk_blk, stored):
+    """The SpMM grid contract, shared by the wrapper and its registered
+    contract cases. Grid is (d // d_tile, T): the tile axis is LAST (varies
+    fastest), so SlimChunk revisits stay contiguous within each lane tile."""
+    tile_spec = pl.BlockSpec((1, C, L), lambda dt, t, tids, rb, na: (tids[t], 0, 0))
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(d // d_tile, T),
+        in_specs=[tile_spec] + ([tile_spec] if stored else []) + [
+            pl.BlockSpec((1, C), lambda dt, t, tids, rb, na: (tids[t], 0)),
+            pl.BlockSpec((n, d_tile), lambda dt, t, tids, rb, na: (0, dt)),
+            pl.BlockSpec((n,), lambda dt, t, tids, rb, na: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (chunk_blk, C, d_tile),
+            lambda dt, t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0, dt)),
+    )
+
+
+def _spmm_cases():
+    d = demo_layout()
+    T, C, L, cb = d["T"], d["C"], d["L"], d["chunk_blk"]
+    n, width, d_tile = d["n_pad"], 8, 4  # 2 lane tiles: exercises the revisit
+    cases = []
+    for scen, ids, n_active in d["scenarios"]:
+        for stored in (False, True):
+            in_shapes = [(T, C, L)] + ([(T, C, L)] if stored else []) \
+                + [(T, C), (n, width), (n,)]
+            lock = [(("in", 0), ("in", 1))] if stored else []
+            cases.append(KernelCase(
+                name=f"spmm/{scen}" + ("/wts" if stored else ""),
+                grid_spec=spmm_grid_spec(T, C, L, n, width, d_tile, cb, stored),
+                scalar_args=(ids, d["row_block"], n_active),
+                in_shapes=in_shapes,
+                out_shapes=[(d["n_blk"] * cb, C, width)],
+                lockstep=lock,
+                chunked_out=[("out", 0)],
+            ))
+    return cases
+
+
+@kernel_contract(_spmm_cases)
 @functools.partial(jax.jit, static_argnames=("sr_name", "chunk_blk", "n_chunks",
                                              "weighted", "d_tile", "interpret"))
 def slimsell_spmm_pallas(cols, tile_ids, row_block, n_active, rv_tiles, X,
                          deg, *, sr_name: str, n_chunks: int,
                          chunk_blk: int = 8, weighted=False,
-                         d_tile: int = 128, interpret: bool = True,
+                         d_tile: int = 128, interpret=None,
                          wts=None):
     """Tile-level SpMM.  Returns y_blocks [n_chunks_pad, C, d] (chunk-row space).
 
@@ -113,6 +157,7 @@ def slimsell_spmm_pallas(cols, tile_ids, row_block, n_active, rv_tiles, X,
                indirection as the weighted SpMV kernel, so SlimWork
                skipping also skips the weight DMA
     """
+    interpret = resolve_interpret(interpret)
     T, C, L = cols.shape
     n, d = X.shape
     stored = wts is not None
@@ -127,19 +172,7 @@ def slimsell_spmm_pallas(cols, tile_ids, row_block, n_active, rv_tiles, X,
         # divisor: correct on every backend, narrower lanes on TPU
         d_tile = math.gcd(d, d_tile)
     n_blk = -(-n_chunks // chunk_blk)
-    tile_spec = pl.BlockSpec((1, C, L), lambda dt, t, tids, rb, na: (tids[t], 0, 0))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(d // d_tile, T),
-        in_specs=[tile_spec] + ([tile_spec] if stored else []) + [
-            pl.BlockSpec((1, C), lambda dt, t, tids, rb, na: (tids[t], 0)),
-            pl.BlockSpec((n, d_tile), lambda dt, t, tids, rb, na: (0, dt)),
-            pl.BlockSpec((n,), lambda dt, t, tids, rb, na: (0,)),
-        ],
-        out_specs=pl.BlockSpec(
-            (chunk_blk, C, d_tile),
-            lambda dt, t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0, dt)),
-    )
+    grid_spec = spmm_grid_spec(T, C, L, n, d, d_tile, chunk_blk, stored)
     kernel = functools.partial(_spmm_kernel, sr_name=sr_name,
                                chunk_blk=chunk_blk, weighted=weighted,
                                stored=stored)

@@ -25,38 +25,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.registry import KernelCase, demo_layout, kernel_contract
+from repro.core import semiring as _sm
+from repro.core.options import resolve_interpret
+
 
 def semiring_ops(name: str):
-    """(add, edge_contrib, zero) — edge value is the implicit SlimSell 1.
+    """(add, edge_contrib, zero), derived from ``core.semiring`` — the
+    single source of truth (``repro.analysis.laws`` cross-checks the
+    derivation behaviorally, so a future hand-specialization cannot drift).
 
-    ``minplus`` is the weighted tropical operator; without stored weights its
-    implicit-1 contribution is x + 1, identical to tropical, matching the jnp
-    path (the weighted kernel replaces the 1 with the slot weight).
+    The edge value is the implicit SlimSell **numeric 1**, so the
+    contribution is ``sr.mul(1, x)`` — under tropical/min-plus that is
+    ``x + 1`` (one hop), under real/boolean/selmax it is ``x`` (the
+    weighted kernel replaces the 1 with the stored slot weight).
     """
-    if name in ("tropical", "minplus"):
-        return jnp.minimum, lambda x: x + 1.0, jnp.inf
-    if name == "real":
-        return (lambda a, b: a + b), (lambda x: x), 0.0
-    if name == "boolean":
-        return jnp.maximum, (lambda x: x), 0
-    if name == "selmax":
-        return jnp.maximum, (lambda x: x), 0.0
-    raise ValueError(name)
+    try:
+        sr = _sm.get(name)
+    except (KeyError, ValueError):
+        raise ValueError(name) from None
+    return sr.add, (lambda x: sr.mul(jnp.asarray(1, x.dtype), x)), sr.zero
 
 
-def _reduce_l(add_name: str, contrib):
-    if add_name in ("tropical", "minplus"):
-        return contrib.min(axis=-1)
-    if add_name == "real":
-        return contrib.sum(axis=-1)
-    return contrib.max(axis=-1)
+def _reduce_l(sr_name: str, contrib):
+    """Semiring-add reduction over the last (column-slot) axis."""
+    return _sm.get(sr_name).reduce_last(contrib)
 
 
 def _weighted_contrib(sr_name: str, w, g):
-    """Combine a stored slot weight with a gathered frontier value."""
-    if sr_name in ("tropical", "minplus"):
-        return w + g
-    return w * g
+    """Combine a stored slot weight with a gathered frontier value:
+    ``sr.mul(w, x)`` — ``w + x`` under tropical/min-plus (one relaxation),
+    ``w * x`` otherwise."""
+    return _sm.get(sr_name).mul(w, g)
 
 
 def _spmv_kernel(tile_ids_ref, row_block_ref, n_active_ref,
@@ -100,11 +100,47 @@ def _spmv_kernel(tile_ids_ref, row_block_ref, n_active_ref,
         pl.store(out_ref, (pl.ds(row, 1), slice(None)), add(cur, red[None, :]))
 
 
+def spmv_grid_spec(T, C, L, x_shape, chunk_blk, weighted):
+    """The SpMV grid contract, shared by the wrapper and its registered
+    contract cases (so the checker always sees the real index maps)."""
+    tile_spec = pl.BlockSpec((1, C, L), lambda t, tids, rb, na: (tids[t], 0, 0))
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T,),
+        in_specs=[tile_spec] + ([tile_spec] if weighted else []) + [
+            pl.BlockSpec(x_shape, lambda t, tids, rb, na: (0,)),
+        ],
+        out_specs=pl.BlockSpec((chunk_blk, C),
+                               lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
+    )
+
+
+def _spmv_cases():
+    d = demo_layout()
+    T, C, L, cb = d["T"], d["C"], d["L"], d["chunk_blk"]
+    cases = []
+    for scen, ids, n_active in d["scenarios"]:
+        for weighted in (False, True):
+            in_shapes = [(T, C, L)] + ([(T, C, L)] if weighted else []) \
+                + [(d["n_pad"],)]
+            cases.append(KernelCase(
+                name=f"spmv/{scen}" + ("/wts" if weighted else ""),
+                grid_spec=spmv_grid_spec(T, C, L, (d["n_pad"],), cb, weighted),
+                scalar_args=(ids, d["row_block"], n_active),
+                in_shapes=in_shapes,
+                out_shapes=[(d["n_blk"] * cb, C)],
+                lockstep=[(("in", 0), ("in", 1))] if weighted else [],
+                chunked_out=[("out", 0)],
+            ))
+    return cases
+
+
+@kernel_contract(_spmv_cases)
 @functools.partial(jax.jit, static_argnames=("sr_name", "chunk_blk", "n_chunks",
                                              "interpret"))
 def slimsell_spmv_pallas(cols, tile_ids, row_block, n_active, x, *,
                          sr_name: str, n_chunks: int, chunk_blk: int = 8,
-                         interpret: bool = True, wts=None):
+                         interpret=None, wts=None):
     """Tile-level SpMV.  Returns y_blocks [n_chunks_pad, C] (chunk-row space).
 
     cols:      int32[T, C, L]
@@ -116,19 +152,11 @@ def slimsell_spmv_pallas(cols, tile_ids, row_block, n_active, x, *,
                block-mapped in lockstep with ``cols`` — the same tile
                indirection, so SlimWork skipping also skips the weight DMA
     """
+    interpret = resolve_interpret(interpret)
     T, C, L = cols.shape
     n_blk = -(-n_chunks // chunk_blk)
     weighted = wts is not None
-    tile_spec = pl.BlockSpec((1, C, L), lambda t, tids, rb, na: (tids[t], 0, 0))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(T,),
-        in_specs=[tile_spec] + ([tile_spec] if weighted else []) + [
-            pl.BlockSpec(x.shape, lambda t, tids, rb, na: (0,)),
-        ],
-        out_specs=pl.BlockSpec((chunk_blk, C),
-                               lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
-    )
+    grid_spec = spmv_grid_spec(T, C, L, x.shape, chunk_blk, weighted)
     kernel = functools.partial(_spmv_kernel, sr_name=sr_name,
                                chunk_blk=chunk_blk, weighted=weighted)
     operands = (tile_ids, row_block, n_active, cols) \

@@ -1,0 +1,12 @@
+"""Golden bad example for the ``f32-vertex-id`` lint rule: vertex ids in
+float32 with no 2^24 guard anywhere in the file."""
+import jax.numpy as jnp
+
+
+def label_payload(n):
+    # 1-based vertex ids in float32; ids above 16_777_216 round silently
+    return jnp.arange(1, n + 1, dtype=jnp.float32)
+
+
+def relabel(labels, y):
+    return jnp.maximum(labels.astype(jnp.float32), y)

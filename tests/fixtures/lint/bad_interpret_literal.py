@@ -1,0 +1,6 @@
+"""Golden bad example for the ``interpret-literal`` lint rule: a literal
+boolean ``interpret`` default instead of the options-level resolver."""
+
+
+def my_kernel_wrapper(x, *, interpret: bool = True):   # lint finding
+    return x if interpret else -x

@@ -1,0 +1,9 @@
+"""Golden bad example for the ``string-option`` lint rule: dispatch on an
+option string without validating it, so unknown values silently fall into
+the default branch (the historical ``comm`` dispatch bug)."""
+
+
+def sweep(x, mode="fast"):
+    if mode == "fast":         # no check_choice anywhere -> lint finding
+        return x
+    return x * 2               # "fsat" would silently land here

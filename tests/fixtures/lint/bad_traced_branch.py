@@ -1,0 +1,27 @@
+"""Golden bad example for the ``traced-branch`` lint rule: a Python branch
+on a non-static parameter of a jitted function."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("flip",))
+def bad_branch(x, threshold, flip=False):
+    if threshold > 0:          # traced value in a Python if -> lint finding
+        x = -x if flip else x  # `flip` is static: not a finding
+    return jnp.abs(x)
+
+
+@jax.jit
+def bad_bool(mask):
+    return bool(mask)          # bool() on a tracer -> lint finding
+
+
+@jax.jit
+def fine(x, w=None):
+    if w is not None:          # structural `is` test: not a finding
+        x = x * w
+    if x.ndim == 2:            # shape attribute test: not a finding
+        x = x.sum(axis=-1)
+    return x

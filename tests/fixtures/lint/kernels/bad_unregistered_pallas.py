@@ -1,0 +1,17 @@
+"""Golden bad example for the ``pallas-contract`` lint rule: a pallas_call
+wrapper with no @kernel_contract registration. Lives under a ``kernels/``
+directory because the rule only applies to kernel modules."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def unregistered_wrapper(x):   # lint finding: no @kernel_contract
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=None,
+    )(x)
