@@ -1,0 +1,142 @@
+"""Serving layer: batched GraphSession throughput vs one-at-a-time dispatch.
+
+The serving layer's whole bet is that a stream of small heterogeneous
+queries is faster when shape-bucketed and dispatched as padded batches on
+persistent jitted handles than when each query walks the front door alone.
+This benchmark prices that bet: the same mixed BFS/SSSP/CC stream runs
+through a batching ``GraphSession`` (max_batch=16) and through a
+``max_batch=1`` session (identical dispatch path, no batching), recording
+queries/sec, latency p50/p99, batch fill ratio, and an aggregate TEPS so
+the bench-smoke NaN/zero gate covers the serving path too.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py [--scale 10]
+    PYTHONPATH=src python -m benchmarks.run --only serving --scale 10
+"""
+import argparse
+import time
+
+import numpy as np
+
+try:  # package execution (benchmarks.run) or standalone script
+    from . import common
+except ImportError:
+    import common
+from repro.core.formats import build_slimsell
+from repro.graph500 import sample_roots
+from repro.graphs.generators import with_random_weights
+from repro.serving import GraphSession
+
+
+def _workload(csr, n_queries: int, seed: int = 0):
+    """Mixed stream: ~47% BFS tropical, ~47% SSSP, a sprinkle of selmax
+    BFS and CC, with distinct roots per bucket (duplicate roots are
+    rejected at submit). Heterogeneous enough to exercise bucketing,
+    concentrated enough that buckets reach useful batch widths."""
+    rng = np.random.default_rng(seed)
+    roots = sample_roots(csr, max(64, n_queries))
+    plan, used = [], {}
+    for i in range(n_queries):
+        if i % 60 == 31:
+            plan.append(("cc", None, "selmax"))
+            continue
+        if i % 30 == 17:
+            kind, semiring = "bfs", "selmax"
+        elif i % 2 == 1:
+            kind, semiring = "sssp", "minplus"
+        else:
+            kind, semiring = "bfs", "tropical"
+        bucket = used.setdefault((kind, semiring), set())
+        root = int(roots[rng.integers(roots.size)])
+        while root in bucket:
+            root = int(rng.integers(csr.n))
+        bucket.add(root)
+        plan.append((kind, root, semiring))
+    return plan
+
+
+def _run_stream(sess: GraphSession, plan, flush_every: int = 32):
+    """Submit the plan, flushing every ``flush_every`` queries (a steady
+    stream, not one giant wave), and harvest every result."""
+    handles = []
+    for i, (kind, root, semiring) in enumerate(plan):
+        if kind == "cc":
+            handles.append(sess.submit("cc"))
+        elif kind == "sssp":
+            handles.append(sess.submit("sssp", root))
+        else:
+            handles.append(sess.submit("bfs", root, semiring=semiring))
+        if i % flush_every == flush_every - 1:
+            sess.flush()
+    sess.drain()
+    return [h.result() for h in handles]
+
+
+def _traversed_edges(csr, results) -> int:
+    """Sum of edges touched per query (Graph500 accounting: deg of reached
+    vertices / 2); CC counts the whole edge set once per run."""
+    total = 0
+    for res in results:
+        if res.algorithm == "cc":
+            total += csr.m_undirected
+            continue
+        d = np.asarray(res.values)
+        reached = np.isfinite(d) if d.dtype.kind == "f" else d >= 0
+        total += max(1, int(csr.deg[reached].sum()) // 2)
+    return total
+
+
+def run(scale: int = 10, ef: int = 8, n_queries: int = 120):
+    """Batched vs one-at-a-time serving on the same mixed query stream."""
+    csr = with_random_weights(common.graph("kron", scale, ef), seed=2)
+    tiled = build_slimsell(csr, C=8, L=32, sigma=csr.n).to_jax()
+    plan = _workload(csr, n_queries)
+    print(f"# serving: n={csr.n} m={csr.m_undirected} "
+          f"queries={len(plan)} scale={scale}")
+
+    rows = {}
+    for name, max_batch in (("batched", 32), ("per_query", 1)):
+        sess = GraphSession(tiled, max_batch=max_batch)
+        # warm with the *same* deterministic plan so the timed run sees the
+        # exact bucket widths it will dispatch — zero compiles in-region
+        _run_stream(sess, plan)
+        warm = sess.stats()
+        t0 = time.perf_counter()
+        results = _run_stream(sess, plan)
+        seconds = time.perf_counter() - t0
+        st = sess.stats()
+        edges = _traversed_edges(csr, results)
+        qps = len(plan) / seconds
+        teps = edges / seconds
+        assert np.isfinite(qps) and qps > 0, f"degenerate qps: {qps}"
+        assert np.isfinite(teps) and teps > 0, f"degenerate teps: {teps}"
+        rows[name] = qps
+        common.record(
+            f"serving/{name}", teps=teps, qps=qps, scale=scale,
+            queries=len(plan), seconds=seconds,
+            p50_ms=st["latency_p50_ms"], p99_ms=st["latency_p99_ms"],
+            fill=st["batch_fill_ratio"],
+            batches=st["batches_dispatched"] - warm["batches_dispatched"],
+            compile_misses=st["compile_cache_misses"])
+        print(f"serving/{name},{1e6 * seconds / len(plan):.1f},"
+              f"qps={qps:.1f} teps={teps:.3e} "
+              f"p50={st['latency_p50_ms']:.1f}ms "
+              f"p99={st['latency_p99_ms']:.1f}ms "
+              f"fill={st['batch_fill_ratio']:.2f}")
+
+    speedup = rows["batched"] / rows["per_query"]
+    common.record("serving/speedup", speedup=speedup, scale=scale)
+    print(f"serving/speedup,-,batched/per_query={speedup:.2f}x")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--queries", type=int, default=120)
+    args = ap.parse_args(argv)
+    run(scale=args.scale, n_queries=args.queries)
+    common.write_json("BENCH_serving.json", "serving")
+
+
+if __name__ == "__main__":
+    main()

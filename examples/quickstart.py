@@ -6,7 +6,8 @@ execution backends, switch traversal direction with the Beamer heuristic
 run weighted SSSP (delta-stepping over the min-plus semiring) against the
 Dijkstra oracle — per-root and batched through the weighted min-plus SpMM
 engine — run connected components (sel-max label propagation and boolean
-peeling), compare against the traditional oracle, inspect storage.
+peeling), compare against the traditional oracle, inspect storage, and
+serve a mixed BFS/SSSP/CC query stream through a batching GraphSession.
 
 CI executes this script (docs job), so everything the README documents is
 exercised here and cannot rot.
@@ -31,6 +32,7 @@ from repro.core.cc import cc
 from repro.core.formats import build_slimsell, storage_summary
 from repro.core.multi_bfs import multi_source_bfs
 from repro.core.multi_sssp import multi_source_sssp
+from repro.core.options import EngineConfig
 from repro.core.sssp import dijkstra_reference, sssp
 from repro.graphs.generators import kronecker, with_random_weights
 
@@ -54,7 +56,8 @@ def main():
     root = int(np.argmax(csr.deg))
     d_ref, _ = bfs_traditional(csr, root)
     for semiring in ("tropical", "real", "boolean", "selmax"):
-        res = bfs(tiled, root, semiring, need_parents=True, mode="hostloop")
+        res = bfs(tiled, root, semiring, need_parents=True,
+                  config=EngineConfig(mode="hostloop"))
         ok = np.array_equal(res.distances, d_ref)
         print(f"{semiring:9s}: iters={res.iterations} "
               f"reached={int((res.distances >= 0).sum())}/{csr.n} "
@@ -62,11 +65,13 @@ def main():
               f"work/iter={res.work_log.tolist()}")
     print("SlimWork collapses the tail iterations: work/iter above.")
 
-    res_k = bfs(tiled, root, "tropical", backend="pallas", mode="fused")
+    res_k = bfs(tiled, root, "tropical",
+                config=EngineConfig(backend="pallas", mode="fused"))
     print(f"pallas backend matches jnp: "
           f"{np.array_equal(res_k.distances, d_ref)}")
 
-    res_nw = bfs(tiled, root, "tropical", slimwork=False, mode="hostloop")
+    res_nw = bfs(tiled, root, "tropical", slimwork=False,
+                 config=EngineConfig(mode="hostloop"))
     print(f"slimwork=False (every tile, every iter) still matches: "
           f"{np.array_equal(res_nw.distances, d_ref)} "
           f"work/iter={res_nw.work_log.tolist()}")
@@ -76,8 +81,8 @@ def main():
     #    (early-exit per row in the pallas kernel), "auto" switches per
     #    iteration on the alpha/beta heuristic — fewest tiles touched overall
     for direction in ("push", "pull", "auto"):
-        res = bfs(tiled, root, "tropical", mode="hostloop",
-                  direction=direction, log_work=True)
+        res = bfs(tiled, root, "tropical", log_work=True,
+                  config=EngineConfig(mode="hostloop", direction=direction))
         ok = np.array_equal(res.distances, d_ref)
         print(f"direction={direction:4s}: tiles/iter={res.work_log.tolist()} "
               f"total={int(res.work_log.sum())} "
@@ -89,7 +94,7 @@ def main():
     roots = np.random.default_rng(0).choice(
         np.nonzero(csr.deg > 0)[0], 8, replace=False)
     ms = multi_source_bfs(tiled, roots, "tropical", batch_size=8,
-                          direction="auto")
+                          config=EngineConfig(direction="auto"))
     ok = all(np.array_equal(ms.distances[i], bfs_traditional(csr, int(r))[0])
              for i, r in enumerate(roots))
     print(f"multi-source: {len(roots)} roots in "
@@ -105,8 +110,8 @@ def main():
     sp_ref = dijkstra_reference(wcsr, root)
     for mode, backend in (("fused", "jnp"), ("fused", "pallas"),
                           ("hostloop", "jnp")):
-        res = sssp(wtiled, root, mode=mode, backend=backend,
-                   need_parents=True)
+        res = sssp(wtiled, root, need_parents=True,
+                   config=EngineConfig(mode=mode, backend=backend))
         ok = np.allclose(res.distances, sp_ref, rtol=1e-4, atol=1e-5)
         print(f"sssp {mode:8s}/{backend:6s}: sweeps={res.sweeps} "
               f"buckets={res.buckets} delta={res.delta:.3f} "
@@ -120,8 +125,9 @@ def main():
     # 7. connected components: sel-max label propagation runs the fixpoint
     #    x' = max(x, A x) until no label changes (labels = max vertex id per
     #    component); boolean peeling runs one boolean BFS per component.
-    res_lp = cc(tiled, semiring="selmax", mode="fused")
-    res_bp = cc(tiled, semiring="boolean", mode="hostloop")
+    res_lp = cc(tiled, semiring="selmax", config=EngineConfig(mode="fused"))
+    res_bp = cc(tiled, semiring="boolean",
+                config=EngineConfig(mode="hostloop"))
     print(f"cc: {res_lp.n_components} components in {res_lp.iterations} "
           f"label-prop sweeps; boolean peeling agrees="
           f"{np.array_equal(res_lp.labels, res_bp.labels)}")
@@ -195,7 +201,8 @@ def main():
     #    cols block's scalar-prefetch indirection).
     sp_refs = [dijkstra_reference(wcsr, int(r)) for r in roots]
     for backend in ("jnp", "pallas"):
-        ms = multi_source_sssp(wtiled, roots, backend=backend)
+        ms = multi_source_sssp(wtiled, roots,
+                               config=EngineConfig(backend=backend))
         ok = all(np.allclose(ms.distances[i], sp_refs[i],
                              rtol=1e-4, atol=1e-5)
                  for i in range(len(roots)))
@@ -203,6 +210,36 @@ def main():
               f"{int(ms.iterations.max())} batch sweeps "
               f"(per-root sweeps={ms.sweeps.tolist()}), "
               f"matches_dijkstra={ok}")
+
+    # 10. the serving layer: a GraphSession keeps the layout resident and
+    #     batches a heterogeneous query stream by (algorithm, semiring,
+    #     delta) onto cached jitted engine handles — every answer bit-equal
+    #     to the one-shot calls above. EngineConfig is the knob carrier the
+    #     front doors share with the session.
+    from repro.serving import GraphSession
+    sess = GraphSession(wtiled, config=EngineConfig(backend="jnp"),
+                        max_batch=8)
+    handles = [sess.submit("bfs", int(r)) for r in roots[:4]]
+    handles += [sess.submit("sssp", int(r)) for r in roots[:4]]
+    handles.append(sess.submit("cc"))
+    sess.drain()
+    ok = all(np.array_equal(h.result().distances,
+                            bfs_traditional(csr, int(r))[0])
+             for h, r in zip(handles[:4], roots[:4]))
+    ok &= all(np.allclose(h.result().distances, sp_refs[i],
+                          rtol=1e-4, atol=1e-5)
+              for i, h in enumerate(handles[4:8]))
+    ok &= handles[8].result().n_components == res_lp.n_components
+    st = sess.stats()
+    print(f"serving: {st['completed']} mixed queries in "
+          f"{st['batches_dispatched']} batches "
+          f"(fill={st['batch_fill_ratio']:.2f}, "
+          f"compile misses={st['compile_cache_misses']}), "
+          f"matches_per_call={ok}")
+    expired = sess.submit("bfs", root, deadline=0.0)
+    sess.flush()
+    print(f"serving deadline: status={expired.result().status!r} "
+          f"(typed DeadlineExpired on access)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,43 @@
+"""SlimSell reproduction: vectorizable graph representation + semiring
+sweep engine, served through ``GraphSession``.
+
+The documented entry point is the session API::
+
+    import repro
+    sess = repro.session(edges)        # resident SlimSell + jitted engine
+    sess.bfs(root)                     # BFS / SSSP / CC on one dispatch path
+    sess.stats()                       # throughput / latency / fill counters
+
+Submodules import lazily — ``import repro`` stays light; ``repro.core``,
+``repro.serving``, ``repro.graph500`` etc. load on first touch.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .core.options import EngineConfig  # noqa: F401
+    from .serving import GraphSession, session  # noqa: F401
+
+_LAZY_MODULES = ("core", "serving", "graphs", "graph500", "analysis")
+_LAZY_NAMES = {
+    "session": ("repro.serving", "session"),
+    "GraphSession": ("repro.serving", "GraphSession"),
+    "EngineConfig": ("repro.core.options", "EngineConfig"),
+}
+
+__all__ = list(_LAZY_MODULES) + list(_LAZY_NAMES)
+
+
+def __getattr__(name: str):
+    if name in _LAZY_MODULES:
+        return importlib.import_module(f"repro.{name}")
+    if name in _LAZY_NAMES:
+        mod, attr = _LAZY_NAMES[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -12,10 +12,13 @@ and an allowlist at ``src/repro/analysis/lint_allow.txt``):
 
 ``string-option``
     A public function takes an option-like string parameter (``mode``,
-    ``direction``, ``backend``, ``semiring``, ``comm``, ``sr_name``) and
-    compares it against string literals without validating it through
-    ``check_choice`` / ``resolve_backend`` / ``sm.get`` — an unknown value
-    silently falls into the default branch (the old ``comm`` dispatch bug).
+    ``direction``, ``backend``, ``semiring``, ``comm``, ``sr_name``,
+    ``algorithm``, ``status`` — the last two are the serving layer's query
+    vocabulary) and compares it against string literals without validating
+    it through ``check_choice`` / ``resolve_backend`` / ``sm.get`` — an
+    unknown value silently falls into the default branch (the old ``comm``
+    dispatch bug). ``resolve_config`` counts as a validator: it funnels
+    every engine knob through ``EngineConfig``'s ``check_choice`` wall.
 
 ``f32-vertex-id``
     Vertex ids / labels cast to float32 in a file with no ``1 << 24``
@@ -49,8 +52,9 @@ import sys
 from typing import List, Optional, Sequence, Set
 
 OPTION_PARAMS = {"mode", "direction", "backend", "semiring", "comm",
-                 "sr_name"}
-VALIDATOR_CALLS = {"check_choice", "resolve_backend", "get"}
+                 "sr_name", "algorithm", "status"}
+VALIDATOR_CALLS = {"check_choice", "resolve_backend", "resolve_config",
+                   "get"}
 ID_HINTS = {"id", "ids", "label", "labels", "vertex", "vertices", "parent",
             "parents"}
 F32_GUARDS = ("1 << 24", "2 ** 24", "2**24", "16777216")

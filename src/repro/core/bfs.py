@@ -54,8 +54,7 @@ from . import direction as dm
 from . import engine as eng
 from . import semiring as sm
 from .engine import DIRECTIONS, WORK_LOG, FixpointSpec  # noqa: F401 (re-export)
-from .options import MODES, check_choice
-from .spmv import resolve_backend
+from .options import EngineConfig, MODES, check_choice, resolve_config
 
 Array = jax.Array
 
@@ -236,27 +235,31 @@ def _check_bfs_options(fn_name: str, semiring: str, direction: str,
 
 def bfs(tiled, root: int, semiring: str = "tropical", *,
         need_parents: bool = False, slimwork: bool = True,
-        mode: str = "fused", max_iters: Optional[int] = None,
+        mode: Optional[str] = None, max_iters: Optional[int] = None,
         log_work: bool = False, backend: Optional[str] = None,
-        direction: str = "push") -> BFSResult:
+        direction: Optional[str] = None,
+        config: Optional[EngineConfig] = None) -> BFSResult:
     """Run BFS from ``root``; returns distances (+parents) in vertex space.
 
     semiring: one of ``semiring.BFS_SEMIRINGS`` — see the module docstring
     for the storage/work tradeoff between them. All four produce identical
     distances; ``selmax`` also produces parents in-band, the others derive
     them with one DP sweep when ``need_parents=True``.
-    mode: "fused" (whole BFS is one ``lax.while_loop`` on device) or
-    "hostloop" (host loop gathering only the active tiles per iteration).
-    slimwork: skip tiles that can no longer change the output (paper §III-C).
-    backend: "jnp" (reference) or "pallas" (SlimSell TPU kernel engine).
-    direction: "push" (top-down SpMV), "pull" (bottom-up sweep over not-final
+    config: the engine knobs as one validated ``EngineConfig`` record —
+    mode "fused" (whole BFS is one ``lax.while_loop`` on device) or
+    "hostloop" (host loop gathering only the active tiles per iteration);
+    backend "jnp" (reference) or "pallas" (SlimSell TPU kernel engine);
+    direction "push" (top-down SpMV), "pull" (bottom-up sweep over not-final
     rows), or "auto" (per-iteration Beamer alpha/beta switch — the direction
     trace is returned in ``BFSResult.directions`` when ``log_work`` is set or
-    ``mode="hostloop"``).
+    mode is "hostloop"). The per-call ``mode``/``backend``/``direction``
+    kwargs are a deprecated spelling of the same knobs.
+    slimwork: skip tiles that can no longer change the output (paper §III-C).
     """
-    _check_bfs_options("bfs", semiring, direction, mode)
-    backend = resolve_backend(backend)
-    if direction in ("push", "auto") and slimwork \
+    cfg = resolve_config("bfs", config, mode=mode, backend=backend,
+                         direction=direction)
+    _check_bfs_options("bfs", semiring, cfg.direction)
+    if cfg.direction in ("push", "auto") and slimwork \
             and getattr(tiled, "inc_src", None) is None:
         raise ValueError("direction-optimizing push masks need the push index;"
                          " rebuild the layout with formats.build_slimsell")
@@ -270,14 +273,15 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
     root = jnp.asarray(root, jnp.int32)
     spec = bfs_spec(semiring)
 
-    if mode == "fused":
-        res = eng.run_fused(spec, tiled, root, slimwork=slimwork,
-                            max_iters=max_iters, log_work=log_work,
-                            backend=backend, direction=direction)
-    else:
-        res = eng.run_hostloop(spec, tiled, root, slimwork=slimwork,
-                               max_iters=max_iters, backend=backend,
-                               direction=direction)
+    with cfg.applied():
+        if cfg.mode == "fused":
+            res = eng.run_fused(spec, tiled, root, slimwork=slimwork,
+                                max_iters=max_iters, log_work=log_work,
+                                backend=cfg.backend, direction=cfg.direction)
+        else:
+            res = eng.run_hostloop(spec, tiled, root, slimwork=slimwork,
+                                   max_iters=max_iters, backend=cfg.backend,
+                                   direction=cfg.direction)
 
     state, iters = res.state, res.iterations
     d = np.asarray(state["d"])
@@ -288,6 +292,6 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
             parents[int(root)] = int(root)
         else:
             parents = np.asarray(dp_transform(tiled, jnp.asarray(d), root))
-    wl = res.work_log if (log_work or mode == "hostloop") else None
+    wl = res.work_log if (log_work or cfg.mode == "hostloop") else None
     return BFSResult(distances=d, parents=parents, iterations=iters,
                      work_log=wl, directions=res.dirs_log)

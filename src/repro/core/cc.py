@@ -38,8 +38,8 @@ import numpy as np
 from . import engine as eng
 from .bfs import bfs
 from .engine import FixpointSpec
-from .options import CC_SEMIRINGS, MODES, check_choice  # noqa: F401 (re-export)
-from .spmv import resolve_backend
+from .options import (CC_SEMIRINGS, EngineConfig, MODES,  # noqa: F401
+                      check_choice, resolve_config)
 
 Array = jax.Array
 
@@ -83,7 +83,7 @@ CC_SPEC = FixpointSpec(
 # --------------------------------------------------------- boolean peeling
 
 
-def _cc_boolean(tiled, *, mode: str, backend: str, slimwork: bool,
+def _cc_boolean(tiled, *, config: EngineConfig, slimwork: bool,
                 max_iters: Optional[int]):
     """One boolean BFS per component, stamping the canonical (max-id) label."""
     n = tiled.n
@@ -98,7 +98,7 @@ def _cc_boolean(tiled, *, mode: str, backend: str, slimwork: bool,
         if unlabeled.size == 0:
             break
         seed = int(unlabeled[0])
-        res = bfs(tiled, seed, "boolean", mode=mode, backend=backend,
+        res = bfs(tiled, seed, "boolean", config=config,
                   slimwork=slimwork, max_iters=max_iters)
         comp = res.distances >= 0
         labels[comp] = int(np.nonzero(comp)[0].max())
@@ -110,17 +110,23 @@ def _cc_boolean(tiled, *, mode: str, backend: str, slimwork: bool,
 
 
 def cc(tiled, *, semiring: str = "selmax", slimwork: bool = True,
-       mode: str = "fused", max_iters: Optional[int] = None,
-       log_work: bool = False, backend: Optional[str] = None) -> CCResult:
+       mode: Optional[str] = None, max_iters: Optional[int] = None,
+       log_work: bool = False, backend: Optional[str] = None,
+       config: Optional[EngineConfig] = None) -> CCResult:
     """Connected components; labels[v] = max vertex id of v's component.
 
     semiring: "selmax" (label propagation fixpoint, one SpMV per sweep) or
     "boolean" (one boolean BFS per component — wins on few large components).
-    mode/backend/slimwork: same engine knobs as ``bfs`` / ``sssp``.
+    config: same ``EngineConfig`` knobs as ``bfs`` / ``sssp``; sel-max label
+    propagation is push-only, boolean peeling forwards the config (including
+    its direction) to the inner BFS. The per-call ``mode``/``backend``
+    kwargs are the deprecated spelling.
     """
     check_choice("cc semiring", semiring, CC_SEMIRINGS)
-    check_choice("mode", mode, MODES)
-    backend = resolve_backend(backend)
+    cfg = resolve_config("cc", config, mode=mode, backend=backend)
+    if semiring == "selmax":
+        check_choice("direction", cfg.direction, CC_SPEC.directions,
+                     hint="sel-max label propagation is push-only")
     if slimwork and getattr(tiled, "inc_src", None) is None:
         raise ValueError("SlimWork masks need the push index; rebuild the "
                          "layout with formats.build_slimsell")
@@ -134,18 +140,20 @@ def cc(tiled, *, semiring: str = "selmax", slimwork: bool = True,
     cap = int(max_iters) if max_iters is not None else n + 1
 
     if semiring == "boolean":
-        labels, iters = _cc_boolean(tiled, mode=mode, backend=backend,
+        labels, iters = _cc_boolean(tiled, config=cfg,
                                     slimwork=slimwork, max_iters=max_iters)
         return CCResult(labels=labels, n_components=len(np.unique(labels)),
                         iterations=iters)
 
     arg = jnp.asarray(0, jnp.int32)  # label prop has no root
-    if mode == "fused":
-        res = eng.run_fused(CC_SPEC, tiled, arg, slimwork=slimwork,
-                            max_iters=cap, log_work=log_work, backend=backend)
-    else:
-        res = eng.run_hostloop(CC_SPEC, tiled, arg, slimwork=slimwork,
-                               max_iters=cap, backend=backend)
+    with cfg.applied():
+        if cfg.mode == "fused":
+            res = eng.run_fused(CC_SPEC, tiled, arg, slimwork=slimwork,
+                                max_iters=cap, log_work=log_work,
+                                backend=cfg.backend)
+        else:
+            res = eng.run_hostloop(CC_SPEC, tiled, arg, slimwork=slimwork,
+                                   max_iters=cap, backend=cfg.backend)
     wl = res.work_log if log_work else None
     labels = np.asarray(res.state["x"]).astype(np.int64) - 1  # 0-based ids
     return CCResult(labels=labels.astype(np.int32),

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
+from functools import lru_cache, partial
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -150,13 +150,19 @@ _FUSED_STATICS = ("spec", "slimwork", "max_iters", "log_work", "backend",
                   "direction")
 
 
-def _run_fused_impl(spec: FixpointSpec, tiled, arg, ctx_args, *,
-                    slimwork: bool, max_iters: int, log_work: bool,
-                    backend: str, direction: str):
+def _fixpoint_loop(spec: FixpointSpec, tiled, ctx, state, *,
+                   slimwork: bool, max_iters: int, log_work: bool,
+                   backend: str, direction: str,
+                   batch_width: Optional[int] = None):
+    """The fused strategy's ``lax.while_loop``, factored out of
+    ``_run_fused_impl`` so the serving layer's persistent jitted handles
+    (``fixpoint_handle``) trace the exact same loop body.
+
+    ``batch_width`` is the batch axis B for batched specs (callers with the
+    init arg in hand derive it; handles bake it in statically). Returns
+    ``(state, iterations, work, dirs, plog)`` — the raw device values.
+    """
     n = tiled.n
-    debug.check_layout(tiled)
-    ctx = spec.setup(tiled, *ctx_args) if spec.setup is not None else None
-    state = spec.init_state(n, arg, ctx)
     log_n = WORK_LOG if log_work else 1
     work = jnp.zeros((log_n,), jnp.int32)
     dirs = jnp.full((log_n,), -1, jnp.int32)
@@ -164,7 +170,7 @@ def _run_fused_impl(spec: FixpointSpec, tiled, arg, ctx_args, *,
     use_push = direction in ("push", "auto")
     n_tiles_c = jnp.asarray(tiled.cols.shape[0], jnp.int32)
     if spec.batched:
-        B = arg.shape[0]
+        B = batch_width
         d0 = jnp.full((B,), dm.PULL if direction == "pull" else dm.PUSH,
                       jnp.int32)
     else:
@@ -250,6 +256,19 @@ def _run_fused_impl(spec: FixpointSpec, tiled, arg, ctx_args, *,
     return state, k - 1, work, dirs, plog
 
 
+def _run_fused_impl(spec: FixpointSpec, tiled, arg, ctx_args, *,
+                    slimwork: bool, max_iters: int, log_work: bool,
+                    backend: str, direction: str):
+    debug.check_layout(tiled)
+    ctx = spec.setup(tiled, *ctx_args) if spec.setup is not None else None
+    state = spec.init_state(tiled.n, arg, ctx)
+    width = arg.shape[0] if spec.batched else None
+    return _fixpoint_loop(spec, tiled, ctx, state, slimwork=slimwork,
+                          max_iters=max_iters, log_work=log_work,
+                          backend=backend, direction=direction,
+                          batch_width=width)
+
+
 _run_fused = partial(jax.jit, static_argnames=_FUSED_STATICS)(_run_fused_impl)
 
 
@@ -286,6 +305,99 @@ def run_fused(spec: FixpointSpec, tiled, arg, *, ctx_args=(),
                            np.int32)
     return EngineResult(state=state, iterations=iters, work_log=wl,
                         dirs_log=dirs_out, pull_cols_log=plog_out)
+
+
+# ---------------------------------------------------------- fixpoint handles
+
+
+@dataclasses.dataclass(eq=False)
+class FixpointHandle:
+    """A persistent, re-entrant jitted fixpoint runner for one bucket
+    signature (spec, slimwork, max_iters, backend, direction, batch width).
+
+    The serving layer's unit of compilation reuse: the handle's jitted
+    function takes ``(tiled, ctx, state)`` as *traced* pytree arguments —
+    nothing graph-sized is closed over — so one handle serves every layout
+    with matching shapes, and ``run`` re-dispatches without retracing.
+    ``donate=True`` donates the state pytree's buffers to the sweep loop
+    (distance/frontier buffers are reused in place on TPU/GPU; donation is
+    auto-disabled on CPU where XLA ignores it with a warning).
+
+    ``run`` returns ``(state, iterations)`` as *device* values without
+    blocking — JAX's async dispatch lets the caller overlap host-side
+    request handling with the device sweeps and harvest one step late.
+    Under ``debug.checked()`` the call routes through a checkified twin.
+    """
+    spec: FixpointSpec
+    slimwork: bool
+    max_iters: int
+    backend: str
+    direction: str
+    batch_width: Optional[int]
+    donate: bool
+    _impl: Callable = dataclasses.field(repr=False, default=None)
+    _jitted: Callable = dataclasses.field(repr=False, default=None)
+
+    def setup(self, tiled, ctx_args=()):
+        """The spec's per-run constants (weight views etc.), or None."""
+        if self.spec.setup is None:
+            return None
+        return self.spec.setup(tiled, *tuple(ctx_args))
+
+    def init_state(self, tiled, arg, ctx):
+        """Fresh state pytree for one run (device-ready, donatable)."""
+        return self.spec.init_state(tiled.n, arg, ctx)
+
+    def run(self, tiled, ctx, state):
+        """Drive ``state`` to the fixpoint; async ``(state, iterations)``."""
+        if debug.enabled():
+            return debug.call_checked(self._impl, tiled, ctx, state)
+        return self._jitted(tiled, ctx, state)
+
+
+@lru_cache(maxsize=None)
+def _fixpoint_handle_cached(spec: FixpointSpec, slimwork: bool,
+                            max_iters: int, backend: str, direction: str,
+                            batch_width: Optional[int],
+                            donate: bool) -> FixpointHandle:
+    def impl(tiled, ctx, state):
+        state, iters, _, _, _ = _fixpoint_loop(
+            spec, tiled, ctx, state, slimwork=slimwork, max_iters=max_iters,
+            log_work=False, backend=backend, direction=direction,
+            batch_width=batch_width)
+        return state, iters
+
+    jitted = jax.jit(impl, donate_argnums=(2,) if donate else ())
+    return FixpointHandle(spec=spec, slimwork=slimwork, max_iters=max_iters,
+                          backend=backend, direction=direction,
+                          batch_width=batch_width, donate=donate,
+                          _impl=impl, _jitted=jitted)
+
+
+def fixpoint_handle(spec: FixpointSpec, *, slimwork: bool = True,
+                    max_iters: int, backend: str = "jnp",
+                    direction: str = "push",
+                    batch_width: Optional[int] = None,
+                    donate: Optional[bool] = None) -> FixpointHandle:
+    """Get (or build) the process-wide ``FixpointHandle`` for a bucket
+    signature. Handles are cached forever — like the engine's jit caches —
+    so repeated sessions over same-shaped layouts reuse both the handle
+    object and its compiled executables.
+
+    ``batch_width`` is required for batched specs (it is part of the
+    signature; serving buckets pad to power-of-two widths so the set of
+    live signatures stays small). ``donate=None`` enables buffer donation
+    exactly where XLA honors it (not on CPU).
+    """
+    check_choice("direction", direction, DIRECTIONS)
+    check_choice("backend", backend, BACKENDS)
+    if spec.batched and batch_width is None:
+        raise ValueError(f"{spec.name}: batched specs need batch_width")
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    return _fixpoint_handle_cached(
+        spec, bool(slimwork), int(max_iters), backend, direction,
+        None if batch_width is None else int(batch_width), bool(donate))
 
 
 # ------------------------------------------------------------------ hostloop

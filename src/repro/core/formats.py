@@ -204,6 +204,22 @@ def _tiled_unflatten(aux, children):
                          inc_ptr=inc_ptr, wts=wts)
 
 
+def layout_signature(tiled: "SlimSellTiled") -> tuple:
+    """Stable hashable identity of a built layout — the graph component of
+    the serving layer's bucket / compile-cache keys.
+
+    Two layouts with equal signatures produce identically-shaped engine
+    traces (same tile grid, same chunk count, same weighted-ness), so a
+    jitted ``FixpointHandle`` compiled for one serves the other without
+    retracing. It deliberately hashes *shapes*, not contents: the contents
+    are traced arguments.
+    """
+    return (int(tiled.n), int(tiled.m_undirected), int(tiled.C),
+            int(tiled.L), int(tiled.sigma), int(tiled.n_chunks),
+            int(tiled.n_tiles), tiled.inc_src is not None,
+            tiled.wts is not None)
+
+
 def build_push_index(cols: np.ndarray,
                      tile_chunk: int = 1 << 16) -> tuple[np.ndarray, np.ndarray]:
     """Deduplicated (column vertex, tile) pairs of a cols array, vertex-sorted.

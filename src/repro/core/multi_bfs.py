@@ -45,10 +45,10 @@ import numpy as np
 from . import direction as dm
 from . import engine as eng
 from . import semiring as sm
-from .bfs import (_check_bfs_options, _frontier_payload, _ids1, _not_final,
-                  dp_transform, semiring_update)
+from .bfs import (_check_bfs_options, _frontier_payload, _host_direction_bits,
+                  _ids1, _not_final, dp_transform, semiring_update)
 from .engine import DIRECTIONS, WORK_LOG, FixpointSpec  # noqa: F401
-from .spmv import resolve_backend
+from .options import EngineConfig, resolve_config
 
 Array = jax.Array
 
@@ -131,6 +131,14 @@ def multi_bfs_spec(sr_name: str) -> FixpointSpec:
     algebra with a trailing B axis (``bfs``'s extractors are shape-agnostic
     and are reused verbatim); the engine supplies the union-mask SpMM loop
     and the per-column direction carry."""
+    def host_bits(state, k, need_sb, need_nf):
+        # the single-source host twin is shape-agnostic ([n, B] matrices in,
+        # [n, B] bits out); run_hostloop unions the columns into the shared
+        # tile set
+        nf, fb = _host_direction_bits(sr_name, state, int(k),
+                                      need_nf=need_nf, need_fb=need_sb)
+        return fb, nf
+
     return FixpointSpec(
         name=f"multi_bfs/{sr_name}",
         sr_name=sr_name,
@@ -142,6 +150,7 @@ def multi_bfs_spec(sr_name: str) -> FixpointSpec:
         not_final=lambda ctx, state: _not_final(sr_name, state),
         update=lambda ctx, state, y, k: semiring_update(sr_name, state, y, k,
                                                         _ids1(y)),
+        host_bits=host_bits,
     )
 
 
@@ -155,23 +164,30 @@ def multi_source_bfs(tiled, roots: Sequence[int],
                      max_iters: Optional[int] = None,
                      log_work: bool = False,
                      backend: Optional[str] = None,
-                     direction: str = "push") -> MultiBFSResult:
+                     direction: Optional[str] = None,
+                     mode: Optional[str] = None,
+                     config: Optional[EngineConfig] = None) -> MultiBFSResult:
     """BFS from every root in ``roots``; one fused SpMM loop per batch.
 
     batch_size: roots per device batch (None -> all roots in one batch). The
     final partial batch is padded by repeating its last root; padded columns
     are dropped before returning.
-    backend: "jnp" (reference) or "pallas" (SlimSell TPU SpMM kernel).
-    direction: "push" | "pull" | "auto" — with "auto" every column carries
-    its own Beamer direction state; ``pull_cols_log`` (under ``log_work``)
-    reports how many columns ran pull per iteration.
+    config: the engine knobs as one ``EngineConfig`` — backend "jnp"
+    (reference) or "pallas" (SlimSell TPU SpMM kernel); direction "push" |
+    "pull" | "auto" (with "auto" every column carries its own Beamer
+    direction state; ``pull_cols_log`` under ``log_work`` reports how many
+    columns ran pull per iteration); mode "fused" or "hostloop" (the batched
+    hostloop is push-only — union tile masks, one host sweep per level).
+    The per-call ``backend``/``direction``/``mode`` kwargs are the
+    deprecated spelling.
     """
-    _check_bfs_options("multi_source_bfs", semiring, direction)
-    if direction in ("push", "auto") and slimwork \
+    cfg = resolve_config("multi_source_bfs", config, mode=mode,
+                         backend=backend, direction=direction)
+    _check_bfs_options("multi_source_bfs", semiring, cfg.direction)
+    if cfg.direction in ("push", "auto") and slimwork \
             and getattr(tiled, "inc_src", None) is None:
         raise ValueError("direction-optimizing push masks need the push index;"
                          " rebuild the layout with formats.build_slimsell")
-    backend = resolve_backend(backend)
     roots = np.asarray(roots, np.int32).reshape(-1)
     if roots.size == 0:
         raise ValueError("multi_source_bfs needs at least one root")
@@ -182,11 +198,19 @@ def multi_source_bfs(tiled, roots: Sequence[int],
     d_out = np.empty((roots.size, n), np.int32)
     p_out = np.empty((roots.size, n), np.int32) if need_parents else None
     iters, work_rows, plog_rows = [], [], []
-    for start, batch, batch_p in _iter_batches(roots, batch_size, backend):
-        res = eng.run_fused(spec, tiled, jnp.asarray(batch_p),
-                            slimwork=slimwork, max_iters=max_iters,
-                            log_work=log_work, backend=backend,
-                            direction=direction)
+    for start, batch, batch_p in _iter_batches(roots, batch_size,
+                                               cfg.backend):
+        with cfg.applied():
+            if cfg.mode == "fused":
+                res = eng.run_fused(spec, tiled, jnp.asarray(batch_p),
+                                    slimwork=slimwork, max_iters=max_iters,
+                                    log_work=log_work, backend=cfg.backend,
+                                    direction=cfg.direction)
+            else:
+                res = eng.run_hostloop(spec, tiled, jnp.asarray(batch_p),
+                                       slimwork=slimwork, max_iters=max_iters,
+                                       backend=cfg.backend,
+                                       direction=cfg.direction)
         state = res.state
         d = np.asarray(state["d"]).T          # [B, n]
         d_out[start:start + batch.size] = d[: batch.size]
@@ -203,10 +227,22 @@ def multi_source_bfs(tiled, roots: Sequence[int],
                 p_out[start + b, int(r)] = int(r)
         iters.append(res.iterations)
         if log_work:
-            work_rows.append(res.work_log)
-            plog_rows.append(res.pull_cols_log)
+            work_rows.append(np.asarray(res.work_log, np.int32))
+            plog_rows.append(
+                None if res.pull_cols_log is None
+                else np.asarray(res.pull_cols_log, np.int32))
+    wl = plog = None
+    if log_work:
+        # fused rows are fixed WORK_LOG length; hostloop rows are one entry
+        # per executed level — pad to the longest so batches stack
+        width = max(w.size for w in work_rows)
+        wl = np.zeros((len(work_rows), width), np.int32)
+        plog = np.zeros((len(work_rows), width), np.int32)
+        for i, w in enumerate(work_rows):
+            wl[i, : w.size] = w
+            p = plog_rows[i]
+            if p is not None:
+                plog[i, : p.size] = p
     return MultiBFSResult(
         distances=d_out, parents=p_out, iterations=np.asarray(iters, np.int32),
-        roots=roots,
-        work_log=np.stack(work_rows) if log_work else None,
-        pull_cols_log=np.stack(plog_rows) if log_work else None)
+        roots=roots, work_log=wl, pull_cols_log=plog)

@@ -65,8 +65,7 @@ import numpy as np
 from . import engine as eng
 from .engine import FixpointSpec
 from .multi_bfs import _iter_batches
-from .options import MODES, check_choice
-from .spmv import resolve_backend
+from .options import EngineConfig, MODES, check_choice, resolve_config
 from .sssp import (_HEAVY, _LIGHT, _require_weighted, _resolve_delta,
                    sssp_parents)
 
@@ -221,31 +220,39 @@ MULTI_SSSP_SPEC = FixpointSpec(
 def multi_source_sssp(tiled, roots: Sequence[int], *,
                       delta: Optional[float] = None,
                       need_parents: bool = False, slimwork: bool = True,
-                      mode: str = "fused", batch_size: Optional[int] = None,
+                      mode: Optional[str] = None,
+                      batch_size: Optional[int] = None,
                       max_iters: Optional[int] = None,
                       log_work: bool = False,
-                      backend: Optional[str] = None) -> MultiSSSPResult:
+                      backend: Optional[str] = None,
+                      config: Optional[EngineConfig] = None
+                      ) -> MultiSSSPResult:
     """Delta-stepping SSSP from every root in ``roots``; one fused min-plus
     SpMM loop per batch.
 
     delta: bucket width shared by every column (None -> mean edge weight;
     ``inf`` -> batched Bellman-Ford).
-    mode: "fused" (one flattened lax.while_loop on device) or "hostloop"
-    (host loop + union SlimWork tile gathering per sweep).
+    config: the engine knobs as one ``EngineConfig`` — mode "fused" (one
+    flattened lax.while_loop on device) or "hostloop" (host loop + union
+    SlimWork tile gathering per sweep); backend "jnp" (reference) or
+    "pallas" (stored-weight SlimSell SpMM kernel; batch widths not
+    divisible by the 128-lane tile fall back to gcd lane tiles).
+    Delta-stepping is push-only, so the config's direction must stay the
+    default "push". The per-call ``mode``/``backend`` kwargs are the
+    deprecated spelling.
     batch_size: roots per device batch (None -> all roots in one batch). The
     final partial batch is padded by repeating its last root; padded columns
     are dropped before returning.
-    backend: "jnp" (reference) or "pallas" (stored-weight SlimSell SpMM
-    kernel; batch widths not divisible by the 128-lane tile fall back to
-    gcd lane tiles).
     Returns per-root float32 distances (+inf unreachable), per-root
     sweep/bucket counts that match the per-root ``sssp`` engine exactly,
     and, when requested, shortest-path-tree parents via the weighted DP
     sweep (one ``sssp_parents`` vmap over the batch).
     """
-    check_choice("mode", mode, MODES)
+    cfg = resolve_config("multi_source_sssp", config, mode=mode,
+                         backend=backend)
+    check_choice("direction", cfg.direction, MULTI_SSSP_SPEC.directions,
+                 hint="delta-stepping relaxations are push-only")
     _require_weighted(tiled)
-    backend = resolve_backend(backend)
     if slimwork and getattr(tiled, "inc_src", None) is None:
         raise ValueError("SlimWork source masks need the push index; rebuild "
                          "the layout with formats.build_slimsell")
@@ -265,17 +272,22 @@ def multi_source_sssp(tiled, roots: Sequence[int], *,
     sweeps = np.empty(roots.size, np.int32)
     buckets = np.empty(roots.size, np.int32)
     iters, work_rows = [], []
-    for start, batch, batch_p in _iter_batches(roots, batch_size, backend):
-        if mode == "fused":
-            res = eng.run_fused(MULTI_SSSP_SPEC, tiled, jnp.asarray(batch_p),
-                                ctx_args=ctx_args, slimwork=slimwork,
-                                max_iters=max_iters, log_work=log_work,
-                                backend=backend)
-        else:
-            res = eng.run_hostloop(MULTI_SSSP_SPEC, tiled,
-                                   jnp.asarray(batch_p), ctx_args=ctx_args,
-                                   slimwork=slimwork, max_iters=max_iters,
-                                   backend=backend)
+    for start, batch, batch_p in _iter_batches(roots, batch_size,
+                                               cfg.backend):
+        with cfg.applied():
+            if cfg.mode == "fused":
+                res = eng.run_fused(MULTI_SSSP_SPEC, tiled,
+                                    jnp.asarray(batch_p),
+                                    ctx_args=ctx_args, slimwork=slimwork,
+                                    max_iters=max_iters, log_work=log_work,
+                                    backend=cfg.backend)
+            else:
+                res = eng.run_hostloop(MULTI_SSSP_SPEC, tiled,
+                                       jnp.asarray(batch_p),
+                                       ctx_args=ctx_args,
+                                       slimwork=slimwork,
+                                       max_iters=max_iters,
+                                       backend=cfg.backend)
         state = res.state
         d = np.asarray(state["dist"]).T                        # [B, n]
         d_out[start:start + batch.size] = d[: batch.size]

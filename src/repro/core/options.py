@@ -21,10 +21,23 @@ It also owns the Pallas ``interpret`` default (``default_interpret``):
 interpret mode on every non-TPU backend so the kernels are validated in CI,
 compiled on real TPUs, overridable through the ``REPRO_PALLAS_INTERPRET``
 environment variable for the ROADMAP ``interpret=False`` calibration runs.
+
+Since the serving PR this module also owns the **one** engine-knob record,
+``EngineConfig``: a frozen dataclass bundling (backend, direction, mode,
+interpret, comm, sanitize), validated once at construction. Every
+algorithm front door (``bfs`` / ``multi_source_bfs`` / ``sssp`` /
+``multi_source_sssp`` / ``cc``) and ``serving.GraphSession`` accept
+``config=EngineConfig(...)``; the old per-call kwargs keep working through
+``resolve_config``, which emits a ``DeprecationWarning`` carrying the
+one-line migration.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import os
+import threading
+import warnings
 from typing import Optional, Sequence
 
 MODES = ("fused", "hostloop")
@@ -32,6 +45,13 @@ COMMS = ("allreduce", "reduce_gather")
 BACKENDS = ("jnp", "pallas")
 DEFAULT_BACKEND = "jnp"
 DIRECTIONS = ("push", "pull", "auto")
+
+# the serving layer's query vocabulary: every GraphSession.submit() call
+# names one of these (multi-source requests are streams of them)
+ALGORITHMS = ("bfs", "sssp", "cc")
+
+# query lifecycle states reported by serving.QueryResult.status
+QUERY_STATUSES = ("ok", "timeout")
 
 # registered semiring names; core.semiring builds the object registry and
 # asserts it matches this tuple at import time (the law verifier's
@@ -49,14 +69,39 @@ CC_SEMIRINGS = ("selmax", "boolean")
 # compiled on TPU; "1"/"0" force it either way (calibration runs)
 INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
+_INTERPRET_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def interpret_override(value: Optional[bool]):
+    """Thread-local override of the Pallas interpret default.
+
+    ``EngineConfig.interpret`` threads through here: the kernels resolve
+    their ``interpret`` flag at trace time via ``default_interpret()``, so a
+    config with an explicit bool wraps the engine call in this context.
+    ``None`` is a no-op (keep the env/auto default). Carries the same caveat
+    as ``REPRO_PALLAS_INTERPRET``: jit caches key on the *functions*, so
+    flipping the override mid-process only affects not-yet-traced shapes.
+    """
+    prev = getattr(_INTERPRET_STATE, "value", None)
+    _INTERPRET_STATE.value = value
+    try:
+        yield
+    finally:
+        _INTERPRET_STATE.value = prev
+
 
 def default_interpret() -> bool:
     """The repo-wide Pallas ``interpret`` default.
 
-    ``REPRO_PALLAS_INTERPRET=1|0`` forces interpret mode on or off;
+    Resolution order: an active ``interpret_override`` context (how
+    ``EngineConfig.interpret`` lands), then ``REPRO_PALLAS_INTERPRET=1|0``;
     unset/"auto" interprets everywhere except on a real TPU backend —
     identical to the old per-wrapper behavior on CPU CI.
     """
+    override = getattr(_INTERPRET_STATE, "value", None)
+    if override is not None:
+        return bool(override)
     v = os.environ.get(INTERPRET_ENV, "auto").strip().lower()
     if v in ("1", "true", "yes"):
         return True
@@ -88,3 +133,90 @@ def check_choice(name: str, value, allowed: Sequence[str], *,
             msg += f" ({hint})"
         raise ValueError(msg)
     return value
+
+
+# ------------------------------------------------------------- EngineConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """The engine knobs as one validated, hashable record.
+
+    backend:   "jnp" (reference) or "pallas" (SlimSell TPU kernels)
+    direction: "push" | "pull" | "auto" (BFS-family; push-only algorithms
+               require the default)
+    mode:      "fused" (one on-device lax.while_loop) or "hostloop"
+               (host loop + SlimWork tile gathering)
+    interpret: Pallas interpret mode — None keeps the env/auto repo default
+    comm:      distributed combine: "allreduce" | "reduce_gather"
+    sanitize:  run engine calls under the checkify sanitizer
+               (``core.debug.checked()``)
+
+    Frozen + validated in ``__post_init__`` so a config is checked once and
+    can key compile caches (``signature()``); accepted by every algorithm
+    front door and ``serving.GraphSession`` as ``config=``.
+    """
+    backend: str = DEFAULT_BACKEND
+    direction: str = "push"
+    mode: str = "fused"
+    interpret: Optional[bool] = None
+    comm: str = "allreduce"
+    sanitize: bool = False
+
+    def __post_init__(self):
+        check_choice("backend", self.backend, BACKENDS)
+        check_choice("direction", self.direction, DIRECTIONS)
+        check_choice("mode", self.mode, MODES)
+        check_choice("comm", self.comm, COMMS)
+        if self.interpret is not None and not isinstance(self.interpret, bool):
+            raise ValueError(
+                f"interpret must be None or bool, got {self.interpret!r}")
+        if not isinstance(self.sanitize, bool):
+            raise ValueError(f"sanitize must be bool, got {self.sanitize!r}")
+
+    def signature(self) -> tuple:
+        """Hashable identity for compile-cache / bucket keys."""
+        return (self.backend, self.direction, self.mode, self.interpret,
+                self.comm, self.sanitize)
+
+    @contextlib.contextmanager
+    def applied(self):
+        """Context manager applying the config's ambient knobs (interpret
+        override + sanitizer) around an engine call; backend/direction/mode
+        are passed explicitly by the front doors."""
+        from . import debug
+        with contextlib.ExitStack() as stack:
+            if self.interpret is not None:
+                stack.enter_context(interpret_override(self.interpret))
+            if self.sanitize and not debug.enabled():
+                stack.enter_context(debug.checked())
+            yield
+
+
+def resolve_config(fn_name: str, config: Optional[EngineConfig],
+                   **legacy) -> EngineConfig:
+    """Merge a front door's deprecated per-call engine kwargs into one
+    ``EngineConfig``.
+
+    ``legacy`` holds the per-call kwargs with ``None`` meaning "not given".
+    Passing both ``config=`` and a legacy kwarg is an error (silently
+    preferring either would mask a caller bug). Legacy use warns with the
+    one-line migration; construction validates every field via
+    ``check_choice`` so the old error messages are preserved.
+    """
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if config is not None:
+        if given:
+            raise TypeError(
+                f"{fn_name}: pass either config= or the per-call "
+                f"{sorted(given)} kwargs, not both")
+        if not isinstance(config, EngineConfig):
+            raise TypeError(f"{fn_name}: config must be an EngineConfig, "
+                            f"got {type(config).__name__}")
+        return config
+    if given:
+        args = ", ".join(f"{k}={v!r}" for k, v in sorted(given.items()))
+        warnings.warn(
+            f"{fn_name}: per-call engine kwargs are deprecated; use "
+            f"config=EngineConfig({args})", DeprecationWarning, stacklevel=3)
+    return EngineConfig(**given)

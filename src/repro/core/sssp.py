@@ -58,8 +58,7 @@ import numpy as np
 
 from . import engine as eng
 from .engine import FixpointSpec
-from .options import MODES, check_choice
-from .spmv import resolve_backend
+from .options import EngineConfig, MODES, check_choice, resolve_config
 
 Array = jax.Array
 
@@ -319,20 +318,25 @@ def dijkstra_reference(csr, root: int) -> np.ndarray:
 
 def sssp(tiled, root: int, *, delta: Optional[float] = None,
          need_parents: bool = False, slimwork: bool = True,
-         mode: str = "fused", max_iters: Optional[int] = None,
-         log_work: bool = False, backend: Optional[str] = None) -> SSSPResult:
+         mode: Optional[str] = None, max_iters: Optional[int] = None,
+         log_work: bool = False, backend: Optional[str] = None,
+         config: Optional[EngineConfig] = None) -> SSSPResult:
     """Single-source shortest paths from ``root`` by delta-stepping.
 
     delta: bucket width (None -> mean edge weight; ``inf`` -> Bellman-Ford).
-    mode: "fused" (one flattened lax.while_loop on device) or "hostloop"
-    (host loop + SlimWork tile gathering per sweep).
-    backend: "jnp" (reference) or "pallas" (weighted SlimSell TPU kernel).
+    config: the engine knobs as one ``EngineConfig`` — mode "fused" (one
+    flattened lax.while_loop on device) or "hostloop" (host loop + SlimWork
+    tile gathering per sweep); backend "jnp" (reference) or "pallas"
+    (weighted SlimSell TPU kernel). Delta-stepping is push-only, so the
+    config's direction must be the default "push". The per-call ``mode`` /
+    ``backend`` kwargs are the deprecated spelling.
     Returns float32 distances (+inf where unreachable) and, when requested,
     the shortest-path-tree parents via the weighted DP sweep.
     """
-    check_choice("mode", mode, MODES)
+    cfg = resolve_config("sssp", config, mode=mode, backend=backend)
+    check_choice("direction", cfg.direction, SSSP_SPEC.directions,
+                 hint="delta-stepping relaxations are push-only")
     _require_weighted(tiled)
-    backend = resolve_backend(backend)
     if slimwork and getattr(tiled, "inc_src", None) is None:
         raise ValueError("SlimWork source masks need the push index; rebuild "
                          "the layout with formats.build_slimsell")
@@ -344,15 +348,18 @@ def sssp(tiled, root: int, *, delta: Optional[float] = None,
         raise ValueError(f"root {root} out of range for n={n}")
     ctx_args = (jnp.asarray(delta, jnp.float32),)
 
-    if mode == "fused":
-        res = eng.run_fused(SSSP_SPEC, tiled, jnp.asarray(root, jnp.int32),
-                            ctx_args=ctx_args, slimwork=slimwork,
-                            max_iters=max_iters, log_work=log_work,
-                            backend=backend)
-    else:
-        res = eng.run_hostloop(SSSP_SPEC, tiled, jnp.asarray(root, jnp.int32),
-                               ctx_args=ctx_args, slimwork=slimwork,
-                               max_iters=max_iters, backend=backend)
+    with cfg.applied():
+        if cfg.mode == "fused":
+            res = eng.run_fused(SSSP_SPEC, tiled,
+                                jnp.asarray(root, jnp.int32),
+                                ctx_args=ctx_args, slimwork=slimwork,
+                                max_iters=max_iters, log_work=log_work,
+                                backend=cfg.backend)
+        else:
+            res = eng.run_hostloop(SSSP_SPEC, tiled,
+                                   jnp.asarray(root, jnp.int32),
+                                   ctx_args=ctx_args, slimwork=slimwork,
+                                   max_iters=max_iters, backend=cfg.backend)
 
     dist = res.state["dist"]
     buckets = int(res.state["buckets"])

@@ -5,11 +5,13 @@ graph, sample 64 search keys among non-isolated vertices, run one BFS per
 key, validate every BFS tree, and report traversed-edges-per-second (TEPS)
 with the harmonic mean as the headline number.
 
-This module runs the keys in *batches* through the multi-source SpMM engine
-(``core.multi_bfs``) — the matrix-centric formulation reads the adjacency
-once per iteration for the whole batch — and validates each tree with the
-spec's checks (§5.2: tree edges exist in the graph, levels differ by one,
-reachability agrees with the reference oracle).
+Since the serving PR both harnesses are thin wrappers over
+``serving.GraphSession`` — the keys run in *batches* through the session's
+shape-bucketed dispatch path (one resident layout, persistent jitted
+handles, the same multi-source SpMM engine), so the harness and the
+serving layer exercise one codepath and cannot drift. Each tree is
+validated with the spec's checks (§5.2: tree edges exist in the graph,
+levels differ by one, reachability agrees with the reference oracle).
 
     from repro.graph500 import run_graph500
     rep = run_graph500(scale=10, edge_factor=16, n_roots=64, batch_size=16,
@@ -17,11 +19,10 @@ reachability agrees with the reference oracle).
     print(rep.summary())
 
 ``run_graph500_sssp`` is the weighted twin (Graph500's second kernel):
-uniform (0, 1]-style edge weights, delta-stepping per key through
-``core.sssp`` — or, with ``batched=True``, in key batches through the
-multi-source min-plus SpMM engine (``core.multi_sssp``) — distances
-validated against the host Dijkstra oracle and parents against the
-tight-relaxation check.
+uniform (0, 1]-style edge weights, delta-stepping per key — one serving
+query per key, or, with ``batched=True``, in key batches through the
+multi-source min-plus SpMM path — distances validated against the host
+Dijkstra oracle and parents against the tight-relaxation check.
 """
 from __future__ import annotations
 
@@ -32,14 +33,11 @@ from typing import Optional
 import numpy as np
 
 from .core.bfs_traditional import bfs_traditional
-from .core.engine import DIRECTIONS
 from .core.formats import CSRGraph, SlimSellTiled, build_slimsell
-from .core.multi_bfs import multi_source_bfs
-from .core.multi_sssp import multi_source_sssp
-from .core.options import MODES, check_choice
-from .core.spmv import resolve_backend
-from .core.sssp import dijkstra_reference, sssp
+from .core.options import DEFAULT_BACKEND, EngineConfig
+from .core.sssp import dijkstra_reference
 from .graphs.generators import kronecker, with_random_weights
+from .serving import GraphSession
 
 
 def sample_roots(csr: CSRGraph, n_roots: int = 64, *, seed: int = 2) -> np.ndarray:
@@ -112,8 +110,13 @@ def run_graph500(*, scale: int = 10, edge_factor: int = 16, n_roots: int = 64,
                  seed: int = 1, validate: bool = True,
                  need_parents: bool = True,
                  csr: Optional[CSRGraph] = None,
-                 tiled: Optional[SlimSellTiled] = None) -> Graph500Report:
+                 tiled: Optional[SlimSellTiled] = None,
+                 config: Optional[EngineConfig] = None) -> Graph500Report:
     """Build (or accept) the graph, run batched 64-root BFS, validate, score.
+
+    Execution is one ``serving.GraphSession`` per run (``max_batch`` =
+    the harness batch size): each timed batch is a submit wave + drain
+    through the same shape-bucketed dispatch path the serving layer uses.
 
     TEPS accounting follows the spec: the edges counted for a root are the
     undirected edges with at least one endpoint reached from it; the time
@@ -121,13 +124,16 @@ def run_graph500(*, scale: int = 10, edge_factor: int = 16, n_roots: int = 64,
     (the whole batch advances in the same kernel sweeps).
     """
     # fail at the harness boundary, not per-batch inside the timed loop
-    check_choice("direction", direction, DIRECTIONS)
-    resolve_backend(backend)
+    # (EngineConfig validates direction/backend with the boundary messages)
+    if config is None:
+        config = EngineConfig(backend=backend or DEFAULT_BACKEND,
+                              direction=direction)
     if csr is None:
         csr = kronecker(scale, edge_factor, seed=seed)
     if tiled is None:
         tiled = build_slimsell(csr, C=C, L=L, sigma=csr.n).to_jax()
     roots = sample_roots(csr, n_roots)
+    sess = GraphSession(tiled, config=config, max_batch=batch_size)
 
     teps = np.empty(roots.size, np.float64)
     batch_seconds = []
@@ -135,25 +141,22 @@ def run_graph500(*, scale: int = 10, edge_factor: int = 16, n_roots: int = 64,
     for start in range(0, roots.size, batch_size):
         batch = roots[start:start + batch_size]
         t0 = time.perf_counter()
-        res = multi_source_bfs(tiled, batch, semiring,
-                               need_parents=need_parents,
-                               batch_size=batch.size, backend=backend,
-                               direction=direction)
+        results = sess.bfs_many(batch, semiring, need_parents=need_parents)
         dt = time.perf_counter() - t0
         batch_seconds.append(dt)
         per_root_dt = dt / batch.size
         for b, r in enumerate(batch):
-            d = res.distances[b]
+            d = results[b].distances
             # deg sums directed half-edges over reached vertices -> /2 per spec
             reached_edges = max(1, int(csr.deg[d >= 0].sum()) // 2)
             teps[start + b] = reached_edges / per_root_dt
             if validate:
                 validate_bfs_tree(csr, int(r), d,
-                                  res.parents[b] if need_parents else None)
+                                  results[b].parents if need_parents else None)
                 validated += 1
     return Graph500Report(
         scale=scale, edge_factor=edge_factor, n=csr.n, m=csr.m_undirected,
-        semiring=semiring, backend=backend or "jnp", direction=direction,
+        semiring=semiring, backend=config.backend, direction=config.direction,
         batch_size=batch_size, roots=roots, teps=teps,
         batch_seconds=np.asarray(batch_seconds), validated=validated)
 
@@ -239,23 +242,26 @@ def run_graph500_sssp(*, scale: int = 10, edge_factor: int = 16,
                       weight_high: Optional[float] = None,
                       validate: bool = True, need_parents: bool = True,
                       csr: Optional[CSRGraph] = None,
-                      tiled: Optional[SlimSellTiled] = None
+                      tiled: Optional[SlimSellTiled] = None,
+                      config: Optional[EngineConfig] = None
                       ) -> Graph500SSSPReport:
     """Weighted Graph500 kernel: delta-stepping from sampled keys, validated.
 
-    ``batched=True`` runs the keys in batches through the multi-source
-    min-plus SpMM engine (``core.multi_sssp``) — one relaxation sweep
-    advances every root in the batch, the weighted twin of the BFS
-    harness's batching. Per-root distances, sweeps and buckets are
-    identical to the per-root engine (asserted by the validation).
+    Execution goes through one ``serving.GraphSession`` per run.
+    ``batched=True`` submits the keys in waves of ``batch_size`` — the
+    session packs them into min-plus SpMM batches, one relaxation sweep
+    advancing every root (the weighted twin of the BFS harness's
+    batching); ``batched=False`` serves each key as its own width-1 batch.
+    Per-root distances, sweeps and buckets are identical either way
+    (asserted by the validation).
 
     TEPS accounting mirrors the BFS harness: the edges charged to a root
     are the undirected edges with a reached endpoint; the time charged is
     its own wall time per-root, or its batch's wall time divided by the
     batch width when batched (the whole batch advances in the same sweeps).
     """
-    check_choice("mode", mode, MODES)
-    resolve_backend(backend)
+    if config is None:
+        config = EngineConfig(backend=backend or DEFAULT_BACKEND, mode=mode)
     if batch_size <= 0:
         raise ValueError(f"batch_size must be positive, got {batch_size}")
     if weight_low is None or weight_high is None:
@@ -275,6 +281,8 @@ def run_graph500_sssp(*, scale: int = 10, edge_factor: int = 16,
     roots = sample_roots(csr, n_roots)
     if roots.size == 0:
         raise ValueError(f"need at least one search key, got n_roots={n_roots}")
+    sess = GraphSession(tiled, config=config,
+                        max_batch=batch_size if batched else 1)
 
     teps = np.empty(roots.size, np.float64)
     sweeps = np.empty(roots.size, np.int32)
@@ -282,42 +290,38 @@ def run_graph500_sssp(*, scale: int = 10, edge_factor: int = 16,
     validated = 0
     delta_used = None
 
-    def account(i, r, dt, d, n_sweeps, n_buckets, parents):
+    def account(i, r, dt, res):
         """Per-root Graph500 accounting + validation, shared by both loops."""
-        nonlocal validated
+        nonlocal validated, delta_used
+        d = res.distances
+        delta_used = res.delta
         reached_edges = max(1, int(csr.deg[np.isfinite(d)].sum()) // 2)
         teps[i] = reached_edges / dt
-        sweeps[i] = n_sweeps
-        buckets[i] = n_buckets
+        sweeps[i] = res.sweeps
+        buckets[i] = res.buckets
         if validate:
-            validate_sssp_tree(csr, int(r), d, parents)
+            validate_sssp_tree(csr, int(r), d,
+                               res.parents if need_parents else None)
             validated += 1
 
     if batched:
         for start in range(0, roots.size, batch_size):
             batch = roots[start:start + batch_size]
             t0 = time.perf_counter()
-            res = multi_source_sssp(tiled, batch, delta=delta, mode=mode,
-                                    backend=backend, batch_size=batch.size,
-                                    need_parents=need_parents)
+            results = sess.sssp(batch, delta=delta,
+                                need_parents=need_parents, batch=True)
             dt = time.perf_counter() - t0
-            delta_used = res.delta
             for b, r in enumerate(batch):
-                account(start + b, r, dt / batch.size, res.distances[b],
-                        res.sweeps[b], res.buckets[b],
-                        res.parents[b] if need_parents else None)
+                account(start + b, r, dt / batch.size, results[b])
     else:
         for i, r in enumerate(roots):
             t0 = time.perf_counter()
-            res = sssp(tiled, int(r), delta=delta, mode=mode, backend=backend,
-                       need_parents=need_parents)
+            res = sess.sssp(int(r), delta=delta, need_parents=need_parents)
             dt = time.perf_counter() - t0
-            delta_used = res.delta
-            account(i, r, dt, res.distances, res.sweeps, res.buckets,
-                    res.parents if need_parents else None)
+            account(i, r, dt, res)
     return Graph500SSSPReport(
         scale=scale, edge_factor=edge_factor, n=csr.n, m=csr.m_undirected,
-        backend=backend or "jnp", mode=mode, delta=float(delta_used),
+        backend=config.backend, mode=config.mode, delta=float(delta_used),
         roots=roots, teps=teps, sweeps=sweeps, buckets=buckets,
         validated=validated, batched=batched,
         batch_size=batch_size if batched else 1)

@@ -1,0 +1,24 @@
+"""Query serving on resident SlimSell graphs: sessions, shape-bucketed
+batching, async dispatch.
+
+The package turns the batched sweep engine into a service: a
+``GraphSession`` owns one built layout plus one ``EngineConfig``, accepts a
+stream of heterogeneous BFS / SSSP / CC queries (``submit`` ->
+``QueryHandle``), buckets them by execution signature (``Batcher``), runs
+them as padded power-of-two device batches on persistent jitted handles
+with async harvest (``Dispatcher``), and reports throughput/latency/fill
+counters (``ServingMetrics`` via ``stats()``).
+
+    import repro
+    sess = repro.session(edges)
+    sess.bfs(root)                     # direct: one query, served batched
+    hs = [sess.submit("bfs", r) for r in roots]
+    sess.drain()                       # streamed: shape-bucketed batches
+    [h.result() for h in hs]
+"""
+from . import batcher, dispatch, metrics, session  # noqa: F401
+from .batcher import Batcher, BatchSlot, BucketKey, Query  # noqa: F401
+from .dispatch import (DeadlineExpired, Dispatcher,  # noqa: F401
+                       QueryResult)
+from .metrics import ServingMetrics  # noqa: F401
+from .session import GraphSession, QueryHandle, session  # noqa: F401

@@ -1,0 +1,143 @@
+"""Shape-bucketed batching: turn a stream of heterogeneous queries into a
+small set of dense, power-of-two-wide device batches.
+
+The whole serving thesis (SlimSell's §IV protocol generalized to a service)
+is that one semiring SpMM sweep advances *every* column of its batch, so
+the server's job is to keep batches wide and their shapes few:
+
+* **Bucketing** — queries only share a batch if they share an execution
+  signature: ``BucketKey = (algorithm, semiring, delta)``. The graph and
+  the engine config are session-wide, so they are not part of the key; the
+  SSSP bucket width ``delta`` is, because columns of one min-plus SpMM batch
+  share their ``ctx`` views.
+* **Power-of-two widths** — a bucket of k queries dispatches at width
+  ``min(next_pow2(k), max_batch)``, padded by repeating the last real root
+  (the engine's own padding convention — padded columns are discarded at
+  harvest). Restricting widths to powers of two keeps the set of traced
+  batch shapes logarithmic, so the jitted-handle cache converges after a
+  handful of misses instead of compiling per batch size.
+* **Deadlines** — ``drain`` separates queries whose deadline passed while
+  queued; they are returned to the session for typed-timeout completion
+  instead of wasting batch columns.
+
+``Batcher`` holds only pending (not-yet-dispatched) state; submitted
+duplicates of a root within the same pending bucket are rejected at
+``add`` time (the batch would silently serve one of them twice — a caller
+bug the padding convention would otherwise mask).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Query:
+    """One request in flight through the session: what to run, from where,
+    and by when. ``deadline_at`` is an absolute ``time.monotonic`` instant
+    (None = no deadline); ``submitted_at`` feeds the latency metrics."""
+    qid: int
+    algorithm: str                 # one of options.ALGORITHMS
+    semiring: str
+    root: Optional[int]            # None for whole-graph queries (cc)
+    delta: Optional[float]         # sssp bucket width (resolved at submit)
+    need_parents: bool
+    deadline_at: Optional[float]
+    submitted_at: float
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """The execution signature queries must share to ride one batch."""
+    algorithm: str
+    semiring: str
+    delta: Optional[float] = None
+
+
+@dataclasses.dataclass
+class BatchSlot:
+    """One dispatchable batch: a bucket's queries plus its padded width."""
+    key: BucketKey
+    queries: List[Query]
+    width: int                     # power-of-two columns dispatched
+
+    @property
+    def n_real(self) -> int:
+        return len(self.queries)
+
+    def roots(self) -> np.ndarray:
+        """int32[width] root per column, padded by repeating the last real
+        root (matching ``multi_bfs._iter_batches``); harvest reads only the
+        first ``n_real`` columns."""
+        real = np.asarray([q.root for q in self.queries], np.int32)
+        pad = self.width - real.size
+        if pad:
+            real = np.concatenate([real, np.repeat(real[-1:], pad)])
+        return real
+
+
+def next_pow2(k: int) -> int:
+    """Smallest power of two >= k (k >= 1)."""
+    if k < 1:
+        raise ValueError(f"need a positive count, got {k}")
+    return 1 << (k - 1).bit_length()
+
+
+class Batcher:
+    """Accumulates pending queries per bucket; ``drain`` cuts batch slots.
+
+    max_batch: the widest slot ever dispatched (buckets holding more
+    queries split into several slots). Does not need to be a power of two
+    itself, but slot widths below it always are.
+    """
+
+    def __init__(self, max_batch: int = 64):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = int(max_batch)
+        self._pending: Dict[BucketKey, List[Query]] = {}
+        self._roots: Dict[BucketKey, Set[int]] = {}
+
+    def depth(self) -> int:
+        """Queue depth: queries accepted but not yet drained into slots."""
+        return sum(len(qs) for qs in self._pending.values())
+
+    def add(self, query: Query) -> BucketKey:
+        key = BucketKey(query.algorithm, query.semiring, query.delta)
+        roots = self._roots.setdefault(key, set())
+        if query.root is not None:
+            if query.root in roots:
+                raise ValueError(
+                    f"root {query.root} is already pending in bucket "
+                    f"{(key.algorithm, key.semiring)}; duplicate roots in "
+                    "one batch would serve the same column twice")
+            roots.add(query.root)
+        self._pending.setdefault(key, []).append(query)
+        return key
+
+    def drain(self, now: float) -> Tuple[List[BatchSlot], List[Query]]:
+        """Cut every pending bucket into dispatchable slots.
+
+        Returns ``(slots, expired)``: expired queries (deadline passed while
+        queued) never occupy a column — the session completes them with a
+        typed timeout. Pending state is cleared.
+        """
+        slots: List[BatchSlot] = []
+        expired: List[Query] = []
+        for key, queries in self._pending.items():
+            live = []
+            for q in queries:
+                if q.deadline_at is not None and now >= q.deadline_at:
+                    expired.append(q)
+                else:
+                    live.append(q)
+            for i in range(0, len(live), self.max_batch):
+                group = live[i:i + self.max_batch]
+                width = (1 if key.algorithm == "cc"
+                         else min(next_pow2(len(group)), self.max_batch))
+                slots.append(BatchSlot(key=key, queries=group, width=width))
+        self._pending.clear()
+        self._roots.clear()
+        return slots, expired

@@ -1,0 +1,338 @@
+"""Batch execution: persistent jitted handles, async harvest, typed results.
+
+``Dispatcher`` turns the batcher's ``BatchSlot``s into engine work:
+
+* **Persistent handles** — each (algorithm, semiring, batch width) bucket
+  signature maps to one ``core.engine.FixpointHandle``: a re-entrant jitted
+  fixpoint step with state-buffer donation (off on CPU, where XLA ignores
+  it anyway). Handles are cached per signature; the hit/miss counters in
+  ``ServingMetrics`` make compile churn visible.
+* **Async dispatch** — JAX dispatch is asynchronous: ``handle.run`` returns
+  device buffers immediately while the sweeps execute. The dispatcher keeps
+  up to ``max_inflight`` launched batches un-harvested, so host-side request
+  handling (validation, bucketing, the next dispatch) overlaps device
+  compute; results are harvested one step late, when the *next* batch has
+  been launched (or at ``drain``).
+* **Typed results** — harvest converts device state into per-query
+  ``QueryResult``s: the query's column of the batch (bit-equal to a
+  dedicated per-call run — batching changes the schedule, never the
+  answer), parents on request, per-query sweep/bucket counts, and a
+  ``status`` from ``options.QUERY_STATUSES``. A query whose deadline passed
+  while queued is completed as ``status="timeout"`` with no values; one
+  whose deadline passed *after* dispatch degrades to ``status="timeout"``
+  with the (late) values attached — ``raise_for_status`` raises
+  ``DeadlineExpired`` either way, the data is there for callers who prefer
+  a late answer over none.
+
+The ``mode="hostloop"`` engine config falls back to synchronous front-door
+calls (the host-driven loop cannot be left in flight), as does boolean CC
+(its peeling loop is host-side control flow). Everything else runs on the
+handle path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import engine as eng
+from ..core.bfs import dp_transform
+from ..core.cc import CC_SPEC, cc
+from ..core.formats import layout_signature
+from ..core.multi_bfs import multi_bfs_spec, multi_source_bfs
+from ..core.multi_sssp import MULTI_SSSP_SPEC, multi_source_sssp
+from ..core.options import EngineConfig, QUERY_STATUSES, check_choice
+from ..core.sssp import sssp_parents
+from .batcher import BatchSlot, Query
+from .metrics import ServingMetrics
+
+
+class DeadlineExpired(RuntimeError):
+    """Raised by ``QueryResult.raise_for_status`` for timed-out queries.
+
+    Carries the result: ``exc.result.values`` is None when the query
+    expired while queued, or the late (complete but past-deadline) data
+    when it expired in flight.
+    """
+
+    def __init__(self, result: "QueryResult"):
+        super().__init__(
+            f"query {result.qid} ({result.algorithm}) missed its deadline")
+        self.result = result
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """What one query gets back from the serving layer."""
+    qid: int
+    algorithm: str
+    semiring: str
+    status: str                       # one of options.QUERY_STATUSES
+    values: Optional[np.ndarray]      # distances (bfs/sssp) or labels (cc)
+    parents: Optional[np.ndarray] = None
+    sweeps: int = 0                   # engine sweeps its batch executed
+    buckets: Optional[int] = None     # sssp delta buckets (its column)
+    delta: Optional[float] = None     # sssp bucket width actually used
+    n_components: Optional[int] = None  # cc
+    latency_s: float = 0.0            # submit -> harvest wall time
+
+    def __post_init__(self):
+        check_choice("status", self.status, QUERY_STATUSES)
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    def raise_for_status(self) -> "QueryResult":
+        if self.status == "timeout":
+            raise DeadlineExpired(self)
+        return self
+
+    @property
+    def distances(self) -> np.ndarray:
+        """BFS/SSSP distance vector; raises on timeout or a cc query."""
+        if self.algorithm == "cc":
+            raise AttributeError("cc results carry labels, not distances")
+        self.raise_for_status()
+        return self.values
+
+    @property
+    def labels(self) -> np.ndarray:
+        """CC component labels; raises on timeout or a non-cc query."""
+        if self.algorithm != "cc":
+            raise AttributeError(f"{self.algorithm} results carry distances")
+        self.raise_for_status()
+        return self.values
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One launched-but-unharvested fused batch (device buffers inside)."""
+    slot: BatchSlot
+    state: dict                       # device arrays; harvest blocks on them
+    iters: object                     # device scalar
+    ctx: Optional[dict]
+
+
+class Dispatcher:
+    """Executes batch slots on one resident layout under one config."""
+
+    def __init__(self, tiled, config: EngineConfig, metrics: ServingMetrics,
+                 *, slimwork: bool = True, max_inflight: int = 1):
+        self.tiled = tiled
+        self.config = config
+        self.metrics = metrics
+        self.slimwork = bool(slimwork)
+        self.max_inflight = max(0, int(max_inflight))
+        self.results: Dict[int, QueryResult] = {}
+        self._inflight: Deque[_Inflight] = collections.deque()
+        self._handles: Dict[tuple, eng.FixpointHandle] = {}
+        self._layout_sig = layout_signature(tiled)
+
+    # ------------------------------------------------------------- handles
+
+    def _handle(self, spec, *, max_iters: int, direction: str,
+                batch_width: Optional[int]) -> eng.FixpointHandle:
+        """Handle for a bucket signature, with per-session hit/miss counts.
+
+        ``eng.fixpoint_handle`` itself is a process-wide cache keyed on the
+        same statics, so a "miss" here at most re-traces when the layout
+        shapes are new to the process too — but the per-session counters are
+        what the fill/churn diagnostics need.
+        """
+        key = (spec.name, max_iters, direction, batch_width, self.slimwork,
+               self.config.signature(), self._layout_sig)
+        handle = self._handles.get(key)
+        if handle is None:
+            self.metrics.compile_cache_misses += 1
+            handle = eng.fixpoint_handle(
+                spec, slimwork=self.slimwork, max_iters=max_iters,
+                backend=self.config.backend, direction=direction,
+                batch_width=batch_width)
+            self._handles[key] = handle
+        else:
+            self.metrics.compile_cache_hits += 1
+        return handle
+
+    # ------------------------------------------------------------ dispatch
+
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    def dispatch(self, slot: BatchSlot) -> None:
+        """Launch one slot; harvest the oldest batch beyond ``max_inflight``.
+
+        Fused BFS/SSSP/sel-max-CC go through the jitted handles and stay in
+        flight; hostloop mode and boolean CC execute synchronously through
+        the core front doors (their loops live on host) and complete
+        immediately.
+        """
+        cfg, alg = self.config, slot.key.algorithm
+        n = self.tiled.n
+        self.metrics.batches_dispatched += 1
+        self.metrics.columns_total += slot.width
+        self.metrics.columns_real += (1 if alg == "cc" else slot.n_real)
+
+        if cfg.mode == "hostloop" or (alg == "cc"
+                                      and slot.key.semiring == "boolean"):
+            self._dispatch_sync(slot)
+            return
+
+        with cfg.applied():
+            if alg == "cc":
+                handle = self._handle(CC_SPEC, max_iters=n + 1,
+                                      direction="push", batch_width=None)
+                ctx = handle.setup(self.tiled)
+                state = handle.init_state(self.tiled,
+                                          jnp.asarray(0, jnp.int32), ctx)
+            elif alg == "bfs":
+                spec = multi_bfs_spec(slot.key.semiring)
+                handle = self._handle(spec, max_iters=n,
+                                      direction=cfg.direction,
+                                      batch_width=slot.width)
+                ctx = handle.setup(self.tiled)
+                state = handle.init_state(self.tiled,
+                                          jnp.asarray(slot.roots()), ctx)
+            else:  # sssp
+                handle = self._handle(MULTI_SSSP_SPEC, max_iters=4 * n + 16,
+                                      direction="push",
+                                      batch_width=slot.width)
+                ctx = handle.setup(
+                    self.tiled,
+                    (jnp.asarray(slot.key.delta, jnp.float32),))
+                state = handle.init_state(self.tiled,
+                                          jnp.asarray(slot.roots()), ctx)
+            state, iters = handle.run(self.tiled, ctx, state)
+        self._inflight.append(_Inflight(slot=slot, state=state,
+                                        iters=iters, ctx=ctx))
+        while len(self._inflight) > self.max_inflight:
+            self._harvest_one()
+
+    def drain(self) -> None:
+        """Harvest every batch still in flight (blocks on the device)."""
+        while self._inflight:
+            self._harvest_one()
+
+    # ------------------------------------------------------------- harvest
+
+    def _finish(self, query: Query, **fields) -> None:
+        now = time.monotonic()
+        status = "ok"
+        if query.deadline_at is not None and now >= query.deadline_at:
+            status = "timeout"   # late: degraded status, values attached
+            self.metrics.timeouts += 1
+        else:
+            self.metrics.completed += 1
+        latency = now - query.submitted_at
+        self.metrics.record_latency(latency)
+        self.results[query.qid] = QueryResult(
+            qid=query.qid, algorithm=query.algorithm,
+            semiring=query.semiring, status=status,
+            latency_s=latency, delta=query.delta, **fields)
+
+    def expire(self, query: Query) -> None:
+        """Complete a queued-expired query with a typed timeout (no values)."""
+        now = time.monotonic()
+        self.metrics.timeouts += 1
+        self.metrics.record_latency(now - query.submitted_at)
+        self.results[query.qid] = QueryResult(
+            qid=query.qid, algorithm=query.algorithm,
+            semiring=query.semiring, status="timeout", values=None,
+            delta=query.delta, latency_s=now - query.submitted_at)
+
+    def _harvest_one(self) -> None:
+        fl = self._inflight.popleft()
+        slot, state = fl.slot, fl.state
+        iters = int(fl.iters)            # blocks until the batch is done
+        self.metrics.sweeps_total += iters
+        alg, sem = slot.key.algorithm, slot.key.semiring
+
+        if alg == "cc":
+            labels = (np.asarray(state["x"]).astype(np.int64) - 1
+                      ).astype(np.int32)
+            n_comp = len(np.unique(labels))
+            for q in slot.queries:
+                self._finish(q, values=labels, sweeps=iters,
+                             n_components=n_comp)
+            return
+
+        need_dp = any(q.need_parents for q in slot.queries)
+        if alg == "bfs":
+            d = np.asarray(state["d"]).T          # [width, n]
+            p_all = None
+            if need_dp and sem == "selmax":
+                p_all = np.asarray(state["p"].astype(jnp.int32) - 1).T
+            elif need_dp:
+                # one vmapped DP sweep serves every column (mirrors
+                # multi_source_bfs — per-column eager sweeps would dominate
+                # the harvest)
+                p_all = np.asarray(jax.vmap(
+                    dp_transform, in_axes=(None, 1, 0))(
+                        self.tiled, state["d"],
+                        jnp.asarray(slot.roots())))
+            for col, q in enumerate(slot.queries):
+                parents = None
+                if q.need_parents:
+                    parents = p_all[col].copy()
+                    parents[q.root] = q.root
+                self._finish(q, values=d[col], parents=parents, sweeps=iters)
+            return
+
+        # sssp: per-column sweep/bucket counters match per-root delta-stepping
+        d = np.asarray(state["dist"]).T
+        col_sweeps = np.asarray(state["sweeps"])
+        col_buckets = np.asarray(state["buckets"])
+        p_all = None
+        if need_dp:
+            p_all = np.asarray(jax.vmap(
+                sssp_parents, in_axes=(None, 1, 0))(
+                    self.tiled, state["dist"], jnp.asarray(slot.roots())))
+        for col, q in enumerate(slot.queries):
+            parents = p_all[col] if q.need_parents else None
+            self._finish(q, values=d[col], parents=parents,
+                         sweeps=int(col_sweeps[col]),
+                         buckets=int(col_buckets[col]))
+
+    # ------------------------------------------------- synchronous fallback
+
+    def _dispatch_sync(self, slot: BatchSlot) -> None:
+        """Hostloop mode / boolean CC: run through the core front doors
+        (their loops are host control flow) and complete immediately."""
+        cfg, alg, sem = self.config, slot.key.algorithm, slot.key.semiring
+        if alg == "cc":
+            res = cc(self.tiled, semiring=sem, slimwork=self.slimwork,
+                     config=cfg)
+            self.metrics.sweeps_total += int(res.iterations)
+            for q in slot.queries:
+                self._finish(q, values=res.labels, sweeps=res.iterations,
+                             n_components=res.n_components)
+            return
+        roots = [q.root for q in slot.queries]
+        need_parents = any(q.need_parents for q in slot.queries)
+        if alg == "bfs":
+            res = multi_source_bfs(self.tiled, roots, sem,
+                                   need_parents=need_parents,
+                                   slimwork=self.slimwork,
+                                   batch_size=slot.width, config=cfg)
+            self.metrics.sweeps_total += int(np.sum(res.iterations))
+            for i, q in enumerate(slot.queries):
+                self._finish(
+                    q, values=res.distances[i],
+                    parents=res.parents[i] if q.need_parents else None,
+                    sweeps=int(np.max(res.iterations)))
+            return
+        res = multi_source_sssp(self.tiled, roots, delta=slot.key.delta,
+                                need_parents=need_parents,
+                                slimwork=self.slimwork,
+                                batch_size=slot.width, config=cfg)
+        self.metrics.sweeps_total += int(np.sum(res.iterations))
+        for i, q in enumerate(slot.queries):
+            self._finish(q, values=res.distances[i],
+                         parents=res.parents[i] if q.need_parents else None,
+                         sweeps=int(res.sweeps[i]),
+                         buckets=int(res.buckets[i]))

@@ -1,0 +1,95 @@
+"""Serving-layer observability: one mutable counter block per session.
+
+Everything the ROADMAP's "millions of users" story needs to be *operable*
+lives here: how full the device batches run (``batch_fill_ratio`` — the
+number the shape-bucketed batcher exists to maximize), whether the jit
+compile cache is actually being reused (``compile_cache_hits`` vs
+``_misses`` — a miss per batch means the bucket widths are churning),
+queue pressure (``queue_depth``), end-to-end latency quantiles, and the
+amortization headline: engine sweeps per served query.
+
+``ServingMetrics`` is deliberately dumb — plain ints and a latency list,
+mutated inline by ``GraphSession`` / ``Dispatcher`` on the serving path and
+summarized on demand by ``snapshot()`` (the ``stats()`` payload). No locks:
+a session is a single-threaded object (the async overlap is the *device*
+queue, not host threads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile over an already-sorted list (no numpy dep in
+    the hot submit path; snapshot() is the only caller)."""
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1, max(0, int(round(q * (len(sorted_vals) - 1)))))
+    return sorted_vals[idx]
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Counters and timers for one ``GraphSession``.
+
+    Counter glossary (see docs/SERVING.md for the operator's view):
+
+    * ``submitted`` / ``completed`` / ``timeouts`` — query lifecycle; every
+      submitted query ends in exactly one of completed or timeouts.
+    * ``batches_dispatched`` — device batches launched (one jitted fixpoint
+      call each).
+    * ``columns_total`` / ``columns_real`` — batch-slot columns launched vs
+      columns carrying a real query (the rest is power-of-two padding);
+      their ratio is the batch fill ratio.
+    * ``compile_cache_hits`` / ``compile_cache_misses`` — ``FixpointHandle``
+      lookups that found / created a handle for the bucket signature. A
+      steady-state stream should be all hits.
+    * ``sweeps_total`` — engine fixpoint iterations executed across all
+      batches (one sweep advances every column of its batch, which is the
+      whole amortization argument).
+    * ``latencies_s`` — per-query submit-to-harvest wall times.
+    """
+    submitted: int = 0
+    completed: int = 0
+    timeouts: int = 0
+    batches_dispatched: int = 0
+    columns_total: int = 0
+    columns_real: int = 0
+    compile_cache_hits: int = 0
+    compile_cache_misses: int = 0
+    sweeps_total: int = 0
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+    def record_latency(self, seconds: float) -> None:
+        self.latencies_s.append(float(seconds))
+
+    def snapshot(self, *, queue_depth: int = 0, inflight: int = 0) -> dict:
+        """One immutable stats() payload: counters + derived ratios/quantiles.
+
+        ``queue_depth`` and ``inflight`` are gauges owned by the session
+        (pending queries not yet batched; batches launched but not yet
+        harvested) and are passed in at snapshot time.
+        """
+        lat = sorted(self.latencies_s)
+        served = max(1, self.completed)
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "timeouts": self.timeouts,
+            "batches_dispatched": self.batches_dispatched,
+            "queue_depth": int(queue_depth),
+            "inflight": int(inflight),
+            "columns_total": self.columns_total,
+            "columns_real": self.columns_real,
+            "batch_fill_ratio": (self.columns_real / self.columns_total
+                                 if self.columns_total else float("nan")),
+            "compile_cache_hits": self.compile_cache_hits,
+            "compile_cache_misses": self.compile_cache_misses,
+            "sweeps_total": self.sweeps_total,
+            "sweeps_per_query": self.sweeps_total / served,
+            "latency_mean_ms": (1e3 * sum(lat) / len(lat)) if lat
+                               else float("nan"),
+            "latency_p50_ms": 1e3 * _percentile(lat, 0.50),
+            "latency_p99_ms": 1e3 * _percentile(lat, 0.99),
+        }

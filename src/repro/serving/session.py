@@ -1,0 +1,261 @@
+"""``GraphSession``: the documented front door for running queries against
+one resident SlimSell graph.
+
+The session owns what the per-algorithm functions used to make every caller
+re-thread: the built layout (one SlimSell instance shared by BFS, SSSP and
+CC), the validated ``EngineConfig``, the shape-bucketed ``Batcher``, the
+handle-caching async ``Dispatcher`` and the ``ServingMetrics`` block.
+
+Two usage styles share one dispatch path:
+
+* **Direct** — ``sess.bfs(root)`` / ``sess.sssp(root)`` / ``sess.cc()``
+  submit one query and immediately drain: per-call semantics, session
+  residency (no rebuild, warm jit caches) — this is what the Graph500
+  harness runs on.
+* **Streamed** — ``h = sess.submit("bfs", root, deadline=0.05)`` enqueues
+  and returns a ``QueryHandle``; queries accumulate in shape buckets until
+  ``flush()`` (dispatch pending batches, harvesting one step late) or
+  ``drain()`` (dispatch + harvest everything). ``h.result()`` drains as
+  needed and never hangs: every submitted query ends as a ``QueryResult``,
+  ``status="timeout"`` if its deadline passed first.
+
+Lifecycle: build (graph coerced to a device layout) -> submit/flush cycles
+-> ``stats()`` whenever — it is a pure snapshot -> ``close()`` (drain and
+drop the results map). The session is also a context manager.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core.formats import CSRGraph, SlimSellTiled, build_csr, build_slimsell
+from ..core.options import (ALGORITHMS, BFS_SEMIRINGS, CC_SEMIRINGS,
+                            EngineConfig, check_choice, resolve_config)
+from ..core.sssp import _resolve_delta, _require_weighted
+from .batcher import Batcher, Query
+from .dispatch import Dispatcher, QueryResult
+from .metrics import ServingMetrics
+
+GraphLike = Union[np.ndarray, CSRGraph, SlimSellTiled]
+
+
+class QueryHandle:
+    """A submitted query's future. ``result()`` flushes/drains the session
+    as needed and returns the ``QueryResult`` — it never hangs (expired
+    queries come back as typed timeouts)."""
+
+    def __init__(self, session: "GraphSession", query: Query):
+        self._session = session
+        self.qid = query.qid
+        self.query = query
+
+    @property
+    def done(self) -> bool:
+        return self.qid in self._session._results
+
+    def result(self) -> QueryResult:
+        return self._session.result(self.qid)
+
+    def __repr__(self):
+        state = "done" if self.done else "pending"
+        return (f"QueryHandle(qid={self.qid}, "
+                f"algorithm={self.query.algorithm!r}, {state})")
+
+
+class GraphSession:
+    """One resident graph + one engine config serving many queries.
+
+    graph: an ``[m, 2]`` edge array (int), a built ``CSRGraph``, or an
+    already-tiled ``SlimSellTiled`` (host layouts are moved to device).
+    Edge arrays build an undirected CSR with ``n = max vertex id + 1``;
+    pass ``weights`` alongside for SSSP-capable sessions.
+    config: one ``EngineConfig``; the deprecated per-call ``backend`` /
+    ``direction`` / ``mode`` kwargs are accepted through the same shim as
+    the core front doors.
+    max_batch: widest batch slot the bucketer dispatches (power-of-two
+    widths up to this).
+    max_inflight: launched-but-unharvested batches kept in flight (0 =
+    fully synchronous harvest).
+    """
+
+    def __init__(self, graph: GraphLike, *, config: Optional[EngineConfig] = None,
+                 weights: Optional[np.ndarray] = None,
+                 max_batch: int = 64, max_inflight: int = 1,
+                 slimwork: bool = True, C: int = 8, L: int = 128,
+                 backend: Optional[str] = None,
+                 direction: Optional[str] = None,
+                 mode: Optional[str] = None):
+        self.config = resolve_config("GraphSession", config, backend=backend,
+                                     direction=direction, mode=mode)
+        self.tiled = _coerce_graph(graph, weights=weights, C=C, L=L)
+        self.metrics = ServingMetrics()
+        self.batcher = Batcher(max_batch=max_batch)
+        self.dispatcher = Dispatcher(self.tiled, self.config, self.metrics,
+                                     slimwork=slimwork,
+                                     max_inflight=max_inflight)
+        self._next_qid = 0
+        self._results: Dict[int, QueryResult] = self.dispatcher.results
+
+    # -------------------------------------------------------------- submit
+
+    def submit(self, algorithm: str, root: Optional[int] = None, *,
+               semiring: Optional[str] = None, delta: Optional[float] = None,
+               need_parents: bool = False,
+               deadline: Optional[float] = None) -> QueryHandle:
+        """Enqueue one query; returns its handle. Validation is all here, at
+        the boundary: unknown algorithm/semiring, out-of-range or missing
+        roots, duplicate roots within the pending bucket, weights missing
+        for sssp — nothing invalid reaches a batch.
+
+        deadline: seconds from now; a query still queued (or still in
+        flight) when it lapses completes as ``status="timeout"``.
+        """
+        check_choice("algorithm", algorithm, ALGORITHMS)
+        n = self.tiled.n
+        if algorithm == "cc":
+            semiring = check_choice("cc semiring", semiring or "selmax",
+                                    CC_SEMIRINGS)
+            if root is not None:
+                raise ValueError("cc is a whole-graph query; root must be None")
+        else:
+            if root is None:
+                raise ValueError(f"{algorithm} needs a root vertex")
+            root = int(root)
+            if not 0 <= root < n:
+                raise ValueError(f"root {root} out of range for n={n}")
+        if algorithm == "bfs":
+            semiring = check_choice("semiring", semiring or "tropical",
+                                    BFS_SEMIRINGS)
+        if algorithm == "sssp":
+            if semiring not in (None, "minplus"):
+                raise ValueError(f"sssp runs on the minplus semiring only, "
+                                 f"got {semiring!r}")
+            semiring = "minplus"
+            _require_weighted(self.tiled)
+            delta = _resolve_delta(self.tiled, delta)
+        elif delta is not None:
+            raise ValueError(f"delta is an sssp knob; {algorithm} ignores it")
+        now = time.monotonic()
+        query = Query(
+            qid=self._next_qid, algorithm=algorithm, semiring=semiring,
+            root=root, delta=delta, need_parents=bool(need_parents),
+            deadline_at=None if deadline is None else now + float(deadline),
+            submitted_at=now)
+        self.batcher.add(query)
+        self._next_qid += 1
+        self.metrics.submitted += 1
+        return QueryHandle(self, query)
+
+    # ------------------------------------------------------------ dispatch
+
+    def flush(self) -> None:
+        """Cut pending queries into batch slots and launch them. Queued
+        queries past deadline complete as timeouts; launched batches beyond
+        ``max_inflight`` are harvested (one step late)."""
+        slots, expired = self.batcher.drain(time.monotonic())
+        for q in expired:
+            self.dispatcher.expire(q)
+        for slot in slots:
+            self.dispatcher.dispatch(slot)
+
+    def drain(self) -> None:
+        """flush() + harvest every batch still in flight."""
+        self.flush()
+        self.dispatcher.drain()
+
+    def result(self, qid: int) -> QueryResult:
+        """The result for a submitted query id, draining if necessary."""
+        if qid not in self._results:
+            self.drain()
+        try:
+            return self._results[qid]
+        except KeyError:
+            raise KeyError(f"unknown query id {qid}") from None
+
+    # ----------------------------------------------------------- lifecycle
+
+    def stats(self) -> dict:
+        """Counters + gauges snapshot (see ``ServingMetrics.snapshot``)."""
+        return self.metrics.snapshot(queue_depth=self.batcher.depth(),
+                                     inflight=self.dispatcher.inflight())
+
+    def close(self) -> None:
+        """Harvest everything in flight and drop the results map."""
+        self.drain()
+        self._results.clear()
+
+    def __enter__(self) -> "GraphSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- facades
+
+    def bfs(self, root: int, semiring: str = "tropical", *,
+            need_parents: bool = False) -> QueryResult:
+        """One BFS, served through the batch path (width-1 slot)."""
+        h = self.submit("bfs", root, semiring=semiring,
+                        need_parents=need_parents)
+        return h.result()
+
+    def bfs_many(self, roots: Sequence[int], semiring: str = "tropical", *,
+                 need_parents: bool = False) -> list:
+        """BFS from every root as one submit wave — the bucketer packs them
+        into power-of-two batches and one SpMM sweep advances them all."""
+        handles = [self.submit("bfs", int(r), semiring=semiring,
+                               need_parents=need_parents) for r in roots]
+        self.drain()
+        return [h.result() for h in handles]
+
+    def sssp(self, roots: Union[int, Sequence[int]], *,
+             delta: Optional[float] = None, need_parents: bool = False,
+             batch: bool = False):
+        """Delta-stepping SSSP. A scalar root returns one ``QueryResult``;
+        a root sequence (or ``batch=True``) returns a list, batched through
+        the min-plus SpMM path."""
+        if np.isscalar(roots) and not batch:
+            return self.submit("sssp", int(roots), delta=delta,
+                               need_parents=need_parents).result()
+        roots_seq = [int(roots)] if np.isscalar(roots) else [int(r) for r in roots]
+        handles = [self.submit("sssp", r, delta=delta,
+                               need_parents=need_parents) for r in roots_seq]
+        self.drain()
+        return [h.result() for h in handles]
+
+    def cc(self, semiring: str = "selmax") -> QueryResult:
+        """Connected components over the resident layout."""
+        return self.submit("cc", semiring=semiring).result()
+
+
+def session(graph: GraphLike, **kwargs) -> GraphSession:
+    """Build a ``GraphSession`` — the package-level entry point:
+
+    >>> import numpy as np
+    >>> from repro.serving import session
+    >>> sess = session(np.array([[0, 1], [1, 2], [2, 3]]))
+    >>> sess.bfs(0).distances.tolist()
+    [0, 1, 2, 3]
+    """
+    return GraphSession(graph, **kwargs)
+
+
+def _coerce_graph(graph: GraphLike, *, weights, C: int, L: int):
+    """Edge list / CSR / tiled layout -> device-resident SlimSellTiled."""
+    if isinstance(graph, SlimSellTiled):
+        if weights is not None:
+            raise ValueError("weights must be baked into the tiled layout")
+        return graph.to_jax()
+    if isinstance(graph, CSRGraph):
+        if weights is not None:
+            raise ValueError("weights must be baked into the CSRGraph")
+        csr = graph
+    else:
+        edges = np.asarray(graph)
+        if edges.ndim != 2 or edges.shape[1] != 2:
+            raise ValueError(f"edge array must be [m, 2], got {edges.shape}")
+        n = int(edges.max()) + 1 if edges.size else 1
+        csr = build_csr(edges.astype(np.int64), n, weights=weights)
+    return build_slimsell(csr, C=C, L=L, sigma=csr.n).to_jax()

@@ -4,8 +4,9 @@ Offline by design: relative links must resolve to an existing file (plus an
 existing anchor-ish heading when one is given); absolute http(s) links are
 only format-checked, never fetched — CI must not flake on the network.
 
-``--api`` additionally imports ``repro.core`` and fails on any public API
-symbol (public class/callable defined in a ``core/__init__.py`` submodule)
+``--api`` additionally imports ``repro.core`` + ``repro.serving`` and fails
+on any public API symbol (public class/callable defined in a submodule their
+``__init__.py`` imports)
 that appears in NO checked docs page — the guard that keeps the docs suite
 from silently drifting behind the engine surface again (the PR 3 docs
 predated the engine/distributed layers and described half the API).
@@ -54,9 +55,12 @@ def check_file(md: Path, root: Path) -> list[str]:
     return errors
 
 
+API_PACKAGES = ("repro.core", "repro.serving")
+
+
 def api_symbols(root: Path) -> dict[str, str]:
     """Public API: name -> defining module, for every class/callable defined
-    in a submodule that ``repro.core/__init__.py`` imports.
+    in a submodule that an ``API_PACKAGES`` ``__init__.py`` imports.
 
     Module re-exports (``from .engine import FixpointSpec`` in bfs.py etc.)
     are attributed to their defining module only; private names and
@@ -65,18 +69,19 @@ def api_symbols(root: Path) -> dict[str, str]:
     import importlib
     import inspect
     sys.path.insert(0, str(root / "src"))
-    core = importlib.import_module("repro.core")
     out: dict[str, str] = {}
-    for mod in vars(core).values():
-        if not inspect.ismodule(mod) \
-                or not mod.__name__.startswith("repro.core."):
-            continue
-        for name, obj in vars(mod).items():
-            if name.startswith("_") or not callable(obj):
+    for pkg_name in API_PACKAGES:
+        pkg = importlib.import_module(pkg_name)
+        for mod in vars(pkg).values():
+            if not inspect.ismodule(mod) \
+                    or not mod.__name__.startswith(pkg_name + "."):
                 continue
-            if getattr(obj, "__module__", None) != mod.__name__:
-                continue  # re-export or third-party
-            out[name] = mod.__name__
+            for name, obj in vars(mod).items():
+                if name.startswith("_") or not callable(obj):
+                    continue
+                if getattr(obj, "__module__", None) != mod.__name__:
+                    continue  # re-export or third-party
+                out[name] = mod.__name__
     return out
 
 
@@ -96,8 +101,8 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("files", nargs="*", help="markdown files to check "
                     "(default: *.md + docs/*.md)")
     ap.add_argument("--api", action="store_true",
-                    help="also fail on public repro.core API symbols "
-                         "absent from every checked page")
+                    help="also fail on public repro.core/repro.serving API "
+                         "symbols absent from every checked page")
     args = ap.parse_args(argv)
     root = Path(__file__).resolve().parent.parent
     files = [Path(a) for a in args.files] or \
