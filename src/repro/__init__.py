@@ -18,12 +18,13 @@ from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .core.options import EngineConfig  # noqa: F401
-    from .serving import GraphSession, session  # noqa: F401
+    from .serving import GraphSession, Router, session  # noqa: F401
 
 _LAZY_MODULES = ("core", "serving", "graphs", "graph500", "analysis")
 _LAZY_NAMES = {
     "session": ("repro.serving", "session"),
     "GraphSession": ("repro.serving", "GraphSession"),
+    "Router": ("repro.serving", "Router"),
     "EngineConfig": ("repro.core.options", "EngineConfig"),
 }
 

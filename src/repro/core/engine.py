@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from functools import lru_cache, partial
 from typing import Any, Callable, Optional, Sequence
 
@@ -355,6 +356,16 @@ class FixpointHandle:
         return self._jitted(tiled, ctx, state)
 
 
+# fixpoint_handle's concurrent-first-call guard: CPython's lru_cache is
+# internally consistent but does NOT deduplicate concurrent misses — two
+# serving threads asking for the same brand-new signature would both build
+# (and trace) a handle, and one trace would be thrown away. One lock per
+# signature serializes construction exactly once per key; hits never touch
+# the guard map after the first call.
+_HANDLE_ONCE_GUARD = threading.Lock()
+_HANDLE_BUILD_LOCKS: dict = {}
+
+
 @lru_cache(maxsize=None)
 def _fixpoint_handle_cached(spec: FixpointSpec, slimwork: bool,
                             max_iters: int, backend: str, direction: str,
@@ -388,6 +399,10 @@ def fixpoint_handle(spec: FixpointSpec, *, slimwork: bool = True,
     signature; serving buckets pad to power-of-two widths so the set of
     live signatures stays small). ``donate=None`` enables buffer donation
     exactly where XLA honors it (not on CPU).
+
+    Thread-safe: a per-signature once-guard serializes the first call for
+    each new signature, so concurrent serving threads missing on the same
+    key get one handle (one trace), never two.
     """
     check_choice("direction", direction, DIRECTIONS)
     check_choice("backend", backend, BACKENDS)
@@ -395,9 +410,12 @@ def fixpoint_handle(spec: FixpointSpec, *, slimwork: bool = True,
         raise ValueError(f"{spec.name}: batched specs need batch_width")
     if donate is None:
         donate = jax.default_backend() != "cpu"
-    return _fixpoint_handle_cached(
-        spec, bool(slimwork), int(max_iters), backend, direction,
-        None if batch_width is None else int(batch_width), bool(donate))
+    key = (spec, bool(slimwork), int(max_iters), backend, direction,
+           None if batch_width is None else int(batch_width), bool(donate))
+    with _HANDLE_ONCE_GUARD:
+        build_lock = _HANDLE_BUILD_LOCKS.setdefault(key, threading.Lock())
+    with build_lock:
+        return _fixpoint_handle_cached(*key)
 
 
 # ------------------------------------------------------------------ hostloop

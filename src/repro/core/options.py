@@ -50,8 +50,9 @@ DIRECTIONS = ("push", "pull", "auto")
 # names one of these (multi-source requests are streams of them)
 ALGORITHMS = ("bfs", "sssp", "cc")
 
-# query lifecycle states reported by serving.QueryResult.status
-QUERY_STATUSES = ("ok", "timeout")
+# query lifecycle states reported by serving.QueryResult.status: "shed"
+# marks a query dropped at submit by the bounded-queue backpressure policy
+QUERY_STATUSES = ("ok", "timeout", "shed")
 
 # registered semiring names; core.semiring builds the object registry and
 # asserts it matches this tuple at import time (the law verifier's

@@ -24,13 +24,34 @@ the server's job is to keep batches wide and their shapes few:
 duplicates of a root within the same pending bucket are rejected at
 ``add`` time (the batch would silently serve one of them twice — a caller
 bug the padding convention would otherwise mask).
+
+Since the background-flush-thread PR the batcher is a real submission
+queue: every mutation (``add`` / ``drain`` / ``depth``) runs under an
+internal lock so producer threads and the flush thread interleave safely,
+and the queue is **bounded** — ``max_pending`` caps accepted-but-undrained
+queries, with ``add`` raising the typed ``QueueFull`` at the cap. The
+session translates that backpressure into its ``on_full`` policy (raise
+through to the caller, or complete the query as a ``status="shed"``
+result).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
+
+
+class QueueFull(RuntimeError):
+    """Typed backpressure: the bounded submission queue is at capacity.
+
+    Raised by ``Batcher.add`` (and surfaced by ``GraphSession.submit``
+    under ``on_full="raise"``) when ``max_pending`` queries are already
+    queued. Catch it to retry after a flush, or configure the session with
+    ``on_full="shed"`` to turn the overflow into typed shed results
+    instead of exceptions.
+    """
 
 
 @dataclasses.dataclass
@@ -91,30 +112,50 @@ class Batcher:
     max_batch: the widest slot ever dispatched (buckets holding more
     queries split into several slots). Does not need to be a power of two
     itself, but slot widths below it always are.
+    max_pending: bound on accepted-but-undrained queries (None =
+    unbounded); ``add`` raises ``QueueFull`` at the cap.
     """
 
-    def __init__(self, max_batch: int = 64):
+    def __init__(self, max_batch: int = 64,
+                 max_pending: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1 or None, "
+                             f"got {max_pending}")
         self.max_batch = int(max_batch)
+        self.max_pending = None if max_pending is None else int(max_pending)
+        self._lock = threading.Lock()
+        self._depth = 0
         self._pending: Dict[BucketKey, List[Query]] = {}
         self._roots: Dict[BucketKey, Set[int]] = {}
 
     def depth(self) -> int:
         """Queue depth: queries accepted but not yet drained into slots."""
-        return sum(len(qs) for qs in self._pending.values())
+        with self._lock:
+            return self._depth
 
     def add(self, query: Query) -> BucketKey:
+        """Queue one query (atomic: capacity check, duplicate-root check
+        and enqueue happen under one lock hold, so concurrent producers
+        cannot both land the same root or overshoot ``max_pending``)."""
         key = BucketKey(query.algorithm, query.semiring, query.delta)
-        roots = self._roots.setdefault(key, set())
-        if query.root is not None:
-            if query.root in roots:
-                raise ValueError(
-                    f"root {query.root} is already pending in bucket "
-                    f"{(key.algorithm, key.semiring)}; duplicate roots in "
-                    "one batch would serve the same column twice")
-            roots.add(query.root)
-        self._pending.setdefault(key, []).append(query)
+        with self._lock:
+            if self.max_pending is not None and self._depth >= self.max_pending:
+                raise QueueFull(
+                    f"submission queue full ({self._depth} pending >= "
+                    f"max_pending={self.max_pending}); flush, or use the "
+                    f"session's on_full='shed' policy")
+            roots = self._roots.setdefault(key, set())
+            if query.root is not None:
+                if query.root in roots:
+                    raise ValueError(
+                        f"root {query.root} is already pending in bucket "
+                        f"{(key.algorithm, key.semiring)}; duplicate roots in "
+                        "one batch would serve the same column twice")
+                roots.add(query.root)
+            self._pending.setdefault(key, []).append(query)
+            self._depth += 1
         return key
 
     def drain(self, now: float) -> Tuple[List[BatchSlot], List[Query]]:
@@ -122,11 +163,18 @@ class Batcher:
 
         Returns ``(slots, expired)``: expired queries (deadline passed while
         queued) never occupy a column — the session completes them with a
-        typed timeout. Pending state is cleared.
+        typed timeout. Pending state is cleared atomically, so each
+        accepted query lands in exactly one drain's slots (or expired
+        list) even with producers racing the flush thread.
         """
+        with self._lock:
+            pending = self._pending
+            self._pending = {}
+            self._roots = {}
+            self._depth = 0
         slots: List[BatchSlot] = []
         expired: List[Query] = []
-        for key, queries in self._pending.items():
+        for key, queries in pending.items():
             live = []
             for q in queries:
                 if q.deadline_at is not None and now >= q.deadline_at:
@@ -138,6 +186,4 @@ class Batcher:
                 width = (1 if key.algorithm == "cc"
                          else min(next_pow2(len(group)), self.max_batch))
                 slots.append(BatchSlot(key=key, queries=group, width=width))
-        self._pending.clear()
-        self._roots.clear()
         return slots, expired

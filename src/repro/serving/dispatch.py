@@ -28,13 +28,27 @@ The ``mode="hostloop"`` engine config falls back to synchronous front-door
 calls (the host-driven loop cannot be left in flight), as does boolean CC
 (its peeling loop is host-side control flow). Everything else runs on the
 handle path.
+
+**Threading.** Since the background-flush-thread PR the dispatcher is
+shared between caller threads (``drain`` / ``result`` forcing harvests)
+and the session's flush thread (``dispatch``): every public method runs
+under one internal ``RLock``, so at most one thread mutates the in-flight
+deque, the per-session handle table, or the results map at a time, and the
+``results_ready`` condition (on the same lock) is notified whenever a
+``QueryResult`` lands — waiters in ``GraphSession.result`` wake without
+polling. Pipelining is unchanged by the lock: ``handle.run`` inside
+``dispatch`` only *enqueues* device work (async JAX dispatch), so holding
+the lock across it never serializes device compute — with
+``max_inflight >= 2`` the next slot's host-side padding and prep overlap
+the previous slot's device sweep, and only ``_harvest_one`` blocks.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +80,22 @@ class DeadlineExpired(RuntimeError):
         self.result = result
 
 
+class QueryShed(RuntimeError):
+    """Raised by ``QueryResult.raise_for_status`` for shed queries.
+
+    A shed query was dropped at submit time by the bounded-queue
+    backpressure policy (``on_full="shed"``): it never dispatched, so
+    ``exc.result.values`` is always None. Resubmit after a flush, or use
+    ``on_full="raise"`` to get ``QueueFull`` at submit instead.
+    """
+
+    def __init__(self, result: "QueryResult"):
+        super().__init__(
+            f"query {result.qid} ({result.algorithm}) was shed by "
+            f"backpressure (submission queue full)")
+        self.result = result
+
+
 @dataclasses.dataclass
 class QueryResult:
     """What one query gets back from the serving layer."""
@@ -91,6 +121,8 @@ class QueryResult:
     def raise_for_status(self) -> "QueryResult":
         if self.status == "timeout":
             raise DeadlineExpired(self)
+        if self.status == "shed":
+            raise QueryShed(self)
         return self
 
     @property
@@ -123,13 +155,20 @@ class Dispatcher:
     """Executes batch slots on one resident layout under one config."""
 
     def __init__(self, tiled, config: EngineConfig, metrics: ServingMetrics,
-                 *, slimwork: bool = True, max_inflight: int = 1):
+                 *, slimwork: bool = True, max_inflight: int = 1,
+                 clock: Optional[Callable[[], float]] = None):
         self.tiled = tiled
         self.config = config
         self.metrics = metrics
         self.slimwork = bool(slimwork)
         self.max_inflight = max(0, int(max_inflight))
         self.results: Dict[int, QueryResult] = {}
+        # one RLock serializes dispatch/harvest/results mutation across the
+        # flush thread and caller threads; results_ready (same lock) wakes
+        # session-side waiters the moment a QueryResult lands
+        self.lock = threading.RLock()
+        self.results_ready = threading.Condition(self.lock)
+        self._clock = clock or time.monotonic
         self._inflight: Deque[_Inflight] = collections.deque()
         self._handles: Dict[tuple, eng.FixpointHandle] = {}
         self._layout_sig = layout_signature(tiled)
@@ -147,22 +186,24 @@ class Dispatcher:
         """
         key = (spec.name, max_iters, direction, batch_width, self.slimwork,
                self.config.signature(), self._layout_sig)
-        handle = self._handles.get(key)
-        if handle is None:
-            self.metrics.compile_cache_misses += 1
-            handle = eng.fixpoint_handle(
-                spec, slimwork=self.slimwork, max_iters=max_iters,
-                backend=self.config.backend, direction=direction,
-                batch_width=batch_width)
-            self._handles[key] = handle
-        else:
-            self.metrics.compile_cache_hits += 1
+        with self.lock:
+            handle = self._handles.get(key)
+            if handle is None:
+                self.metrics.inc(compile_cache_misses=1)
+                handle = eng.fixpoint_handle(
+                    spec, slimwork=self.slimwork, max_iters=max_iters,
+                    backend=self.config.backend, direction=direction,
+                    batch_width=batch_width)
+                self._handles[key] = handle
+            else:
+                self.metrics.inc(compile_cache_hits=1)
         return handle
 
     # ------------------------------------------------------------ dispatch
 
     def inflight(self) -> int:
-        return len(self._inflight)
+        with self.lock:
+            return len(self._inflight)
 
     def dispatch(self, slot: BatchSlot) -> None:
         """Launch one slot; harvest the oldest batch beyond ``max_inflight``.
@@ -172,11 +213,15 @@ class Dispatcher:
         the core front doors (their loops live on host) and complete
         immediately.
         """
+        with self.lock:
+            self._dispatch_locked(slot)
+
+    def _dispatch_locked(self, slot: BatchSlot) -> None:
         cfg, alg = self.config, slot.key.algorithm
         n = self.tiled.n
-        self.metrics.batches_dispatched += 1
-        self.metrics.columns_total += slot.width
-        self.metrics.columns_real += (1 if alg == "cc" else slot.n_real)
+        self.metrics.inc(
+            batches_dispatched=1, columns_total=slot.width,
+            columns_real=(1 if alg == "cc" else slot.n_real))
 
         if cfg.mode == "hostloop" or (alg == "cc"
                                       and slot.key.semiring == "boolean"):
@@ -215,41 +260,57 @@ class Dispatcher:
 
     def drain(self) -> None:
         """Harvest every batch still in flight (blocks on the device)."""
-        while self._inflight:
-            self._harvest_one()
+        with self.lock:
+            while self._inflight:
+                self._harvest_one()
 
     # ------------------------------------------------------------- harvest
 
     def _finish(self, query: Query, **fields) -> None:
-        now = time.monotonic()
+        now = self._clock()
         status = "ok"
         if query.deadline_at is not None and now >= query.deadline_at:
             status = "timeout"   # late: degraded status, values attached
-            self.metrics.timeouts += 1
+            self.metrics.inc(timeouts=1)
         else:
-            self.metrics.completed += 1
+            self.metrics.inc(completed=1)
         latency = now - query.submitted_at
         self.metrics.record_latency(latency)
-        self.results[query.qid] = QueryResult(
+        self._publish(QueryResult(
             qid=query.qid, algorithm=query.algorithm,
             semiring=query.semiring, status=status,
-            latency_s=latency, delta=query.delta, **fields)
+            latency_s=latency, delta=query.delta, **fields))
+
+    def _publish(self, result: QueryResult) -> None:
+        with self.lock:
+            self.results[result.qid] = result
+            self.results_ready.notify_all()
 
     def expire(self, query: Query) -> None:
         """Complete a queued-expired query with a typed timeout (no values)."""
-        now = time.monotonic()
-        self.metrics.timeouts += 1
+        now = self._clock()
+        self.metrics.inc(timeouts=1)
         self.metrics.record_latency(now - query.submitted_at)
-        self.results[query.qid] = QueryResult(
+        self._publish(QueryResult(
             qid=query.qid, algorithm=query.algorithm,
             semiring=query.semiring, status="timeout", values=None,
-            delta=query.delta, latency_s=now - query.submitted_at)
+            delta=query.delta, latency_s=now - query.submitted_at))
+
+    def shed(self, query: Query) -> None:
+        """Complete a backpressure-dropped query with a typed shed result
+        (never dispatched, no values)."""
+        now = self._clock()
+        self.metrics.inc(shed=1)
+        self._publish(QueryResult(
+            qid=query.qid, algorithm=query.algorithm,
+            semiring=query.semiring, status="shed", values=None,
+            delta=query.delta, latency_s=now - query.submitted_at))
 
     def _harvest_one(self) -> None:
         fl = self._inflight.popleft()
         slot, state = fl.slot, fl.state
         iters = int(fl.iters)            # blocks until the batch is done
-        self.metrics.sweeps_total += iters
+        self.metrics.inc(sweeps_total=iters)
         alg, sem = slot.key.algorithm, slot.key.semiring
 
         if alg == "cc":
@@ -307,7 +368,7 @@ class Dispatcher:
         if alg == "cc":
             res = cc(self.tiled, semiring=sem, slimwork=self.slimwork,
                      config=cfg)
-            self.metrics.sweeps_total += int(res.iterations)
+            self.metrics.inc(sweeps_total=int(res.iterations))
             for q in slot.queries:
                 self._finish(q, values=res.labels, sweeps=res.iterations,
                              n_components=res.n_components)
@@ -319,7 +380,7 @@ class Dispatcher:
                                    need_parents=need_parents,
                                    slimwork=self.slimwork,
                                    batch_size=slot.width, config=cfg)
-            self.metrics.sweeps_total += int(np.sum(res.iterations))
+            self.metrics.inc(sweeps_total=int(np.sum(res.iterations)))
             for i, q in enumerate(slot.queries):
                 self._finish(
                     q, values=res.distances[i],
@@ -330,7 +391,7 @@ class Dispatcher:
                                 need_parents=need_parents,
                                 slimwork=self.slimwork,
                                 batch_size=slot.width, config=cfg)
-        self.metrics.sweeps_total += int(np.sum(res.iterations))
+        self.metrics.inc(sweeps_total=int(np.sum(res.iterations)))
         for i, q in enumerate(slot.queries):
             self._finish(q, values=res.distances[i],
                          parents=res.parents[i] if q.need_parents else None,

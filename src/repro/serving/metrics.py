@@ -8,15 +8,20 @@ compile cache is actually being reused (``compile_cache_hits`` vs
 queue pressure (``queue_depth``), end-to-end latency quantiles, and the
 amortization headline: engine sweeps per served query.
 
-``ServingMetrics`` is deliberately dumb — plain ints and a latency list,
-mutated inline by ``GraphSession`` / ``Dispatcher`` on the serving path and
-summarized on demand by ``snapshot()`` (the ``stats()`` payload). No locks:
-a session is a single-threaded object (the async overlap is the *device*
-queue, not host threads).
+``ServingMetrics`` is deliberately dumb — plain ints and a latency list —
+but since the background-flush-thread PR it is **lock-protected**: the
+flush thread increments from its drain loop while caller threads submit
+and snapshot concurrently, so every mutation goes through ``inc()`` /
+``record_latency()`` (one short critical section each) and ``snapshot()``
+copies the counters under the same lock. The invariant snapshots must
+preserve — and ``tests/test_serving_concurrent.py`` asserts — is the
+lifecycle reconciliation ``submitted == completed + timeouts + shed`` once
+the session is drained.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List
 
 
@@ -35,8 +40,9 @@ class ServingMetrics:
 
     Counter glossary (see docs/SERVING.md for the operator's view):
 
-    * ``submitted`` / ``completed`` / ``timeouts`` — query lifecycle; every
-      submitted query ends in exactly one of completed or timeouts.
+    * ``submitted`` / ``completed`` / ``timeouts`` / ``shed`` — query
+      lifecycle; every submitted query ends in exactly one of completed,
+      timeouts or shed (the backpressure drop).
     * ``batches_dispatched`` — device batches launched (one jitted fixpoint
       call each).
     * ``columns_total`` / ``columns_real`` — batch-slot columns launched vs
@@ -49,10 +55,14 @@ class ServingMetrics:
       batches (one sweep advances every column of its batch, which is the
       whole amortization argument).
     * ``latencies_s`` — per-query submit-to-harvest wall times.
+
+    Mutate through ``inc(counter=delta, ...)`` — direct attribute writes
+    are not thread-safe against the flush thread.
     """
     submitted: int = 0
     completed: int = 0
     timeouts: int = 0
+    shed: int = 0
     batches_dispatched: int = 0
     columns_total: int = 0
     columns_real: int = 0
@@ -60,34 +70,42 @@ class ServingMetrics:
     compile_cache_misses: int = 0
     sweeps_total: int = 0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def inc(self, **deltas: int) -> None:
+        """Atomically add ``deltas`` to the named counters (one lock hold
+        for the whole group, so multi-counter updates — e.g. a batch's
+        dispatched/columns trio — land as one consistent event)."""
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self, name, getattr(self, name) + delta)
 
     def record_latency(self, seconds: float) -> None:
-        self.latencies_s.append(float(seconds))
+        with self._lock:
+            self.latencies_s.append(float(seconds))
 
     def snapshot(self, *, queue_depth: int = 0, inflight: int = 0) -> dict:
         """One immutable stats() payload: counters + derived ratios/quantiles.
 
         ``queue_depth`` and ``inflight`` are gauges owned by the session
         (pending queries not yet batched; batches launched but not yet
-        harvested) and are passed in at snapshot time.
+        harvested) and are passed in at snapshot time. The counter block is
+        copied under the lock, so one snapshot is internally consistent
+        even while the flush thread is harvesting.
         """
-        lat = sorted(self.latencies_s)
-        served = max(1, self.completed)
+        with self._lock:
+            c = {f.name: getattr(self, f.name)
+                 for f in dataclasses.fields(self) if f.name != "_lock"}
+            lat = sorted(c.pop("latencies_s"))
+        served = max(1, c["completed"])
         return {
-            "submitted": self.submitted,
-            "completed": self.completed,
-            "timeouts": self.timeouts,
-            "batches_dispatched": self.batches_dispatched,
+            **c,
             "queue_depth": int(queue_depth),
             "inflight": int(inflight),
-            "columns_total": self.columns_total,
-            "columns_real": self.columns_real,
-            "batch_fill_ratio": (self.columns_real / self.columns_total
-                                 if self.columns_total else float("nan")),
-            "compile_cache_hits": self.compile_cache_hits,
-            "compile_cache_misses": self.compile_cache_misses,
-            "sweeps_total": self.sweeps_total,
-            "sweeps_per_query": self.sweeps_total / served,
+            "batch_fill_ratio": (c["columns_real"] / c["columns_total"]
+                                 if c["columns_total"] else float("nan")),
+            "sweeps_per_query": c["sweeps_total"] / served,
             "latency_mean_ms": (1e3 * sum(lat) / len(lat)) if lat
                                else float("nan"),
             "latency_p50_ms": 1e3 * _percentile(lat, 0.50),

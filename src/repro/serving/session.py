@@ -19,26 +19,63 @@ Two usage styles share one dispatch path:
   needed and never hangs: every submitted query ends as a ``QueryResult``,
   ``status="timeout"`` if its deadline passed first.
 
+Threading model (see docs/SERVING.md for the operator's view):
+
+* ``submit`` is safe from any number of producer threads — qid allocation,
+  the duplicate-root check and the bounded-queue capacity check are one
+  atomic step.
+* ``background=True`` starts a **flush thread** that owns the
+  submit-queue-to-dispatcher handoff: it sleeps on a condition variable,
+  wakes on every submit (or every ``flush_interval`` seconds, the batching
+  window that also retires queued deadlines), and drains the batcher into
+  the dispatcher. Callers then never need to call ``flush()`` themselves;
+  ``handle.result()`` waits on the dispatcher's ``results_ready``
+  condition and forces a harvest of in-flight batches when the queue has
+  gone quiet.
+* The submission queue is **bounded** when ``max_pending`` is set:
+  ``on_full="raise"`` surfaces the typed ``QueueFull`` to the producer
+  (backpressure), ``on_full="shed"`` accepts the submit but completes it
+  immediately as a ``status="shed"`` result (load shedding).
+* ``close()`` is idempotent: it stops the flush thread, drains every
+  queued and in-flight query (handles resolved before ``close()`` returns
+  keep their results; afterwards the results map is dropped), and flips
+  the session to a closed state where ``submit`` raises the typed
+  ``SessionClosed``.
+
 Lifecycle: build (graph coerced to a device layout) -> submit/flush cycles
 -> ``stats()`` whenever — it is a pure snapshot -> ``close()`` (drain and
 drop the results map). The session is also a context manager.
 """
 from __future__ import annotations
 
+import threading
 import time
-from typing import Dict, Optional, Sequence, Union
+from typing import Callable, Dict, Optional, Sequence, Union
 
 import numpy as np
 
 from ..core.formats import CSRGraph, SlimSellTiled, build_csr, build_slimsell
+from ..core.formats import layout_signature
 from ..core.options import (ALGORITHMS, BFS_SEMIRINGS, CC_SEMIRINGS,
                             EngineConfig, check_choice, resolve_config)
 from ..core.sssp import _resolve_delta, _require_weighted
-from .batcher import Batcher, Query
+from .batcher import Batcher, Query, QueueFull
 from .dispatch import Dispatcher, QueryResult
 from .metrics import ServingMetrics
 
 GraphLike = Union[np.ndarray, CSRGraph, SlimSellTiled]
+
+# backpressure policies for a bounded submission queue (max_pending set)
+ON_FULL_POLICIES = ("raise", "shed")
+
+
+class SessionClosed(RuntimeError):
+    """Typed error for using a ``GraphSession`` after ``close()``.
+
+    Raised by ``submit`` (and the facades built on it) and by ``result``
+    for qids whose results were dropped at close. ``close()`` itself is
+    idempotent — closing twice is a no-op, not an error.
+    """
 
 
 class QueryHandle:
@@ -77,26 +114,60 @@ class GraphSession:
     max_batch: widest batch slot the bucketer dispatches (power-of-two
     widths up to this).
     max_inflight: launched-but-unharvested batches kept in flight (0 =
-    fully synchronous harvest).
+    fully synchronous harvest; >= 2 pipelines the next slot's host prep
+    over the previous slot's device sweep).
+    max_pending: bound on the submission queue (None = unbounded); with a
+    bound, ``on_full`` picks the overflow policy — ``"raise"`` (typed
+    ``QueueFull`` backpressure) or ``"shed"`` (typed ``status="shed"``
+    results).
+    background: start the flush thread (see the module docstring); the
+    thread wakes on submit and at least every ``flush_interval`` seconds.
+    clock: monotonic-time source for deadlines/latencies (tests inject a
+    fake clock; production leaves the default).
     """
 
     def __init__(self, graph: GraphLike, *, config: Optional[EngineConfig] = None,
                  weights: Optional[np.ndarray] = None,
                  max_batch: int = 64, max_inflight: int = 1,
+                 max_pending: Optional[int] = None, on_full: str = "raise",
+                 background: bool = False, flush_interval: float = 0.002,
                  slimwork: bool = True, C: int = 8, L: int = 128,
+                 clock: Optional[Callable[[], float]] = None,
                  backend: Optional[str] = None,
                  direction: Optional[str] = None,
                  mode: Optional[str] = None):
         self.config = resolve_config("GraphSession", config, backend=backend,
                                      direction=direction, mode=mode)
+        check_choice("on_full", on_full, ON_FULL_POLICIES)
+        self.on_full = on_full
         self.tiled = _coerce_graph(graph, weights=weights, C=C, L=L)
+        self.layout_signature = layout_signature(self.tiled)
         self.metrics = ServingMetrics()
-        self.batcher = Batcher(max_batch=max_batch)
+        self._clock = clock or time.monotonic
+        self.batcher = Batcher(max_batch=max_batch, max_pending=max_pending)
         self.dispatcher = Dispatcher(self.tiled, self.config, self.metrics,
                                      slimwork=slimwork,
-                                     max_inflight=max_inflight)
+                                     max_inflight=max_inflight,
+                                     clock=self._clock)
         self._next_qid = 0
         self._results: Dict[int, QueryResult] = self.dispatcher.results
+        # _submit_lock makes (closed-check, qid allocation, enqueue) atomic
+        # against other producers and against close(); _flush_lock makes
+        # (batcher.drain -> dispatch every slot) atomic against drain(), so
+        # a result() can never observe a query that left the batcher but
+        # has not reached the dispatcher yet
+        self._submit_lock = threading.Lock()
+        self._flush_lock = threading.RLock()
+        self._closed = False
+        self._flush_thread: Optional[threading.Thread] = None
+        self._wake = threading.Condition()
+        self._stop = False
+        self._flush_interval = float(flush_interval)
+        if background:
+            self._flush_thread = threading.Thread(
+                target=self._flush_loop, name="graphsession-flush",
+                daemon=True)
+            self._flush_thread.start()
 
     # -------------------------------------------------------------- submit
 
@@ -107,10 +178,15 @@ class GraphSession:
         """Enqueue one query; returns its handle. Validation is all here, at
         the boundary: unknown algorithm/semiring, out-of-range or missing
         roots, duplicate roots within the pending bucket, weights missing
-        for sssp — nothing invalid reaches a batch.
+        for sssp — nothing invalid reaches a batch. Thread-safe.
 
         deadline: seconds from now; a query still queued (or still in
         flight) when it lapses completes as ``status="timeout"``.
+
+        Raises ``SessionClosed`` after ``close()`` and ``QueueFull`` when a
+        bounded queue overflows under ``on_full="raise"``; under
+        ``on_full="shed"`` the overflowing query completes immediately as
+        a typed ``status="shed"`` result instead.
         """
         check_choice("algorithm", algorithm, ALGORITHMS)
         n = self.tiled.n
@@ -137,54 +213,137 @@ class GraphSession:
             delta = _resolve_delta(self.tiled, delta)
         elif delta is not None:
             raise ValueError(f"delta is an sssp knob; {algorithm} ignores it")
-        now = time.monotonic()
-        query = Query(
-            qid=self._next_qid, algorithm=algorithm, semiring=semiring,
-            root=root, delta=delta, need_parents=bool(need_parents),
-            deadline_at=None if deadline is None else now + float(deadline),
-            submitted_at=now)
-        self.batcher.add(query)
-        self._next_qid += 1
-        self.metrics.submitted += 1
+        now = self._clock()
+        with self._submit_lock:
+            if self._closed:
+                raise SessionClosed(
+                    "session is closed; submit() after close() is invalid")
+            query = Query(
+                qid=self._next_qid, algorithm=algorithm, semiring=semiring,
+                root=root, delta=delta, need_parents=bool(need_parents),
+                deadline_at=None if deadline is None else now + float(deadline),
+                submitted_at=now)
+            try:
+                self.batcher.add(query)
+            except QueueFull:
+                if self.on_full == "raise":
+                    raise
+                # shed policy: the query is accepted and immediately
+                # completed as a typed shed result (no column, no dispatch)
+                self._next_qid += 1
+                self.metrics.inc(submitted=1)
+                self.dispatcher.shed(query)
+                return QueryHandle(self, query)
+            self._next_qid += 1
+            self.metrics.inc(submitted=1)
+        self._notify_flush_thread()
         return QueryHandle(self, query)
+
+    def _notify_flush_thread(self) -> None:
+        if self._flush_thread is not None:
+            with self._wake:
+                self._wake.notify()
 
     # ------------------------------------------------------------ dispatch
 
     def flush(self) -> None:
         """Cut pending queries into batch slots and launch them. Queued
         queries past deadline complete as timeouts; launched batches beyond
-        ``max_inflight`` are harvested (one step late)."""
-        slots, expired = self.batcher.drain(time.monotonic())
-        for q in expired:
-            self.dispatcher.expire(q)
-        for slot in slots:
-            self.dispatcher.dispatch(slot)
+        ``max_inflight`` are harvested (one step late). Thread-safe — the
+        background flush thread calls exactly this."""
+        with self._flush_lock:
+            slots, expired = self.batcher.drain(self._clock())
+            for q in expired:
+                self.dispatcher.expire(q)
+            for slot in slots:
+                self.dispatcher.dispatch(slot)
 
     def drain(self) -> None:
         """flush() + harvest every batch still in flight."""
-        self.flush()
-        self.dispatcher.drain()
+        with self._flush_lock:
+            self.flush()
+            self.dispatcher.drain()
 
     def result(self, qid: int) -> QueryResult:
-        """The result for a submitted query id, draining if necessary."""
+        """The result for a submitted query id, draining if necessary.
+
+        With a background flush thread, waits on the dispatcher's
+        ``results_ready`` condition (dispatch happens on the flush thread)
+        and periodically forces a drain so an in-flight batch with no
+        successor still harvests — the call never hangs.
+        """
         if qid not in self._results:
-            self.drain()
+            with self._submit_lock:
+                if qid >= self._next_qid:
+                    raise KeyError(f"unknown query id {qid}")
+            if self._flush_thread is not None:
+                # give the flush thread one batching window to dispatch
+                # before forcing the harvest ourselves
+                with self.dispatcher.results_ready:
+                    if qid not in self._results:
+                        self.dispatcher.results_ready.wait(
+                            timeout=max(self._flush_interval, 1e-3))
+            if qid not in self._results:
+                # drain() is the guarantee result() never hangs: it flushes
+                # every queued query and harvests every in-flight batch, so
+                # any allocated qid has a result afterwards
+                self.drain()
         try:
             return self._results[qid]
         except KeyError:
+            if self._closed:
+                raise SessionClosed(
+                    f"session closed; result for query {qid} was "
+                    f"dropped") from None
             raise KeyError(f"unknown query id {qid}") from None
 
     # ----------------------------------------------------------- lifecycle
+
+    def _flush_loop(self) -> None:
+        """Background flush thread body: sleep on the condition variable,
+        wake on submit or after one batching window, drain the queue. The
+        periodic wake is what retires queued deadlines with no traffic."""
+        while True:
+            with self._wake:
+                if self._stop:
+                    break
+                self._wake.wait(timeout=self._flush_interval)
+                if self._stop:
+                    break
+            if self.batcher.depth():
+                # one short accumulation window after the wake, so a burst
+                # of producer submits rides one wide batch instead of many
+                # width-1 slots (capped so close() never waits long on join)
+                time.sleep(min(self._flush_interval, 0.005))
+                self.flush()
 
     def stats(self) -> dict:
         """Counters + gauges snapshot (see ``ServingMetrics.snapshot``)."""
         return self.metrics.snapshot(queue_depth=self.batcher.depth(),
                                      inflight=self.dispatcher.inflight())
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
     def close(self) -> None:
-        """Harvest everything in flight and drop the results map."""
+        """Stop the flush thread, harvest everything queued and in flight,
+        and drop the results map. Idempotent — a second ``close()`` is a
+        no-op; only ``submit`` after close is an error (``SessionClosed``).
+        """
+        with self._submit_lock:
+            if self._closed:
+                return
+            self._closed = True
+        if self._flush_thread is not None:
+            with self._wake:
+                self._stop = True
+                self._wake.notify_all()
+            self._flush_thread.join()
+            self._flush_thread = None
         self.drain()
-        self._results.clear()
+        with self.dispatcher.lock:
+            self._results.clear()
 
     def __enter__(self) -> "GraphSession":
         return self

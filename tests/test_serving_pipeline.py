@@ -1,0 +1,156 @@
+"""Pipelining invariants of the ``Dispatcher``, under a fake clock.
+
+The dispatcher's pipelining contract, checked slot-by-slot rather than
+statistically: ``max_inflight`` bounds the launched-but-unharvested deque,
+harvest is FIFO (submit order per bucket), the injectable clock fully
+determines deadline outcomes, and after ``drain()`` the lifecycle counters
+reconcile: ``submitted == completed + timeouts + shed``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.bfs import bfs
+from repro.core.formats import build_slimsell
+from repro.core.options import EngineConfig
+from repro.graphs.generators import kronecker, with_random_weights
+from repro.serving import GraphSession
+from repro.serving.batcher import BatchSlot, BucketKey, Query
+from repro.serving.dispatch import Dispatcher
+from repro.serving.metrics import ServingMetrics
+
+
+class FakeClock:
+    """Deterministic monotonic time for deadline/latency tests."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+@pytest.fixture(scope="module")
+def tiled():
+    csr = with_random_weights(kronecker(7, 8, seed=1), seed=2)
+    return build_slimsell(csr, C=8, L=16, sigma=csr.n).to_jax()
+
+
+def _slot(qids_roots, clock, *, deadline_at=None, width=None):
+    queries = [Query(qid=qid, algorithm="bfs", semiring="tropical",
+                     root=root, delta=None, need_parents=False,
+                     deadline_at=deadline_at, submitted_at=clock())
+               for qid, root in qids_roots]
+    return BatchSlot(key=BucketKey("bfs", "tropical"),
+                     queries=queries, width=width or len(queries))
+
+
+def _dispatcher(tiled, clock, max_inflight):
+    metrics = ServingMetrics()
+    return Dispatcher(tiled, EngineConfig(), metrics,
+                      max_inflight=max_inflight, clock=clock), metrics
+
+
+def test_max_inflight_bounds_inflight_slots(tiled):
+    clock = FakeClock()
+    disp, metrics = _dispatcher(tiled, clock, max_inflight=2)
+    for k in range(5):
+        disp.dispatch(_slot([(k, k)], clock))
+        assert disp.inflight() <= 2
+    # 5 dispatched, bound 2 -> exactly 3 were force-harvested
+    assert disp.inflight() == 2
+    disp.drain()
+    assert disp.inflight() == 0
+    assert metrics.batches_dispatched == 5
+
+
+def test_harvest_order_matches_submit_order_per_bucket(tiled):
+    """With max_inflight=2, dispatching slot k+2 must harvest exactly slot
+    k (FIFO), so results appear in submit order."""
+    clock = FakeClock()
+    disp, _ = _dispatcher(tiled, clock, max_inflight=2)
+    completion = []
+    publish = disp._publish
+
+    def traced_publish(result):
+        completion.append(result.qid)
+        publish(result)
+
+    disp._publish = traced_publish
+    for k in range(6):
+        disp.dispatch(_slot([(k, k)], clock))
+        # slots 0..k-2 are harvested, the trailing two still in flight
+        assert completion == list(range(max(0, k - 1)))
+    disp.drain()
+    assert completion == list(range(6))
+
+
+def test_zero_inflight_is_fully_synchronous(tiled):
+    clock = FakeClock()
+    disp, _ = _dispatcher(tiled, clock, max_inflight=0)
+    disp.dispatch(_slot([(0, 3)], clock))
+    assert disp.inflight() == 0 and 0 in disp.results
+    assert np.array_equal(disp.results[0].values,
+                          bfs(tiled, 3).distances)
+
+
+def test_fake_clock_decides_deadline_at_harvest(tiled):
+    """An in-flight deadline expiry is decided by the injected clock, not
+    wall time: advance past the deadline before the harvest and the result
+    degrades to a timeout carrying the (late) values."""
+    clock = FakeClock(100.0)
+    disp, metrics = _dispatcher(tiled, clock, max_inflight=1)
+    disp.dispatch(_slot([(0, 1)], clock, deadline_at=100.5))
+    clock.advance(1.0)               # deadline passes while in flight
+    disp.dispatch(_slot([(1, 2)], clock, deadline_at=103.0))
+    disp.drain()
+    late, ok = disp.results[0], disp.results[1]
+    assert late.status == "timeout"
+    assert np.array_equal(late.values, bfs(tiled, 1).distances)  # late data
+    assert late.latency_s == pytest.approx(1.0)
+    assert ok.status == "ok"
+    assert ok.latency_s == pytest.approx(0.0)
+    assert metrics.timeouts == 1 and metrics.completed == 1
+
+
+def test_fake_clock_session_expires_queued_queries(tiled):
+    """Queued-past-deadline queries never dispatch: the session's flush
+    (driven by the same fake clock) completes them as valueless timeouts."""
+    clock = FakeClock()
+    sess = GraphSession(tiled, clock=clock, max_batch=8)
+    dead = sess.submit("bfs", 0, deadline=1.0)
+    live = sess.submit("bfs", 1, deadline=10.0)
+    clock.advance(2.0)
+    sess.drain()
+    assert dead.result().status == "timeout" and dead.result().values is None
+    assert live.result().ok
+    # the expired query occupied no batch column
+    assert sess.stats()["columns_real"] == 1
+    sess.close()
+
+
+def test_stats_reconcile_after_drain(tiled):
+    """submitted == completed + timeouts + shed, across ok/expired/shed
+    paths driven through one fake-clock session."""
+    clock = FakeClock()
+    sess = GraphSession(tiled, clock=clock, max_batch=8, max_pending=8,
+                        on_full="shed", max_inflight=2)
+    handles = [sess.submit("bfs", r) for r in range(4)]          # served
+    handles += [sess.submit("bfs", 10 + r, deadline=0.5)
+                for r in range(2)]                               # expire
+    clock.advance(1.0)
+    handles += [sess.submit("bfs", 20 + r) for r in range(4)]    # last 2 shed
+    sess.drain()
+    stats = sess.stats()
+    assert stats["submitted"] == len(handles) == 10
+    assert stats["shed"] == 2
+    assert stats["timeouts"] == 2
+    assert stats["completed"] == 6
+    assert stats["submitted"] == (stats["completed"] + stats["timeouts"]
+                                  + stats["shed"])
+    assert stats["queue_depth"] == 0 and stats["inflight"] == 0
+    statuses = sorted(h.result().status for h in handles)
+    assert statuses == ["ok"] * 6 + ["shed"] * 2 + ["timeout"] * 2
+    sess.close()
