@@ -1,0 +1,107 @@
+"""SlimSell-B vs lane-boolean: TEPS and frontier-state bytes.
+
+The packed path re-encodes the boolean recurrence over ``uint32`` word
+bitmaps — 32 vertices (single-source) or 32 root columns (multi-source)
+per lane — so the frontier/visited state shrinks 32x and every word-wise
+OR/AND-NOT advances 32 lanes at once. This benchmark times the Graph500
+multi-source protocol (B=64 search keys -> 2 packed word planes) packed
+vs lane on the same layout, asserts bit-equality before recording, and
+tracks the packed-vs-lane TEPS ratio in the BENCH trajectory.
+
+    PYTHONPATH=src python benchmarks/bench_packed.py [--scale 10]
+    PYTHONPATH=src python -m benchmarks.run --only packed
+"""
+import argparse
+import time
+
+import numpy as np
+
+try:  # package execution (benchmarks.run) or standalone script
+    from . import common
+except ImportError:
+    import common
+from repro.core.bfs import bfs
+from repro.core.multi_bfs import multi_source_bfs
+from repro.core.packing import packed_words
+from repro.graph500 import sample_roots
+
+
+def _teps(csr, distances, seconds, n_runs):
+    edges = sum(max(1, int(csr.deg[np.asarray(d) >= 0].sum()) // 2)
+                for d in distances)
+    return edges / seconds, edges / n_runs
+
+
+def _timed(fn, *args, **kwargs):
+    fn(*args, **kwargs)                 # jit warm-up
+    t0 = time.perf_counter()
+    res = fn(*args, **kwargs)
+    return res, time.perf_counter() - t0
+
+
+def run(scale: int = 10, ef: int = 8, n_roots: int = 64, backend: str = "jnp"):
+    csr = common.graph("kron", scale, ef)
+    tiled = common.tiled("kron", scale, ef, C=8, L=32)
+    roots = sample_roots(csr, n_roots)
+    B = roots.size
+    print(f"# packed: n={csr.n} m={csr.m_undirected} roots={B} "
+          f"planes={packed_words(B)} backend={backend}")
+
+    lane, lane_s = _timed(multi_source_bfs, tiled, roots, "boolean",
+                          batch_size=B, backend=backend)
+    lane_teps, _ = _teps(csr, lane.distances, lane_s, B)
+    common.emit(f"packed/multi_bfs/lane/{backend}", lane_s / B * 1e6,
+                f"TEPS={lane_teps:.3e}")
+
+    packed, packed_s = _timed(multi_source_bfs, tiled, roots, "boolean",
+                              batch_size=B, backend=backend, packed=True)
+    assert np.array_equal(packed.distances, lane.distances), \
+        "packed multi-BFS != lane multi-BFS"
+    packed_teps, _ = _teps(csr, packed.distances, packed_s, B)
+    ratio = packed_teps / lane_teps
+    common.emit(f"packed/multi_bfs/packed/{backend}", packed_s / B * 1e6,
+                f"TEPS={packed_teps:.3e} vs_lane={ratio:.2f}x")
+    common.record("packed/multi_bfs", teps=packed_teps, batch=B, scale=scale,
+                  ratio_vs_lane=ratio,
+                  iterations=int(packed.iterations.max()))
+    common.record("packed/multi_bfs/lane", teps=lane_teps, batch=B,
+                  scale=scale)
+
+    # single-source packed vs lane from the highest-degree root; one BFS is
+    # only a few ms here, so time the median of several calls
+    root = int(np.argmax(csr.deg))
+    lane1 = bfs(tiled, root, "boolean", backend=backend)
+    pk1 = bfs(tiled, root, "boolean", backend=backend, packed=True)
+    assert np.array_equal(pk1.distances, lane1.distances), \
+        "packed BFS != lane BFS"
+    lane1_s = common.time_fn(
+        lambda: bfs(tiled, root, "boolean", backend=backend).distances,
+        iters=5) / 1e6
+    pk1_s = common.time_fn(
+        lambda: bfs(tiled, root, "boolean", backend=backend,
+                    packed=True).distances, iters=5) / 1e6
+    t1, _ = _teps(csr, [lane1.distances], lane1_s, 1)
+    t2, _ = _teps(csr, [pk1.distances], pk1_s, 1)
+    common.emit(f"packed/bfs/lane/{backend}", lane1_s * 1e6,
+                f"TEPS={t1:.3e}")
+    common.emit(f"packed/bfs/packed/{backend}", pk1_s * 1e6,
+                f"TEPS={t2:.3e} vs_lane={t2 / t1:.2f}x")
+    common.record("packed/bfs", teps=t2, scale=scale,
+                  ratio_vs_lane=t2 / t1, iterations=pk1.iterations)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--ef", type=int, default=8)
+    ap.add_argument("--roots", type=int, default=64)
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--tag", default="packed",
+                    help="results file suffix: BENCH_<tag>.json")
+    args = ap.parse_args()
+    run(args.scale, args.ef, args.roots, args.backend)
+    common.write_json(f"BENCH_{args.tag}.json", args.tag)
+
+
+if __name__ == "__main__":
+    main()

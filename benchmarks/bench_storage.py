@@ -1,15 +1,35 @@
 """Paper Table III + Fig. 7: storage of CSR / AL / Sell-C-sigma / SlimSell
 across n, avg-degree, sigma, and graph family. C=8 as in the paper's CPU
-analysis; SlimSell ~50% of Sell-C-sigma and ~AL for sigma >= sqrt(n)."""
+analysis; SlimSell ~50% of Sell-C-sigma and ~AL for sigma >= sqrt(n).
+
+Plus the SlimSell-B state-storage rows: per-sweep frontier + visited bytes
+and all-in bytes-per-edge for the bit-packed boolean path vs the lane
+boolean and tropical schemes (the adjacency is shared; only the vertex
+state shrinks — by exactly 32x, one bit per vertex per bitmap)."""
 import math
 
 from repro.core.formats import storage_summary
-from .common import emit, graph
+from repro.core.packing import packed_words
+from .common import emit, graph, record
 
 CASES = [
     ("kron", 12, 4), ("kron", 12, 16), ("kron", 14, 16), ("kron", 14, 64),
     ("er", 12, 16), ("er", 14, 16),
 ]
+
+# per-sweep vertex state of one BFS: (frontier, visited/distance carrier)
+# element bytes. Lane boolean rides int32 lanes, tropical float32 lanes,
+# SlimSell-B uint32 word bitmaps with 1/32 the elements.
+FRONTIER_CASES = [("kron", 12, 16), ("er", 12, 16)]
+
+
+def frontier_bytes(n: int) -> dict:
+    """frontier + visited bytes per scheme for an n-vertex boolean BFS."""
+    return {
+        "tropical": 2 * n * 4,
+        "lane_boolean": 2 * n * 4,
+        "packed": 2 * packed_words(n) * 4,
+    }
 
 
 def run():
@@ -24,3 +44,22 @@ def run():
                  f"slim/al={s.slimsell_vs_al:.3f};"
                  f"slim/csr={s.slimsell/s.csr:.3f};"
                  f"P={s.padding_flat};cells={s.slimsell}")
+
+    for kind, scale, ef in FRONTIER_CASES:
+        csr = graph(kind, scale, ef)
+        s = storage_summary(csr, C=8, sigma=None)
+        adj = s.slimsell * 4                      # cols int32, shared
+        fb = frontier_bytes(csr.n)
+        reduction = fb["lane_boolean"] / fb["packed"]
+        assert reduction >= 16, \
+            f"packed frontier reduction {reduction:.1f}x < 16x at n={csr.n}"
+        m = csr.m_undirected
+        emit(f"storage/frontier/{kind}_s{scale}_e{ef}", 0.0,
+             f"tropical={fb['tropical']};lane={fb['lane_boolean']};"
+             f"packed={fb['packed']};lane/packed={reduction:.1f}x;"
+             f"bpe_lane={(adj + fb['lane_boolean']) / m:.2f};"
+             f"bpe_packed={(adj + fb['packed']) / m:.2f}")
+        record(f"storage/frontier/{kind}_s{scale}",
+               bytes=fb["packed"], lane_bytes=fb["lane_boolean"],
+               reduction_vs_lane=reduction,
+               bytes_per_edge=(adj + fb["packed"]) / m)

@@ -18,7 +18,7 @@ import sys
 import time
 
 from . import (bench_cc, bench_direction, bench_layout, bench_multisource,
-               bench_semirings, bench_serving, bench_slimchunk,
+               bench_packed, bench_semirings, bench_serving, bench_slimchunk,
                bench_slimsell, bench_slimwork, bench_sssp, bench_storage,
                bench_vs_traditional, bench_work)
 from . import common
@@ -37,6 +37,7 @@ ALL = {
     "cc": bench_cc,                      # beyond-paper: connected components
     "multisource": bench_multisource,    # beyond-paper: batched BFS/SSSP
     "serving": bench_serving,            # beyond-paper: GraphSession qps
+    "packed": bench_packed,              # beyond-paper: SlimSell-B word sweeps
 }
 
 

@@ -44,7 +44,18 @@ from repro.core import semiring as sm
 def _domain(sr) -> np.ndarray:
     """A small closed-enough value domain: both identities plus a few
     ordinary payloads (valid for all registered semirings — sel-max payloads
-    are 1-based ids, hence positive)."""
+    are 1-based ids, hence positive).
+
+    Unsigned (packed word) semirings get a *multi-bit* domain: single-bit
+    words would let a max/AND confusion slip through (bitwise OR and max
+    agree on {0, 1}), so the payloads mix disjoint and overlapping bit
+    patterns across both halves of the word."""
+    if np.issubdtype(np.dtype(sr.dtype), np.unsignedinteger):
+        vals = []
+        for v in (sr.zero, sr.one, 1, 2, 0xA5A50F0F, 0x80000002):
+            if v not in vals:
+                vals.append(v)
+        return np.asarray(vals, dtype=sr.dtype)
     vals = []
     for v in (sr.zero, sr.one, 1, 2, 5):
         if not any(v == w or (np.isnan(v) and np.isnan(w)) for w in vals):
@@ -96,7 +107,7 @@ def verify_semiring(sr, domain: Optional[np.ndarray] = None) -> List[str]:
                                 f"(a={a}, b={b}, c={c})")
 
     # the three reduction surfaces must agree with a fold of add
-    if getattr(sr, "reduction", None) not in ("min", "max", "sum"):
+    if getattr(sr, "reduction", None) not in ("min", "max", "sum", "or"):
         errs.append(f"{sr.name}: unknown reduction kind "
                     f"{getattr(sr, 'reduction', None)!r}")
         return errs
@@ -142,10 +153,14 @@ def cross_check_kernel_tables() -> List[str]:
         if not _eq(np.asarray(zero, sr.dtype), np.asarray(sr.zero, sr.dtype)):
             errs.append(f"{name}: kernel zero {zero!r} != core zero "
                         f"{sr.zero!r}")
-        # the implicit SlimSell edge value is the NUMBER 1 (one hop / one
-        # path / one reachability bit), i.e. mul(1, x) — not mul(one, x)
-        if not _eq(contrib(x), sr.mul(jnp.asarray(1, x.dtype), x)):
-            errs.append(f"{name}: kernel edge contribution != sr.mul(1, x)")
+        # the implicit SlimSell edge value is the semiring's declared
+        # ``edge_value`` — the NUMBER 1 (one hop / one path / one
+        # reachability bit) for the scalar semirings, the all-ones word for
+        # the packed boolean domain (mul(1, word) would drop 31 bits)
+        ev = jnp.asarray(sr.edge_value, x.dtype)
+        if not _eq(contrib(x), sr.mul(ev, x)):
+            errs.append(f"{name}: kernel edge contribution != "
+                        f"sr.mul(edge_value, x)")
         for a in dom:
             if not _eq(add(jnp.asarray(a), x), sr.add(jnp.asarray(a), x)):
                 errs.append(f"{name}: kernel add != core add at a={a}")
@@ -157,6 +172,59 @@ def cross_check_kernel_tables() -> List[str]:
         pair = jnp.asarray(np.stack([dom, dom[::-1]], axis=-1))   # [|dom|, 2]
         if not _eq(_reduce_l(name, pair), sr.add(pair[:, 0], pair[:, 1])):
             errs.append(f"{name}: kernel _reduce_l != core add-fold")
+    return errs
+
+
+def verify_packed_words() -> List[str]:
+    """SlimSell-B word-domain checks beyond the generic semiring laws.
+
+    The packed boolean path rides on ``core.packing``'s word-wise reduction
+    primitives, and each has a failure mode the scalar law check cannot
+    see: ``segment_or`` replaced a ``segment_max`` (identical on 0/1 lanes,
+    WRONG on multi-bit words), ``or_reduce_last`` folds a custom combinator
+    through ``lax.reduce``, and pack/unpack must keep every tail padding
+    bit zero (one stray bit survives every OR downstream). All checks run
+    on multi-bit uint32 words and ragged tail widths.
+    """
+    from repro.core import packing
+    errs: List[str] = []
+    rng = np.random.default_rng(7)
+    words = rng.integers(0, 1 << 32, size=24, dtype=np.uint32)
+    words[3], words[11] = 0, packing.FULL_WORD  # identities in the stream
+    seg_ids = np.sort(rng.integers(0, 5, size=24))
+    seg_ids[seg_ids == 2] = 1                   # make one segment empty
+    # fold reference: OR within each segment, empty segments = 0 (the OR
+    # identity — exactly the skipped-SlimWork-tile convention)
+    ref = np.zeros(5, np.uint32)
+    for w, s in zip(words, seg_ids):
+        ref[s] |= w
+    got = np.asarray(packing.segment_or(jnp.asarray(words),
+                                        jnp.asarray(seg_ids),
+                                        num_segments=5))
+    if not _eq(got, ref):
+        errs.append("packing.segment_or disagrees with a per-segment OR "
+                    "fold on multi-bit words")
+    mat = jnp.asarray(words.reshape(4, 6))
+    fold = np.bitwise_or.reduce(words.reshape(4, 6), axis=1)
+    if not _eq(packing.or_reduce_last(mat), fold):
+        errs.append("packing.or_reduce_last disagrees with an OR fold")
+    if not _eq(packing.or_reduce(mat, (1,)), fold):
+        errs.append("packing.or_reduce disagrees with an OR fold")
+    # pack/unpack roundtrip + tail-word invariant on ragged widths
+    for n_bits in (1, 31, 32, 33, 64, 70):
+        bits = rng.integers(0, 2, size=n_bits).astype(bool)
+        packed = np.asarray(packing.pack_bits(jnp.asarray(bits)))
+        if not _eq(np.asarray(packing.unpack_bits(jnp.asarray(packed),
+                                                  n_bits)), bits):
+            errs.append(f"pack/unpack roundtrip fails at n_bits={n_bits}")
+        pad_mask = np.asarray(packing._cached_padding_mask(n_bits))
+        if np.any(packed & ~pad_mask):
+            errs.append(f"pack_bits leaves nonzero tail padding at "
+                        f"n_bits={n_bits}")
+        host = packing.pack_bits_np(bits)
+        if not _eq(host, packed):
+            errs.append(f"pack_bits_np disagrees with pack_bits at "
+                        f"n_bits={n_bits}")
     return errs
 
 
@@ -174,6 +242,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if not args.quiet:
         print(f"  [{'FAIL' if cross else 'ok'}] kernel-table cross-check")
     failures.extend(cross)
+    packed = verify_packed_words()
+    if not args.quiet:
+        print(f"  [{'FAIL' if packed else 'ok'}] packed word domain")
+    failures.extend(packed)
     if failures:
         print(f"\n{len(failures)} semiring violation(s):")
         for e in failures:

@@ -30,6 +30,14 @@ and an allowlist at ``src/repro/analysis/lint_allow.txt``):
     the ``@kernel_contract`` registration decorator — unregistered kernels
     escape the contract checker, so coverage would silently rot.
 
+``packed-constants``
+    A packed-word bit-twiddling constant (``>> 5`` / ``<< 5``, ``& 31``,
+    ``0xFFFFFFFF``) outside ``core/packing.py``. The packing module is the
+    single home of the 32-bit word geometry; a re-derived constant
+    elsewhere is how a word-width change or a 31/32 off-by-one forks the
+    layout. **Allowlist-free**: the only fix is routing through
+    ``packing.word_of`` / ``packing.bit_of`` / ``packing.FULL_WORD``.
+
 ``interpret-literal``
     A literal boolean default for an ``interpret`` parameter — the
     repo-wide default lives in ``core.options`` (env-overridable); literal
@@ -285,6 +293,40 @@ def _rule_pallas_contract(path, src, tree, findings):
                 "repro.analysis.registry)"))
 
 
+def _rule_packed_constants(path, src, tree, findings):
+    """Bit-twiddling constants of the packed word layout (``>> 5`` /
+    ``<< 5``, ``& 31``, ``0xFFFFFFFF``) outside ``core/packing.py`` — the
+    packing module is the single home of the 32-bit word geometry, and a
+    re-derived constant elsewhere is exactly how a future word-width change
+    (or a 31/32 off-by-one) forks the layout. This rule is allowlist-free
+    by design: route the arithmetic through ``core.packing`` helpers."""
+    if path.replace("\\", "/").endswith("core/packing.py"):
+        return
+    for node in ast.walk(tree):
+        ops = []
+        if isinstance(node, (ast.BinOp, ast.AugAssign)):
+            rhs = node.right if isinstance(node, ast.BinOp) else node.value
+            if isinstance(node.op, (ast.RShift, ast.LShift)) \
+                    and isinstance(rhs, ast.Constant) and rhs.value == 5:
+                ops.append("word-index shift by 5")
+            if isinstance(node.op, ast.BitAnd):
+                sides = [rhs] + ([node.left] if isinstance(node, ast.BinOp)
+                                 else [])
+                if any(isinstance(s, ast.Constant) and s.value == 31
+                       for s in sides):
+                    ops.append("bit-offset mask & 31")
+        elif isinstance(node, ast.Constant) \
+                and not isinstance(node.value, bool) \
+                and node.value == (1 << 32) - 1:
+            ops.append("all-ones word 0xFFFFFFFF")
+        for what in ops:
+            findings.append(Finding(
+                "packed-constants", path, node.lineno, "-",
+                f"packed-word bit constant ({what}) outside core/packing "
+                f"— use packing.word_of/bit_of/FULL_WORD; this rule has no "
+                f"allowlist"))
+
+
 def _rule_interpret_literal(path, src, tree, findings):
     for qual, func in _functions(tree):
         a = func.args
@@ -302,9 +344,15 @@ def _rule_interpret_literal(path, src, tree, findings):
 
 
 RULES = (_rule_traced_branch, _rule_string_option, _rule_f32_vertex_id,
-         _rule_pallas_contract, _rule_interpret_literal)
+         _rule_pallas_contract, _rule_packed_constants,
+         _rule_interpret_literal)
 RULE_NAMES = ("traced-branch", "string-option", "f32-vertex-id",
-              "pallas-contract", "interpret-literal")
+              "pallas-contract", "packed-constants", "interpret-literal")
+
+# rules the allowlist can NEVER silence: their fix is always "route through
+# the canonical module", so an allowlist entry would just institutionalize
+# the fork
+NO_ALLOW_RULES = frozenset({"packed-constants"})
 
 
 # --------------------------------------------------------------- allowlist
@@ -354,6 +402,9 @@ def lint_paths(paths: Sequence[pathlib.Path], root: pathlib.Path,
     out = []
     for f in files:
         for finding in lint_file(f, root):
+            if finding.rule in NO_ALLOW_RULES:
+                out.append(finding)
+                continue
             hits = [k for k in finding.key_candidates() if k in allow]
             if hits:
                 if used is not None:

@@ -52,6 +52,7 @@ import numpy as np
 
 from . import direction as dm
 from . import engine as eng
+from . import packing
 from . import semiring as sm
 from .engine import DIRECTIONS, WORK_LOG, FixpointSpec  # noqa: F401 (re-export)
 from .options import EngineConfig, MODES, check_choice, resolve_config
@@ -193,6 +194,54 @@ def bfs_spec(sr_name: str) -> FixpointSpec:
     )
 
 
+@functools.lru_cache(maxsize=None)
+def packed_bfs_spec(n: int) -> FixpointSpec:
+    """SlimSell-B single-source BFS: the boolean BFS with its frontier and
+    visited bitmaps bit-packed to ``uint32[ceil(n/32)]`` words.
+
+    Same recurrence as ``bfs_spec("boolean")`` — reach, mask off visited,
+    stamp distances — but the mask math is word-wise (OR/AND-NOT on packed
+    words) and the sweep is the word-gather packed SpMV. Only the distance
+    stamp unpacks (32x less state traffic per iteration). Cached per ``n``:
+    the packed geometry (word count, live-bit slice) must be static inside
+    the jitted loop, so it is closed over rather than carried in ctx.
+    Push-only — see ``FixpointSpec.packed``.
+    """
+
+    def init_state(n_, root, ctx):
+        d = jnp.full((n,), -1, jnp.int32).at[root].set(0)
+        f = packing.pack_bits(jnp.zeros((n,), bool).at[root].set(True))
+        return {"d": d, "f": f, "visited": f}
+
+    def update(ctx, state, y, k):
+        # y: packed reach bitmap. Word-wise newly-visited mask; tail bits
+        # stay zero (y's are zero, AND preserves zero).
+        new_w = y & ~state["visited"]
+        visited = state["visited"] | new_w
+        d = jnp.where(packing.unpack_bits(new_w, n), k.astype(jnp.int32),
+                      state["d"])
+        return ({"d": d, "f": new_w, "visited": visited},
+                jnp.any(new_w != jnp.asarray(0, jnp.uint32)))
+
+    def host_bits(state, k, need_sb, need_nf):
+        # push-only spec: the hostloop only ever asks for source bits
+        sb = packing.unpack_bits_np(np.asarray(state["f"]), n) \
+            if need_sb else None
+        return sb, None
+
+    return FixpointSpec(
+        name="bfs/boolean_packed",
+        sr_name="boolean_packed",
+        directions=("push",),
+        packed=True,
+        init_state=init_state,
+        frontier=lambda ctx, state, k: state["f"],
+        source_bits=lambda ctx, state, k: packing.unpack_bits(state["f"], n),
+        update=update,
+        host_bits=host_bits,
+    )
+
+
 # ---------------------------------------------------------------- DP transform
 
 
@@ -233,8 +282,21 @@ def _check_bfs_options(fn_name: str, semiring: str, direction: str,
         check_choice("mode", mode, MODES)
 
 
+def _check_packed(fn_name: str, semiring: str, direction: str):
+    """Shared validation of the SlimSell-B ``packed=True`` flag: the packed
+    path is the *boolean* recurrence over packed words, push-only."""
+    if semiring != "boolean":
+        raise ValueError(f"{fn_name}: packed=True is the bit-packed boolean "
+                         f"path; got semiring={semiring!r}")
+    if direction != "push":
+        raise ValueError(f"{fn_name}: packed=True is push-only (packed "
+                         "payloads carry no per-row ordering for the pull "
+                         f"early-exit); got direction={direction!r}")
+
+
 def bfs(tiled, root: int, semiring: str = "tropical", *,
         need_parents: bool = False, slimwork: bool = True,
+        packed: bool = False,
         mode: Optional[str] = None, max_iters: Optional[int] = None,
         log_work: bool = False, backend: Optional[str] = None,
         direction: Optional[str] = None,
@@ -255,10 +317,16 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
     mode is "hostloop"). The per-call ``mode``/``backend``/``direction``
     kwargs are a deprecated spelling of the same knobs.
     slimwork: skip tiles that can no longer change the output (paper §III-C).
+    packed: SlimSell-B — run the boolean recurrence over bit-packed
+    ``uint32[ceil(n/32)]`` frontier/visited bitmaps and the word-wise sweep
+    (requires ``semiring="boolean"``, push direction); bit-identical
+    distances, 32x smaller frontier state.
     """
     cfg = resolve_config("bfs", config, mode=mode, backend=backend,
                          direction=direction)
     _check_bfs_options("bfs", semiring, cfg.direction)
+    if packed:
+        _check_packed("bfs", semiring, cfg.direction)
     if cfg.direction in ("push", "auto") and slimwork \
             and getattr(tiled, "inc_src", None) is None:
         raise ValueError("direction-optimizing push masks need the push index;"
@@ -271,7 +339,7 @@ def bfs(tiled, root: int, semiring: str = "tropical", *,
                          f"up to 2^24); use another semiring for n={n}")
     max_iters = int(max_iters) if max_iters is not None else n
     root = jnp.asarray(root, jnp.int32)
-    spec = bfs_spec(semiring)
+    spec = packed_bfs_spec(n) if packed else bfs_spec(semiring)
 
     with cfg.applied():
         if cfg.mode == "fused":

@@ -84,7 +84,7 @@ CC_SPEC = FixpointSpec(
 
 
 def _cc_boolean(tiled, *, config: EngineConfig, slimwork: bool,
-                max_iters: Optional[int]):
+                max_iters: Optional[int], packed: bool = False):
     """One boolean BFS per component, stamping the canonical (max-id) label."""
     n = tiled.n
     labels = np.full(n, -1, np.int64)
@@ -99,7 +99,7 @@ def _cc_boolean(tiled, *, config: EngineConfig, slimwork: bool,
             break
         seed = int(unlabeled[0])
         res = bfs(tiled, seed, "boolean", config=config,
-                  slimwork=slimwork, max_iters=max_iters)
+                  slimwork=slimwork, max_iters=max_iters, packed=packed)
         comp = res.distances >= 0
         labels[comp] = int(np.nonzero(comp)[0].max())
         iters += res.iterations
@@ -110,6 +110,7 @@ def _cc_boolean(tiled, *, config: EngineConfig, slimwork: bool,
 
 
 def cc(tiled, *, semiring: str = "selmax", slimwork: bool = True,
+       packed: bool = False,
        mode: Optional[str] = None, max_iters: Optional[int] = None,
        log_work: bool = False, backend: Optional[str] = None,
        config: Optional[EngineConfig] = None) -> CCResult:
@@ -121,9 +122,15 @@ def cc(tiled, *, semiring: str = "selmax", slimwork: bool = True,
     propagation is push-only, boolean peeling forwards the config (including
     its direction) to the inner BFS. The per-call ``mode``/``backend``
     kwargs are the deprecated spelling.
+    packed: SlimSell-B — run the peeling BFSes over bit-packed word bitmaps
+    (requires ``semiring="boolean"``); identical labels, 32x smaller
+    frontier state per BFS.
     """
     check_choice("cc semiring", semiring, CC_SEMIRINGS)
     cfg = resolve_config("cc", config, mode=mode, backend=backend)
+    if packed and semiring != "boolean":
+        raise ValueError("cc: packed=True is the bit-packed boolean peeling "
+                         f"path; got semiring={semiring!r}")
     if semiring == "selmax":
         check_choice("direction", cfg.direction, CC_SPEC.directions,
                      hint="sel-max label propagation is push-only")
@@ -140,8 +147,8 @@ def cc(tiled, *, semiring: str = "selmax", slimwork: bool = True,
     cap = int(max_iters) if max_iters is not None else n + 1
 
     if semiring == "boolean":
-        labels, iters = _cc_boolean(tiled, config=cfg,
-                                    slimwork=slimwork, max_iters=max_iters)
+        labels, iters = _cc_boolean(tiled, config=cfg, slimwork=slimwork,
+                                    max_iters=max_iters, packed=packed)
         return CCResult(labels=labels, n_components=len(np.unique(labels)),
                         iterations=iters)
 

@@ -172,7 +172,7 @@ def check_gather(idx, n: int) -> None:
                        f"gather index out of bounds [0, {n})")
 
 
-def check_sweep(sr, y) -> None:
+def check_sweep(sr, y, n_bits: Optional[int] = None) -> None:
     """Post-sweep value sanity, per semiring: float sweeps must never
     produce NaN; semirings whose zero is finite must not overflow to the
     *poison* infinity. The reduction kind's own fill identity is allowed:
@@ -180,8 +180,22 @@ def check_sweep(sr, y) -> None:
     a SlimWork subset sweep) with -inf, which the update treats as "no
     contribution" — so a max-kind sweep only flags +inf, a min-kind only
     -inf, and a sum-kind flags both. Under tropical/min-plus (infinite
-    zero) inf is the additive identity and no finiteness check applies."""
+    zero) inf is the additive identity and no finiteness check applies.
+
+    Packed (SlimSell-B) sweeps pass ``n_bits`` — the live-bit count of the
+    packed word axis (the LAST axis) — and get the tail-word invariant
+    instead: every padding bit above ``n_bits`` must be zero. A set padding
+    bit would survive every OR downstream and resurface as a phantom
+    vertex/root after unpack."""
     if not _emitting():
+        return
+    if n_bits is not None and jnp.issubdtype(y.dtype, jnp.unsignedinteger):
+        from . import packing
+        mask = jnp.asarray(packing._cached_padding_mask(int(n_bits)))
+        checkify.check(~jnp.any(y & ~mask),
+                       f"packed {sr.name} sweep has nonzero tail padding "
+                       f"bits (live bits: {int(n_bits)}) — the tail-word "
+                       "invariant is broken")
         return
     if not jnp.issubdtype(y.dtype, jnp.floating):
         return

@@ -49,8 +49,8 @@ from . import engine as eng
 from .bfs import bfs_spec
 from .cc import CC_SPEC
 from .engine import DIRECTIONS, WORK_LOG, FixpointSpec
-from .formats import CSRGraph, sellcs_order
-from .multi_bfs import multi_bfs_spec
+from .formats import CSRGraph, build_push_index, sellcs_order
+from .multi_bfs import multi_bfs_spec, packed_multi_bfs_spec
 from .multi_sssp import MULTI_SSSP_SPEC
 from .options import COMMS, check_choice
 from .spmv import resolve_backend
@@ -81,10 +81,17 @@ class DistSlimSell:
     row_vertex: np.ndarray  # int32[R, chunks_per_shard, C] global vertex ids
     wts: Optional[np.ndarray] = None  # float32[R, Co, T, C, L] slot weights
     deg: Optional[np.ndarray] = None  # int64[n] degree vector (replicated)
+    # per-shard push index (SlimWork push masks on the mesh): deduplicated
+    # (localized column, tile) pairs of each shard's block, padded to the
+    # widest shard's pair count with (0, t_max) — the OOB tile id makes
+    # segment ops drop the padding
+    inc_src: Optional[np.ndarray] = None  # int32[R, Co, K] localized col ids
+    inc_tile: Optional[np.ndarray] = None  # int32[R, Co, K] tile ids
 
 
 def _tiled_flatten(t):
-    return (t.cols, t.row_block, t.row_vertex, t.wts, t.deg), (
+    return (t.cols, t.row_block, t.row_vertex, t.wts, t.deg,
+            t.inc_src, t.inc_tile), (
         t.n, t.C, t.L, t.R, t.Co, t.n_col, t.chunks_per_shard, t.t_max)
 
 
@@ -93,7 +100,7 @@ def _tiled_unflatten(aux, ch):
     return DistSlimSell(n=n, C=C, L=L, R=R, Co=Co, n_col=n_col,
                         chunks_per_shard=cps, t_max=t_max,
                         cols=ch[0], row_block=ch[1], row_vertex=ch[2],
-                        wts=ch[3], deg=ch[4])
+                        wts=ch[3], deg=ch[4], inc_src=ch[5], inc_tile=ch[6])
 
 
 jax.tree_util.register_pytree_node(DistSlimSell, _tiled_flatten, _tiled_unflatten)
@@ -107,7 +114,9 @@ def partition_slimsell(csr: CSRGraph, R: int, Co: int, *, C: int = 8,
     If the CSR carries weights, the partition also carries the per-slot
     ``wts`` blocks (localized in lockstep with ``cols``) so the weighted
     min-plus operators (distributed SSSP) run over it. ``deg`` always rides
-    along for the direction heuristic.
+    along for the direction heuristic, and every partition carries the
+    per-shard push index (``inc_src`` / ``inc_tile``) so the engine's
+    SlimWork push masks work on the mesh (``make_dist_* (slimwork=True)``).
 
     slot_space=True renumbers vertices by their sorted-row slot (the
     optimized layout, EXPERIMENTS.md §Perf): row shard i then owns the
@@ -182,10 +191,24 @@ def partition_slimsell(csr: CSRGraph, R: int, Co: int, *, C: int = 8,
             n_real = len(per_shard_tiles[i][j])
             if n_real and n_real < t_max:
                 row_block[i, j, n_real:] = per_shard_tiles[i][j][-1][0]
+    # per-shard push index: SlimWork push masks need (localized column,
+    # tile) incidence per block; shards are padded to one common K so the
+    # arrays shard cleanly, padding pairs pointing at the dropped tile id
+    # t_max (out of segment range)
+    pairs = [[build_push_index(cols[i, j]) for j in range(Co)]
+             for i in range(R)]
+    K = max(1, max(p[0].size for row in pairs for p in row))
+    inc_src = np.zeros((R, Co, K), np.int32)
+    inc_tile = np.full((R, Co, K), t_max, np.int32)
+    for i in range(R):
+        for j in range(Co):
+            s, t = pairs[i][j]
+            inc_src[i, j, :s.size] = s
+            inc_tile[i, j, :t.size] = t
     return DistSlimSell(n=n, C=C, L=L, R=R, Co=Co, n_col=n_col,
                         chunks_per_shard=cps, t_max=t_max, cols=cols,
                         row_block=row_block, row_vertex=row_vertex,
-                        wts=wts, deg=deg)
+                        wts=wts, deg=deg, inc_src=inc_src, inc_tile=inc_tile)
 
 
 # ------------------------------------------------ optimized sliced exchange
@@ -290,25 +313,33 @@ def make_dist_fixpoint(mesh: Mesh, meta: DistSlimSell, spec: FixpointSpec, *,
                        col_axes: Sequence[str] = ("model",),
                        max_iters: int = 64, comm: str = "allreduce",
                        backend: Optional[str] = None,
-                       direction: str = "push", finalize=None):
+                       direction: str = "push", slimwork: bool = False,
+                       finalize=None):
     """The distributed execution strategy: run any ``FixpointSpec`` over the
     2D partition. Returns a jitted function
 
-        fn(cols, row_block, row_vertex[, deg][, wts], arg, ctx_args)
-            -> finalize(state, iterations, dirs)
+        fn(cols, row_block, row_vertex[, inc_src, inc_tile][, deg][, wts],
+           arg, ctx_args) -> finalize(state, iterations, dirs)
 
     ``deg`` is present only under ``direction="auto"`` (the heuristic input)
     and ``wts`` only for weighted specs; both extra operands keep the
-    factory AOT-lowerable from ShapeDtypeStructs alone. ``ctx_args`` is the
-    (possibly empty) tuple handed to the spec's ``setup`` — e.g. SSSP's
-    traced delta. ``finalize`` maps the replicated final state to the
-    outputs (default: the state dict itself plus the iteration count).
+    factory AOT-lowerable from ShapeDtypeStructs alone. ``slimwork=True``
+    adds the per-shard push-index operands ``inc_src`` / ``inc_tile``
+    (built by ``partition_slimsell``) so push sweeps mask to the tiles
+    holding a frontier column — jnp backend on the mesh only, like the pull
+    masks. ``ctx_args`` is the (possibly empty) tuple handed to the spec's
+    ``setup`` — e.g. SSSP's traced delta. ``finalize`` maps the replicated
+    final state to the outputs (default: the state dict itself plus the
+    iteration count).
     """
     check_choice("direction", direction, DIRECTIONS)
     check_choice("direction", direction, spec.directions,
                  hint=f"supported by {spec.name}")
     check_choice("comm", comm, COMMS)
     backend = resolve_backend(backend)
+    if slimwork and meta.inc_src is None:
+        raise ValueError("slimwork=True needs the per-shard push index; "
+                         "rebuild the partition with partition_slimsell")
     weighted = spec.weights is not None
     auto = direction == "auto"
     cps, C, L, t_max = meta.chunks_per_shard, meta.C, meta.L, meta.t_max
@@ -317,6 +348,8 @@ def make_dist_fixpoint(mesh: Mesh, meta: DistSlimSell, spec: FixpointSpec, *,
 
     def shard_fn(cols, row_block, row_vertex, *rest):
         rest = list(rest)
+        inc_src = rest.pop(0) if slimwork else None
+        inc_tile = rest.pop(0) if slimwork else None
         deg = rest.pop(0) if auto else None
         wts = rest.pop(0) if weighted else None
         arg, ctx_args = rest
@@ -325,7 +358,9 @@ def make_dist_fixpoint(mesh: Mesh, meta: DistSlimSell, spec: FixpointSpec, *,
             row_block=row_block.reshape(-1),
             row_vertex=row_vertex.reshape(cps, C),
             n=meta.n, n_chunks=cps,
-            wts=None if wts is None else wts.reshape(t_max, C, L))
+            wts=None if wts is None else wts.reshape(t_max, C, L),
+            inc_src=None if inc_src is None else inc_src.reshape(-1),
+            inc_tile=None if inc_tile is None else inc_tile.reshape(-1))
         ctx = spec.setup(local, *ctx_args) if spec.setup is not None else None
         state = spec.init_state(meta.n, arg, ctx)
         d0 = jnp.asarray(eng.dm.PULL if direction == "pull" else eng.dm.PUSH,
@@ -362,6 +397,9 @@ def make_dist_fixpoint(mesh: Mesh, meta: DistSlimSell, spec: FixpointSpec, *,
     row = tuple(row_axes) if len(row_axes) > 1 else row_axes[0]
     block_spec = P(row, col_axes[0], None, None, None)
     in_specs = [block_spec, P(row, col_axes[0], None), P(row, None, None)]
+    if slimwork:
+        inc_spec = P(row, col_axes[0], None)  # inc_src / inc_tile
+        in_specs.extend([inc_spec, inc_spec])
     if auto:
         in_specs.append(P())                  # deg, replicated
     if weighted:
@@ -386,14 +424,18 @@ def make_dist_bfs(mesh: Mesh, meta: DistSlimSell, sr_name: str = "tropical", *,
                   row_axes: Sequence[str] = ("data",),
                   col_axes: Sequence[str] = ("model",),
                   max_iters: int = 64, comm: str = "allreduce",
-                  backend: Optional[str] = None, direction: str = "push"):
-    """Jitted distributed BFS: (cols, row_block, row_vertex[, deg], root)
-    -> (distances, iterations). ``meta`` provides the static layout fields
-    (arrays in it may be ShapeDtypeStructs for AOT lowering); the extra
-    ``deg`` operand exists only under ``direction="auto"``."""
+                  backend: Optional[str] = None, direction: str = "push",
+                  slimwork: bool = False):
+    """Jitted distributed BFS: (cols, row_block, row_vertex
+    [, inc_src, inc_tile][, deg], root) -> (distances, iterations). ``meta``
+    provides the static layout fields (arrays in it may be ShapeDtypeStructs
+    for AOT lowering); the extra ``deg`` operand exists only under
+    ``direction="auto"`` and the push-index operands only under
+    ``slimwork=True``."""
     run = make_dist_fixpoint(
         mesh, meta, bfs_spec(sr_name), row_axes=row_axes, col_axes=col_axes,
         max_iters=max_iters, comm=comm, backend=backend, direction=direction,
+        slimwork=slimwork,
         finalize=lambda state, iters, dirs: (state["d"], iters))
     return lambda *args: run(*args, ())
 
@@ -404,17 +446,39 @@ def make_dist_multi_bfs(mesh: Mesh, meta: DistSlimSell,
                         col_axes: Sequence[str] = ("model",),
                         max_iters: int = 64, comm: str = "allreduce",
                         backend: Optional[str] = None,
-                        direction: str = "push"):
+                        direction: str = "push", slimwork: bool = False,
+                        packed: bool = False,
+                        batch_width: Optional[int] = None):
     """Jitted distributed multi-source BFS over the column-sharded frontier
-    matrix: (cols, row_block, row_vertex[, deg], roots[B]) ->
-    (distances [B, n], iterations). One SpMM/pull-MM sweep per iteration
-    advances every root; under ``direction="auto"`` the whole batch switches
-    together (mean Beamer statistics — the partition has no per-shard push
-    index, so per-column masks would buy nothing)."""
+    matrix: (cols, row_block, row_vertex[, inc_src, inc_tile][, deg],
+    roots[B]) -> (distances [B, n], iterations). One SpMM/pull-MM sweep per
+    iteration advances every root; under ``direction="auto"`` the whole
+    batch switches together (mean Beamer statistics — the SpMM advances
+    every column on each active tile, so the union mask is the only one
+    that matters). Under ``slimwork=True`` push sweeps mask to the tiles
+    holding a frontier column via the partition's per-shard push index.
+
+    ``packed=True`` is distributed SlimSell-B: the batch's frontier/visited
+    travel as ``uint32[n_col, ceil(B/32)]`` word planes per shard and the
+    iteration all-reduce ORs word vectors (32 roots per lane element, a 32x
+    smaller exchange than the lane-boolean batch). Requires
+    ``sr_name="boolean"``, ``direction="push"`` and a static ``batch_width``
+    (the word-plane geometry is baked into the spec)."""
+    if packed:
+        check_choice("sr_name", sr_name, ("boolean",),
+                     hint="packed=True is the bit-packed boolean push path")
+        check_choice("direction", direction, ("push",),
+                     hint="the packed sweep is push-only")
+        if batch_width is None:
+            raise ValueError("packed=True needs a static batch_width "
+                             "(the packed plane count is ceil(B/32))")
+        spec = packed_multi_bfs_spec(int(batch_width))
+    else:
+        spec = multi_bfs_spec(sr_name)
     run = make_dist_fixpoint(
-        mesh, meta, multi_bfs_spec(sr_name), row_axes=row_axes,
+        mesh, meta, spec, row_axes=row_axes,
         col_axes=col_axes, max_iters=max_iters, comm=comm, backend=backend,
-        direction=direction,
+        direction=direction, slimwork=slimwork,
         finalize=lambda state, iters, dirs: (state["d"].T, iters))
     return lambda *args: run(*args, ())
 
@@ -423,21 +487,22 @@ def make_dist_sssp(mesh: Mesh, meta: DistSlimSell, *,
                    row_axes: Sequence[str] = ("data",),
                    col_axes: Sequence[str] = ("model",),
                    max_iters: int = 512, comm: str = "allreduce",
-                   backend: Optional[str] = None):
+                   backend: Optional[str] = None, slimwork: bool = False):
     """Jitted distributed delta-stepping SSSP over the weighted partition:
-    (cols, row_block, row_vertex, wts, root, delta) ->
+    (cols, row_block, row_vertex[, inc_src, inc_tile], wts, root, delta) ->
     (distances float32[n], sweeps, buckets). ``partition_slimsell`` of a
     weighted CSR supplies the ``wts`` blocks; delta rides as a traced
     operand (same flattened light/heavy phase machine as single-device)."""
     run = make_dist_fixpoint(
         mesh, meta, SSSP_SPEC, row_axes=row_axes, col_axes=col_axes,
         max_iters=max_iters, comm=comm, backend=backend, direction="push",
+        slimwork=slimwork,
         finalize=lambda state, iters, dirs:
             (state["dist"], iters, state["buckets"]))
 
-    def fn(cols, row_block, row_vertex, wts, root, delta):
-        return run(cols, row_block, row_vertex, wts, root,
-                   (jnp.asarray(delta, jnp.float32),))
+    def fn(*args):
+        *head, root, delta = args
+        return run(*head, root, (jnp.asarray(delta, jnp.float32),))
     return fn
 
 
@@ -445,9 +510,11 @@ def make_dist_multi_sssp(mesh: Mesh, meta: DistSlimSell, *,
                          row_axes: Sequence[str] = ("data",),
                          col_axes: Sequence[str] = ("model",),
                          max_iters: int = 512, comm: str = "allreduce",
-                         backend: Optional[str] = None):
+                         backend: Optional[str] = None,
+                         slimwork: bool = False):
     """Jitted distributed batched multi-source SSSP over the column-sharded
-    distance matrix: (cols, row_block, row_vertex, wts, roots[B], delta) ->
+    distance matrix: (cols, row_block, row_vertex[, inc_src, inc_tile],
+    wts, roots[B], delta) ->
     (distances float32[B, n], iterations, sweeps int32[B], buckets int32[B]).
 
     One weighted min-plus SpMM per iteration relaxes every root's column;
@@ -459,12 +526,13 @@ def make_dist_multi_sssp(mesh: Mesh, meta: DistSlimSell, *,
     run = make_dist_fixpoint(
         mesh, meta, MULTI_SSSP_SPEC, row_axes=row_axes, col_axes=col_axes,
         max_iters=max_iters, comm=comm, backend=backend, direction="push",
+        slimwork=slimwork,
         finalize=lambda state, iters, dirs:
             (state["dist"].T, iters, state["sweeps"], state["buckets"]))
 
-    def fn(cols, row_block, row_vertex, wts, roots, delta):
-        return run(cols, row_block, row_vertex, wts, roots,
-                   (jnp.asarray(delta, jnp.float32),))
+    def fn(*args):
+        *head, roots, delta = args
+        return run(*head, roots, (jnp.asarray(delta, jnp.float32),))
     return fn
 
 
@@ -472,15 +540,16 @@ def make_dist_cc(mesh: Mesh, meta: DistSlimSell, *,
                  row_axes: Sequence[str] = ("data",),
                  col_axes: Sequence[str] = ("model",),
                  max_iters: Optional[int] = None, comm: str = "allreduce",
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, slimwork: bool = False):
     """Jitted distributed connected components (sel-max label propagation):
-    (cols, row_block, row_vertex) -> (labels int32[n], iterations);
-    labels[v] = max vertex id of v's component."""
+    (cols, row_block, row_vertex[, inc_src, inc_tile]) ->
+    (labels int32[n], iterations); labels[v] = max vertex id of v's
+    component."""
     cap = int(max_iters) if max_iters is not None else meta.n + 1
     run = make_dist_fixpoint(
         mesh, meta, CC_SPEC, row_axes=row_axes, col_axes=col_axes,
         max_iters=cap, comm=comm, backend=backend, direction="push",
+        slimwork=slimwork,
         finalize=lambda state, iters, dirs:
             (state["x"].astype(jnp.int32) - 1, iters))
-    return lambda cols, row_block, row_vertex: run(
-        cols, row_block, row_vertex, jnp.asarray(0, jnp.int32), ())
+    return lambda *args: run(*args, jnp.asarray(0, jnp.int32), ())

@@ -55,11 +55,12 @@ import numpy as np
 
 from . import debug
 from . import direction as dm
+from . import packing
 from . import semiring as sm
 from .options import (BACKENDS, DIRECTIONS,  # noqa: F401 (home is options)
                       check_choice)
 from .spmv import (slimsell_pull, slimsell_pull_mm, slimsell_spmm,
-                   slimsell_spmv)
+                   slimsell_spmv, slimsell_spmv_packed)
 
 Array = jax.Array
 WORK_LOG = 512  # max logged iterations
@@ -81,6 +82,13 @@ class FixpointSpec:
     host_bits: Optional[Callable[..., tuple]] = None
     batched: bool = False
     directions: tuple = ("push",)
+    # SlimSell-B: the spec's sweep payload is bit-packed uint32 words
+    # (``core.packing``). Non-batched packed specs sweep a packed frontier
+    # bitmap uint32[ceil(n/32)] through the word-gather SpMV; batched packed
+    # specs sweep packed root *planes* [n, ceil(B/32)] through the word-wise
+    # SpMM. Packed specs are push-only (their payload carries no per-row
+    # ordering for the pull early-exit) — front doors enforce it.
+    packed: bool = False
 
 
 @dataclasses.dataclass
@@ -110,9 +118,14 @@ def _pull_tile_mask(tiled, nf_rows: Array) -> Array:
 
 
 def _sweep(spec: FixpointSpec, tiled, x, w, tile_mask, rows, backend: str,
-           *, pull: bool):
+           *, pull: bool, n_bits: Optional[int] = None):
     """One semiring sweep: the spec's shape (vector/matrix) and direction
-    select between the three core primitives."""
+    select between the core primitives.
+
+    ``n_bits`` is the live-bit count of packed sweeps (n for the packed
+    bitmap SpMV, the batch width B for packed planes) — threaded to the
+    sanitizer's tail-word check; None skips it.
+    """
     sr = sm.get(spec.sr_name)
     if pull:
         if spec.batched:
@@ -123,13 +136,20 @@ def _sweep(spec: FixpointSpec, tiled, x, w, tile_mask, rows, backend: str,
                               tile_mask=tile_mask, backend=backend)
         debug.check_sweep(sr, y)
         return y
+    if spec.packed and not spec.batched:
+        if n_bits is None:
+            n_bits = tiled.n
+        y = slimsell_spmv_packed(tiled, x, tile_mask=tile_mask,
+                                 backend=backend)
+        debug.check_sweep(sr, y, n_bits=n_bits)
+        return y
     if spec.batched:
         y = slimsell_spmm(sr, tiled, x, weights=w, tile_mask=tile_mask,
                           backend=backend)
     else:
         y = slimsell_spmv(sr, tiled, x, weights=w, tile_mask=tile_mask,
                           backend=backend)
-    debug.check_sweep(sr, y)
+    debug.check_sweep(sr, y, n_bits=n_bits if spec.packed else None)
     return y
 
 
@@ -211,7 +231,9 @@ def _fixpoint_loop(spec: FixpointSpec, tiled, ctx, state, *,
                         pull_rows = (nf & (dnext == dm.PULL)[None, :]).any(axis=1)
                         mask = dm.push_tile_mask(tiled, push_rows) \
                             | _pull_tile_mask(tiled, pull_rows)
-                y = _sweep(spec, tiled, x, w, mask, None, backend, pull=False)
+                y = _sweep(spec, tiled, x, w, mask, None, backend,
+                           pull=False,
+                           n_bits=batch_width if spec.packed else None)
             state, cont = spec.update(ctx, state, y, k)
             used = mask.sum(dtype=jnp.int32) if (slimwork and mask is not None) \
                 else n_tiles_c
@@ -424,21 +446,31 @@ def fixpoint_handle(spec: FixpointSpec, *, slimwork: bool = True,
 @dataclasses.dataclass
 class _SubsetTiled:
     """Duck-typed SlimSellTiled view over a compacted (or shard-local) tile
-    set. ``wts`` rides along only for weighted (SSSP) steps."""
+    set. ``wts`` rides along only for weighted (SSSP) steps; ``inc_src`` /
+    ``inc_tile`` only when the shard carries its own push index (the
+    distributed SlimWork push masks) — entries padded past a shard's real
+    pair count point at tile id ``n_tiles`` so segment ops drop them."""
     cols: Array
     row_block: Array
     row_vertex: Array
     n: int
     n_chunks: int
     wts: Optional[Array] = None
+    inc_src: Optional[Array] = None
+    inc_tile: Optional[Array] = None
+
+    @property
+    def n_tiles(self) -> int:
+        return self.cols.shape[0]
 
 
 jax.tree_util.register_pytree_node(
     _SubsetTiled,
-    lambda t: ((t.cols, t.row_block, t.row_vertex, t.wts), (t.n, t.n_chunks)),
+    lambda t: ((t.cols, t.row_block, t.row_vertex, t.wts,
+                t.inc_src, t.inc_tile), (t.n, t.n_chunks)),
     lambda aux, ch: _SubsetTiled(cols=ch[0], row_block=ch[1],
                                  row_vertex=ch[2], n=aux[0], n_chunks=aux[1],
-                                 wts=ch[3]),
+                                 wts=ch[3], inc_src=ch[4], inc_tile=ch[5]),
 )
 
 
@@ -542,9 +574,15 @@ def _zero_step_impl(spec: FixpointSpec, n: int, ctx, state, k,
     """Update against an all-zero sweep result: what an empty tile set
     computes. BFS-style specs report no change and terminate; phase-carrying
     specs (delta-stepping) still advance their phase. ``width`` is the batch
-    width for batched specs (their sweep result is [n, B])."""
+    width for batched specs (their sweep result is [n, B]; packed batched
+    specs sweep word planes [n, ceil(B/32)], packed single-source specs a
+    word bitmap [ceil(n/32)])."""
     sr = sm.get(spec.sr_name)
-    shape = (n,) if width is None else (n, width)
+    if spec.packed:
+        shape = (packing.packed_words(n),) if width is None \
+            else (n, packing.packed_words(width))
+    else:
+        shape = (n,) if width is None else (n, width)
     y = jnp.full(shape, sr.zero, sr.dtype)
     return spec.update(ctx, state, y, k)
 
@@ -675,7 +713,9 @@ def dist_step(spec: FixpointSpec, ctx, local, state, k, dnow, *,
     combines the per-device partial sweeps (each edge lives in exactly one
     (row, column) block, so the combine is exact for every semiring).
 
-    push — local SpMV/SpMM over the frontier's column slice;
+    push — local SpMV/SpMM over the frontier's column slice, SlimWork-masked
+    to the tiles holding a frontier column when the shard carries its own
+    push index (``local.inc_src`` / ``local.inc_tile``);
     pull — row sweep over the shard's own not-final rows only (SlimWork's
     tile criterion on the local ``row_vertex``), which is the "local row
     sweep + row-axis gather" decomposition: other shards' rows contribute
@@ -690,7 +730,19 @@ def dist_step(spec: FixpointSpec, ctx, local, state, k, dnow, *,
     w = spec.weights(ctx, state) if spec.weights is not None else None
 
     def push_fn(state):
-        return _sweep(spec, local, x_local, w, None, None, backend,
+        # per-shard SlimWork push mask: the partition's own (localized
+        # column, tile) incidence pairs select the tiles holding >=1
+        # frontier column of THIS shard's column range. jnp-only on the
+        # mesh, for the same interpret-mode pallas scalar-prefetch reason
+        # as the pull mask below
+        mask = None
+        if backend == "jnp" and local.inc_src is not None:
+            sb = spec.source_bits(ctx, state, k)
+            sb_pad = ((0, Co * n_col - n),) + ((0, 0),) * (sb.ndim - 1)
+            sb_local = jax.lax.dynamic_slice_in_dim(
+                jnp.pad(sb, sb_pad), j * n_col, n_col, axis=0)
+            mask = dm.push_tile_mask(local, sb_local)
+        return _sweep(spec, local, x_local, w, mask, None, backend,
                       pull=False)
 
     def pull_fn(state):
@@ -725,9 +777,10 @@ def dist_choose_direction(spec: FixpointSpec, ctx, deg, state, k, dcur, n: int):
     """Replicated Beamer α/β choice for the distributed strategy.
 
     Batched specs collapse to ONE direction for the whole batch (mean of the
-    per-column statistics): the 2D partition has no per-shard push index, so
-    a per-column union mask would buy nothing — the batch-level switch keeps
-    the introspection meaningful while every column stays exact.
+    per-column statistics): one SpMM sweep advances every column on each
+    active tile, so the union tile mask is the only one that matters — the
+    batch-level switch keeps the introspection meaningful while every
+    column stays exact.
     """
     sb = spec.source_bits(ctx, state, k)
     nf = spec.not_final(ctx, state)

@@ -26,6 +26,12 @@ import math
 
 import numpy as np
 
+# SlimSell-B packed-bitmap utilities, re-exported as part of the formats
+# surface: frontier/visited bitmaps are a *layout* concern (32 vertices per
+# uint32 word; core.packing owns the geometry)
+from .packing import (PACK_BITS, pack_bits, pack_bits_np,  # noqa: F401
+                      packed_words, unpack_bits, unpack_bits_np)
+
 
 # --------------------------------------------------------------------------- CSR
 
@@ -213,11 +219,15 @@ def layout_signature(tiled: "SlimSellTiled") -> tuple:
     jitted ``FixpointHandle`` compiled for one serves the other without
     retracing. It deliberately hashes *shapes*, not contents: the contents
     are traced arguments.
+
+    The trailing element is the SlimSell-B packed dimension — the word
+    count ``ceil(n/32)`` of the layout's packed frontier/visited bitmaps —
+    so packed-path traces (whose state shapes depend on it) key correctly.
     """
     return (int(tiled.n), int(tiled.m_undirected), int(tiled.C),
             int(tiled.L), int(tiled.sigma), int(tiled.n_chunks),
             int(tiled.n_tiles), tiled.inc_src is not None,
-            tiled.wts is not None)
+            tiled.wts is not None, packed_words(tiled.n))
 
 
 def build_push_index(cols: np.ndarray,

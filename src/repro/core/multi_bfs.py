@@ -44,9 +44,11 @@ import numpy as np
 
 from . import direction as dm
 from . import engine as eng
+from . import packing
 from . import semiring as sm
-from .bfs import (_check_bfs_options, _frontier_payload, _host_direction_bits,
-                  _ids1, _not_final, dp_transform, semiring_update)
+from .bfs import (_check_bfs_options, _check_packed, _frontier_payload,
+                  _host_direction_bits, _ids1, _not_final, dp_transform,
+                  semiring_update)
 from .engine import DIRECTIONS, WORK_LOG, FixpointSpec  # noqa: F401
 from .options import EngineConfig, resolve_config
 
@@ -154,12 +156,63 @@ def multi_bfs_spec(sr_name: str) -> FixpointSpec:
     )
 
 
+@functools.lru_cache(maxsize=None)
+def packed_multi_bfs_spec(B: int) -> FixpointSpec:
+    """SlimSell-B multi-source BFS: ``B`` Graph500 roots become
+    ``ceil(B/32)`` packed *planes* — frontier/visited are ``uint32[n,
+    ceil(B/32)]`` words (roots packed along axis 1) and one word-wise SpMM
+    advances 32 traversals per lane element.
+
+    Same per-column recurrence as ``multi_bfs_spec("boolean")``; the mask
+    math is word-wise and only the distance stamp unpacks. Cached per batch
+    width ``B`` (the plane geometry must be static in the jitted loop).
+    Push-only — see ``FixpointSpec.packed``.
+    """
+
+    def init_state(n, roots, ctx):
+        cols = jnp.arange(B)
+        d = jnp.full((n, B), -1, jnp.int32).at[roots, cols].set(0)
+        bits = jnp.zeros((n, B), bool).at[roots, cols].set(True)
+        f = packing.pack_bits(bits, axis=1)          # [n, ceil(B/32)]
+        return {"d": d, "f": f, "visited": f}
+
+    def update(ctx, state, y, k):
+        new_w = y & ~state["visited"]
+        visited = state["visited"] | new_w
+        new_bits = packing.unpack_bits(new_w, B, axis=1)   # [n, B]
+        d = jnp.where(new_bits, k.astype(jnp.int32), state["d"])
+        return ({"d": d, "f": new_w, "visited": visited},
+                jnp.any(new_w != jnp.asarray(0, jnp.uint32)))
+
+    def host_bits(state, k, need_sb, need_nf):
+        # push-only: only source bits are ever requested; run_hostloop
+        # unions the unpacked columns into the shared tile set
+        sb = packing.unpack_bits_np(np.asarray(state["f"]), B, axis=1) \
+            if need_sb else None
+        return sb, None
+
+    return FixpointSpec(
+        name="multi_bfs/boolean_packed",
+        sr_name="boolean_packed",
+        batched=True,
+        directions=("push",),
+        packed=True,
+        init_state=init_state,
+        frontier=lambda ctx, state, k: state["f"],
+        source_bits=lambda ctx, state, k: packing.unpack_bits(
+            state["f"], B, axis=1),
+        update=update,
+        host_bits=host_bits,
+    )
+
+
 # ----------------------------------------------------------------- public API
 
 
 def multi_source_bfs(tiled, roots: Sequence[int],
                      semiring: str = "tropical", *,
                      need_parents: bool = False, slimwork: bool = True,
+                     packed: bool = False,
                      batch_size: Optional[int] = None,
                      max_iters: Optional[int] = None,
                      log_work: bool = False,
@@ -180,10 +233,15 @@ def multi_source_bfs(tiled, roots: Sequence[int],
     hostloop is push-only — union tile masks, one host sweep per level).
     The per-call ``backend``/``direction``/``mode`` kwargs are the
     deprecated spelling.
+    packed: SlimSell-B — pack the B root columns into ``ceil(B/32)`` uint32
+    word planes and sweep word-wise (requires ``semiring="boolean"``, push
+    direction); bit-identical distances, 32x narrower frontier state.
     """
     cfg = resolve_config("multi_source_bfs", config, mode=mode,
                          backend=backend, direction=direction)
     _check_bfs_options("multi_source_bfs", semiring, cfg.direction)
+    if packed:
+        _check_packed("multi_source_bfs", semiring, cfg.direction)
     if cfg.direction in ("push", "auto") and slimwork \
             and getattr(tiled, "inc_src", None) is None:
         raise ValueError("direction-optimizing push masks need the push index;"
@@ -193,13 +251,15 @@ def multi_source_bfs(tiled, roots: Sequence[int],
         raise ValueError("multi_source_bfs needs at least one root")
     n = tiled.n
     max_iters = int(max_iters) if max_iters is not None else n
-    spec = multi_bfs_spec(semiring)
 
     d_out = np.empty((roots.size, n), np.int32)
     p_out = np.empty((roots.size, n), np.int32) if need_parents else None
     iters, work_rows, plog_rows = [], [], []
     for start, batch, batch_p in _iter_batches(roots, batch_size,
                                                cfg.backend):
+        # the packed spec's plane geometry is static per batch width
+        spec = packed_multi_bfs_spec(batch_p.size) if packed \
+            else multi_bfs_spec(semiring)
         with cfg.applied():
             if cfg.mode == "fused":
                 res = eng.run_fused(spec, tiled, jnp.asarray(batch_p),

@@ -56,8 +56,11 @@ QUERY_STATUSES = ("ok", "timeout", "shed")
 
 # registered semiring names; core.semiring builds the object registry and
 # asserts it matches this tuple at import time (the law verifier's
-# cross-check then guarantees the kernel-side tables agree behaviorally)
-SEMIRINGS = ("tropical", "real", "boolean", "selmax", "minplus")
+# cross-check then guarantees the kernel-side tables agree behaviorally).
+# "boolean_packed" is SlimSell-B's word domain: boolean over packed uint32
+# words, reached through the packed=True flag rather than named directly.
+SEMIRINGS = ("tropical", "real", "boolean", "selmax", "minplus",
+             "boolean_packed")
 
 # the BFS engines accept exactly the paper's four; minplus is the
 # SSSP/weighted operator and is rejected by bfs()/multi_source_bfs()

@@ -1,0 +1,242 @@
+"""SlimSell-B bit-packing: 32 reachability bits per uint32 word.
+
+The boolean semiring carries exactly one bit of payload per vertex, yet the
+lane-boolean path spends a full 32-bit lane on it. This module is the
+*single* home of the packed representation: frontiers/visited bitmaps as
+``uint32[ceil(n/32)]`` words (bit ``v & 31`` of word ``v >> 5`` is vertex
+``v``), plus every primitive the engine needs over that domain — pack /
+unpack (device and host twins), the word-wise OR reductions (last-axis
+fold, segment combine, cross-device collective), and the tail-word mask.
+
+**Every bit-twiddling constant lives here and only here** — the repo lint
+rule ``packed-constants`` fails any ``31`` / ``>> 5`` / ``0xFFFFFFFF``
+outside this module, so the packing geometry cannot fork.
+
+Tail-word rule: the last word of an n-bit bitmap has ``n % 32`` live bits
+(when nonzero); all padding bits above them are **kept zero everywhere** —
+``pack_bits`` produces them zero, the sweeps OR together packed words (OR
+preserves zeros), and ``debug.check_sweep(..., n_bits=n)`` asserts the
+invariant under the sanitizer. Unpack therefore never needs masking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: bits per packed word (the lane width of the packed representation)
+PACK_BITS = 32
+
+#: the all-ones word: packed-boolean ``one`` / the implicit packed edge
+#: value (AND-identity). A numpy scalar — the plain Python literal
+#: overflows ``jnp.asarray`` under x32.
+FULL_WORD = np.uint32(0xFFFFFFFF)
+
+_SHIFT = 5   # log2(PACK_BITS): v >> 5 is v's word
+_MASK = 31   # PACK_BITS - 1:   v & 31 is v's bit
+
+
+def packed_words(n_bits: int) -> int:
+    """Words needed for an ``n_bits``-bit bitmap: ceil(n / 32)."""
+    return -(-int(n_bits) // PACK_BITS)
+
+
+def word_of(v):
+    """Word index of vertex ``v`` (array or scalar): ``v >> 5``."""
+    return v >> _SHIFT
+
+
+def bit_of(v):
+    """Bit position of vertex ``v`` within its word: ``v & 31``."""
+    return v & _MASK
+
+
+def tail_mask(n_bits: int) -> np.uint32:
+    """uint32 mask of the live bits in the *last* word of an ``n_bits``-bit
+    bitmap (all-ones when ``n_bits`` is a multiple of 32)."""
+    r = int(n_bits) % PACK_BITS
+    if r == 0:
+        return FULL_WORD
+    return np.uint32((1 << r) - 1)
+
+
+def padding_mask(n_bits: int) -> np.ndarray:
+    """uint32[W] per-word mask of the *live* bits — all-ones except the
+    tail word. ``words & ~padding_mask`` must be zero everywhere (the
+    tail-word invariant ``debug.check_sweep`` asserts)."""
+    W = packed_words(n_bits)
+    m = np.full(W, FULL_WORD, np.uint32)
+    if W:
+        m[-1] = tail_mask(n_bits)
+    return m
+
+
+# ------------------------------------------------------------- pack / unpack
+
+
+def pack_bits(bits, axis: int = -1):
+    """Pack a boolean array along ``axis`` into uint32 words.
+
+    ``bits[..., n]`` -> ``uint32[..., ceil(n/32)]``; bit ``i & 31`` of word
+    ``i >> 5`` is ``bits[..., i]``. Padding bits beyond ``n`` are zero.
+    """
+    bits = jnp.asarray(bits)
+    axis = axis % bits.ndim
+    n = bits.shape[axis]
+    W = packed_words(n)
+    pad = [(0, 0)] * bits.ndim
+    pad[axis] = (0, W * PACK_BITS - n)
+    b = jnp.pad(bits.astype(jnp.uint32), pad)
+    shape = b.shape[:axis] + (W, PACK_BITS) + b.shape[axis + 1:]
+    b = b.reshape(shape)
+    weights = jnp.left_shift(
+        jnp.asarray(1, jnp.uint32),
+        jnp.arange(PACK_BITS, dtype=jnp.uint32))
+    weights = weights.reshape((1,) * (axis + 1) + (PACK_BITS,)
+                              + (1,) * (bits.ndim - axis - 1))
+    return jnp.sum(b * weights, axis=axis + 1, dtype=jnp.uint32)
+
+
+def unpack_bits(words, n_bits: int, axis: int = -1):
+    """Inverse of :func:`pack_bits`: ``uint32[..., W]`` -> ``bool[..., n]``
+    along ``axis`` (padding bits are dropped)."""
+    words = jnp.asarray(words)
+    axis = axis % words.ndim
+    shifts = jnp.arange(PACK_BITS, dtype=jnp.uint32)
+    shifts = shifts.reshape((1,) * (axis + 1) + (PACK_BITS,)
+                            + (1,) * (words.ndim - axis - 1))
+    bits = (jnp.expand_dims(words, axis + 1) >> shifts) \
+        & jnp.asarray(1, jnp.uint32)
+    shape = words.shape[:axis] + (words.shape[axis] * PACK_BITS,) \
+        + words.shape[axis + 1:]
+    bits = bits.reshape(shape).astype(bool)
+    index = [slice(None)] * bits.ndim
+    index[axis] = slice(0, int(n_bits))
+    return bits[tuple(index)]
+
+
+def pack_bits_np(bits: np.ndarray, axis: int = -1) -> np.ndarray:
+    """Host (numpy) twin of :func:`pack_bits` for the hostloop strategy."""
+    bits = np.asarray(bits, bool)
+    axis = axis % bits.ndim
+    n = bits.shape[axis]
+    W = packed_words(n)
+    pad = [(0, 0)] * bits.ndim
+    pad[axis] = (0, W * PACK_BITS - n)
+    b = np.pad(bits, pad).astype(np.uint32)
+    shape = b.shape[:axis] + (W, PACK_BITS) + b.shape[axis + 1:]
+    b = b.reshape(shape)
+    weights = (np.uint32(1) << np.arange(PACK_BITS, dtype=np.uint32))
+    weights = weights.reshape((1,) * (axis + 1) + (PACK_BITS,)
+                              + (1,) * (bits.ndim - axis - 1))
+    return (b * weights).sum(axis=axis + 1).astype(np.uint32)
+
+
+def unpack_bits_np(words: np.ndarray, n_bits: int,
+                   axis: int = -1) -> np.ndarray:
+    """Host (numpy) twin of :func:`unpack_bits`."""
+    words = np.asarray(words, np.uint32)
+    axis = axis % words.ndim
+    shifts = np.arange(PACK_BITS, dtype=np.uint32)
+    shifts = shifts.reshape((1,) * (axis + 1) + (PACK_BITS,)
+                            + (1,) * (words.ndim - axis - 1))
+    bits = (np.expand_dims(words, axis + 1) >> shifts) & np.uint32(1)
+    shape = words.shape[:axis] + (words.shape[axis] * PACK_BITS,) \
+        + words.shape[axis + 1:]
+    bits = bits.reshape(shape).astype(bool)
+    index = [slice(None)] * bits.ndim
+    index[axis] = slice(0, int(n_bits))
+    return bits[tuple(index)]
+
+
+def gather_bits(words, idx):
+    """Gather single bits out of a packed bitmap: returns ``uint32`` 0/1 of
+    shape ``idx.shape`` where element ``i`` is bit ``idx[i] & 31`` of word
+    ``words[idx[i] >> 5]`` — the packed twin of the frontier gather
+    ``x[col]`` (callers pre-clamp padding indices to a safe vertex)."""
+    w = jnp.take(jnp.asarray(words, jnp.uint32), word_of(idx), axis=0)
+    return (w >> bit_of(idx).astype(jnp.uint32)) & jnp.asarray(1, jnp.uint32)
+
+
+# ------------------------------------------------------- word-wise reductions
+
+
+def or_reduce(x, axes: Sequence[int]):
+    """Bitwise-OR fold over ``axes`` (the packed twin of a semiring-add
+    reduction; identity 0)."""
+    return jax.lax.reduce(x, np.uint32(0), jnp.bitwise_or, tuple(axes))
+
+
+def or_reduce_last(x):
+    """Bitwise-OR fold over the last axis."""
+    return or_reduce(x, (x.ndim - 1,))
+
+
+def segment_or(data, segment_ids, num_segments: int, *,
+               indices_are_sorted: bool = False):
+    """Bitwise-OR segment combine: ``out[s] = OR of data[i] where
+    segment_ids[i] == s`` (empty segments -> 0, OR's identity).
+
+    ``jax.ops`` has no segment-OR and XLA no scatter-OR, and segment-max is
+    *wrong* for multi-bit words (max(0b01, 0b10) drops a bit), so this is a
+    segmented inclusive ``associative_scan`` over (segment-start flag,
+    word) pairs — the scanned value at each segment's last element is the
+    full OR of that segment — gathered at the segment ends. O(K log K)
+    depth, fully vectorized, any backend.
+    """
+    data = jnp.asarray(data, jnp.uint32)
+    segment_ids = jnp.asarray(segment_ids)
+    if not indices_are_sorted:
+        order = jnp.argsort(segment_ids)
+        segment_ids = jnp.take(segment_ids, order, axis=0)
+        data = jnp.take(data, order, axis=0)
+    k = data.shape[0]
+    starts = jnp.concatenate([
+        jnp.ones((1,), bool),
+        segment_ids[1:] != segment_ids[:-1]]) if k else jnp.zeros((0,), bool)
+
+    def combine(a, b):
+        fa, va = a
+        fb, vb = b
+        keep = fb.reshape(fb.shape + (1,) * (va.ndim - fb.ndim))
+        return fa | fb, jnp.where(keep, vb, va | vb)
+
+    _, scanned = jax.lax.associative_scan(combine, (starts, data))
+    counts = jax.ops.segment_sum(jnp.ones((k,), jnp.int32), segment_ids,
+                                 num_segments=num_segments,
+                                 indices_are_sorted=True)
+    ends = jnp.cumsum(counts) - 1
+    vals = jnp.take(scanned, jnp.maximum(ends, 0), axis=0)
+    live = (counts > 0).reshape((num_segments,) + (1,) * (data.ndim - 1))
+    return jnp.where(live, vals, jnp.asarray(0, jnp.uint32))
+
+
+def por(x, axes):
+    """Cross-device bitwise OR (the packed twin of ``Semiring.pall``).
+
+    There is no OR collective in XLA; ``all_gather`` along each mesh axis
+    followed by an OR fold of the gathered leading axis is exact and avoids
+    unpacking to bits on the wire.
+    """
+    for ax in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+        g = jax.lax.all_gather(x, ax)
+        x = or_reduce(g, (0,))
+    return x
+
+
+@functools.lru_cache(maxsize=128)
+def _cached_padding_mask(n_bits: int) -> np.ndarray:
+    # cache the HOST array only: jnp.asarray inside a jit/checkify trace
+    # stages the constant as a tracer, and caching a tracer leaks it into
+    # later traces (UnexpectedTracerError); callers convert at use site
+    return padding_mask(n_bits)
+
+
+def check_tail_zero_host(words: np.ndarray, n_bits: int) -> bool:
+    """Host check of the tail-word invariant: every padding bit above
+    ``n_bits`` is zero. The packed word axis must be the LAST axis."""
+    words = np.asarray(words, np.uint32)
+    return bool((words & ~padding_mask(n_bits)).max(initial=0) == 0)

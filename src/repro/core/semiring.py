@@ -50,12 +50,13 @@ names.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from . import options
+from . import packing
 
 Array = jax.Array
 
@@ -65,10 +66,16 @@ class Semiring:
     name: str
     dtype: jnp.dtype
     zero: float  # additive identity == padding contribution
-    one: float   # multiplicative identity == implicit SlimSell edge value
+    one: float   # multiplicative identity
     add: Callable[[Array, Array], Array]
     mul: Callable[[Array, Array], Array]
-    reduction: str = "sum"  # add-monoid kind: "min" | "max" | "sum"
+    reduction: str = "sum"  # add-monoid kind: "min" | "max" | "sum" | "or"
+    # the implicit SlimSell edge value the sweep multiplies in (derived
+    # in-register, never stored). For the scalar semirings this is the
+    # NUMBER 1 (one hop / one path / one reachability bit); the packed
+    # boolean semiring needs the all-ones word instead — mul(1, word)
+    # would be word & 1 and drop 31 vertices per lane element.
+    edge_value: Any = 1
 
     def segment_reduce(self, data: Array, segment_ids: Array, num_segments: int) -> Array:
         """Semiring-add reduction by key (used to combine SlimChunk tiles)."""
@@ -76,6 +83,9 @@ class Semiring:
             return jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
         if self.reduction == "max":
             return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+        if self.reduction == "or":
+            return packing.segment_or(data, segment_ids,
+                                      num_segments=num_segments)
         return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
 
     def pall(self, x: Array, axis_name: str) -> Array:
@@ -84,6 +94,8 @@ class Semiring:
             return jax.lax.pmin(x, axis_name)
         if self.reduction == "max":
             return jax.lax.pmax(x, axis_name)
+        if self.reduction == "or":
+            return packing.por(x, axis_name)
         return jax.lax.psum(x, axis_name)
 
     def reduce_last(self, x: Array) -> Array:
@@ -92,6 +104,8 @@ class Semiring:
             return x.min(axis=-1)
         if self.reduction == "max":
             return x.max(axis=-1)
+        if self.reduction == "or":
+            return packing.or_reduce_last(x)
         return x.sum(axis=-1)
 
 
@@ -126,7 +140,22 @@ MINPLUS = Semiring(
     add=jnp.minimum, mul=lambda a, b: a + b, reduction="min",
 )
 
-SEMIRINGS = {s.name: s for s in (TROPICAL, REAL, BOOLEAN, SELMAX, MINPLUS)}
+# SlimSell-B: the boolean semiring over packed uint32 *words* — one lane
+# element carries 32 vertices' reachability bits. add = word-wise OR,
+# mul = word-wise AND, one = the all-ones word (AND identity), and the
+# implicit edge value is also the all-ones word (an edge transmits every
+# bit of the gathered word). The word domain is the 32-fold product of the
+# boolean semiring, so the laws hold bit-parallel; ``core.packing`` owns
+# the bit geometry, this entry only names the algebra.
+BOOLEAN_PACKED = Semiring(
+    name="boolean_packed", dtype=jnp.uint32,
+    zero=0, one=packing.FULL_WORD,
+    add=jnp.bitwise_or, mul=jnp.bitwise_and, reduction="or",
+    edge_value=packing.FULL_WORD,
+)
+
+SEMIRINGS = {s.name: s for s in (TROPICAL, REAL, BOOLEAN, SELMAX, MINPLUS,
+                                 BOOLEAN_PACKED)}
 
 # core.options is the canonical name list (the single source of truth the
 # lint rule and law verifier check against); drift is an import-time failure

@@ -49,6 +49,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from . import packing
 from .semiring import Semiring
 from .options import BACKENDS, DEFAULT_BACKEND  # noqa: F401 (canonical home)
 
@@ -83,9 +84,10 @@ def tile_contributions(sr: Semiring, cols: Array, x: Array,
         w = edge_weight(row_vertex_of_tile, safe)  # [T, C, L]
         contrib = sr.mul(w, gathered)
     else:
-        # implicit edge value is 1 in every semiring: tropical -> x+1 (hop),
-        # real/boolean/selmax -> x. Derived in-register, never loaded (SlimSell).
-        contrib = sr.mul(jnp.asarray(1, gathered.dtype), gathered)
+        # implicit edge value: tropical -> x+1 (hop), real/boolean/selmax ->
+        # x (the number 1), boolean_packed -> x (the all-ones word). Derived
+        # in-register, never loaded (SlimSell).
+        contrib = sr.mul(jnp.asarray(sr.edge_value, gathered.dtype), gathered)
     return jnp.where(pad, jnp.asarray(sr.zero, contrib.dtype), contrib)
 
 
@@ -232,6 +234,9 @@ def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
                 "callable edge weights are jnp-only; the pallas backend "
                 "derives the GCN weight via repro.kernels.ops.spmm(weighted=True)")
         from repro.kernels import ops  # deferred: kernels import this module
+        if sr.reduction == "or":
+            # packed word planes take the dedicated word-wise kernel
+            return ops.spmm_packed(tiled, X, tile_mask=tile_mask)
         return ops.spmm(sr.name, tiled, X, tile_mask=tile_mask,
                         weights=weights)
     pad = tiled.cols < 0
@@ -244,12 +249,46 @@ def slimsell_spmm(sr: Semiring, tiled, X: Array, *,
         w = edge_weight(rv_tile, safe)
         gathered = sr.mul(w[..., None], gathered)
     else:
-        gathered = sr.mul(jnp.asarray(1, gathered.dtype), gathered)
+        gathered = sr.mul(jnp.asarray(sr.edge_value, gathered.dtype), gathered)
     contrib = jnp.where(pad[..., None], jnp.asarray(sr.zero, gathered.dtype), gathered)
     if sr.reduction == "min":
         tile_red = contrib.min(axis=2)
     elif sr.reduction == "max":
         tile_red = contrib.max(axis=2)
+    elif sr.reduction == "or":
+        tile_red = packing.or_reduce(contrib, (2,))
     else:
         tile_red = contrib.sum(axis=2)  # [T, C, d]
     return _combine_and_scatter(sr, tiled, tile_red, tile_mask)
+
+
+def slimsell_spmv_packed(tiled, x_packed: Array, *,
+                         tile_mask: Optional[Array] = None,
+                         backend: Optional[str] = None) -> Array:
+    """SlimSell-B single-source sweep: packed frontier in, packed result out.
+
+    ``x_packed`` is ``uint32[ceil(n/32)]`` — bit ``v`` set iff vertex ``v``
+    is in the frontier (``core.packing`` geometry). One sweep computes the
+    packed reachability ``y[v] = OR_u A[v,u] & x_bit[u]``: gather the
+    *word* holding each column's bit, extract the bit in-register (the
+    packed twin of the implicit-1 CMP+BLEND derivation — still no stored
+    ``val``), OR-reduce the column slots, combine SlimChunk tiles, scatter
+    to vertex space, and re-pack. Returns ``uint32[ceil(n/32)]`` with all
+    tail padding bits zero.
+
+    The jnp path is the oracle; ``backend="pallas"`` routes to the
+    word-wise kernel in ``kernels/slimsell_packed.py``.
+    """
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels import ops  # deferred: kernels import this module
+        return ops.spmv_packed(tiled, x_packed, tile_mask=tile_mask)
+    from .semiring import BOOLEAN  # deferred: import-order freedom only
+    sr = BOOLEAN
+    cols = tiled.cols
+    pad = cols < 0
+    safe = jnp.where(pad, 0, cols)
+    bit = packing.gather_bits(x_packed, safe)           # [T, C, L] 0/1
+    hit = jnp.where(pad, 0, bit.astype(jnp.int32))
+    tile_red = hit.max(axis=-1)                         # [T, C] OR of 0/1
+    y_bits = _combine_and_scatter(sr, tiled, tile_red, tile_mask)
+    return packing.pack_bits(y_bits > 0)

@@ -12,10 +12,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core import semiring as sm
 from repro.core.options import check_choice, resolve_interpret
 from .slimsell_spmv import slimsell_spmv_pallas, semiring_ops
 from .slimsell_spmm import slimsell_spmm_pallas
+from .slimsell_packed import (slimsell_spmm_packed_pallas,
+                              slimsell_spmv_packed_pallas)
 from .slimsell_pull import slimsell_pull_mm_pallas, slimsell_pull_pallas
 from .embedding_bag import embedding_bag_pallas
 
@@ -88,6 +91,55 @@ def spmv(sr_name: str, tiled, x, tile_mask=None, weights=None, interpret=None):
         tiled.cols, tile_ids, tiled.row_block, n_active, x,
         sr_name=sr_name, n_chunks=tiled.n_chunks, interpret=interpret,
         wts=weights)
+    return _scatter_blocks(sr, tiled, y_blocks[: tiled.n_chunks], tile_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_packed(tiled, x_words, tile_mask=None, interpret=None):
+    """SlimSell-B packed-boolean SpMV via the word-wise Pallas kernel.
+
+    x_words: uint32[ceil(n/32)] packed frontier bitmap; returns the packed
+    result bitmap of the same shape. The kernel produces 0/1 hits in
+    chunk-row space; the shared scatter epilogue (boolean semiring — the
+    packed domain's per-bit algebra) lands them in vertex space, where each
+    vertex appears exactly once, and ``pack_bits`` re-packs.
+    """
+    interpret = resolve_interpret(interpret)
+    T = tiled.cols.shape[0]
+    if tile_mask is None:
+        tile_ids = jnp.arange(T, dtype=jnp.int32)
+        n_active = jnp.asarray([T], jnp.int32)
+    else:
+        tile_ids, n_active = compact_tile_ids(tile_mask)
+    y_blocks = slimsell_spmv_packed_pallas(
+        tiled.cols, tile_ids, tiled.row_block, n_active,
+        x_words.astype(jnp.uint32),
+        n_chunks=tiled.n_chunks, interpret=interpret)
+    bits = _scatter_blocks(sm.get("boolean"), tiled,
+                           y_blocks[: tiled.n_chunks], tile_mask)
+    return packing.pack_bits(bits > 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmm_packed(tiled, X_words, tile_mask=None, interpret=None):
+    """SlimSell-B packed-plane SpMM via the word-wise Pallas kernel.
+
+    X_words: uint32[n, Wb] packed frontier planes (32 roots per word);
+    returns Y uint32[n, Wb]. Chunk-row blocks scatter to vertex space with
+    the packed semiring's segment-OR.
+    """
+    interpret = resolve_interpret(interpret)
+    sr = sm.get("boolean_packed")
+    T = tiled.cols.shape[0]
+    if tile_mask is None:
+        tile_ids = jnp.arange(T, dtype=jnp.int32)
+        n_active = jnp.asarray([T], jnp.int32)
+    else:
+        tile_ids, n_active = compact_tile_ids(tile_mask)
+    y_blocks = slimsell_spmm_packed_pallas(
+        tiled.cols, tile_ids, tiled.row_block, n_active,
+        X_words.astype(jnp.uint32),
+        n_chunks=tiled.n_chunks, interpret=interpret)
     return _scatter_blocks(sr, tiled, y_blocks[: tiled.n_chunks], tile_mask)
 
 

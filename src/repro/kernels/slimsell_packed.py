@@ -1,0 +1,233 @@
+"""Pallas TPU kernels: SlimSell-B word-wise packed-boolean sweeps.
+
+The boolean semiring moves one reachability *bit* per 32-bit lane element;
+SlimSell-B packs 32 of them into each uint32 word (``core.packing``) and
+sweeps word-wise, so the memory traffic of a boolean sweep shrinks by the
+packing factor. Two kernels share the SlimSell tile structure (SlimChunk
+revisit accumulation + SlimWork scalar-prefetch grid indirection) with the
+scalar kernels:
+
+* ``slimsell_spmv_packed_pallas`` — single-source: the frontier is a packed
+  bitmap ``uint32[ceil(n/32)]`` pinned in VMEM (32x smaller than the lane
+  frontier, DMA'd once). Each column slot gathers the *word* holding its
+  bit and extracts the bit in-register — the packed twin of the paper's
+  CMP+BLEND implicit-``val`` derivation; still nothing stored per edge.
+  The per-row OR over column slots lands in the usual [chunk_blk, C]
+  output block; the wrapper re-packs vertex space.
+* ``slimsell_spmm_packed_pallas`` — multi-source: B roots become
+  ``ceil(B/32)`` packed *planes*; the RHS is ``uint32[n, Wb]`` and one
+  sweep ORs whole words (32 roots per lane element) instead of 32 separate
+  lane columns. add = word-wise OR, mul = word-wise AND with the all-ones
+  implicit edge word (a no-op, derived in-register).
+
+Both kernels register their grid contracts (``@kernel_contract``) over the
+same demo layout as the scalar kernels, so the contract checker proves the
+index maps, lockstep and SlimChunk-contiguity properties of the packed
+grids too.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.registry import KernelCase, demo_layout, kernel_contract
+from repro.core import packing
+from repro.core.options import resolve_interpret
+
+
+def _spmv_packed_kernel(tile_ids_ref, row_block_ref, n_active_ref,
+                        cols_ref, x_ref, out_ref, *, chunk_blk: int):
+    """One grid step = one SlimSell tile over the packed frontier bitmap."""
+    t = pl.program_id(0)
+    tid = tile_ids_ref[t]
+    chunk = row_block_ref[tid]
+    blk = chunk // chunk_blk
+
+    prev_tid = tile_ids_ref[jnp.maximum(t - 1, 0)]
+    prev_blk = row_block_ref[prev_tid] // chunk_blk
+    first_visit = (t == 0) | (blk != prev_blk)
+
+    @pl.when(first_visit)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(t < n_active_ref[0])
+    def _work():
+        cols = cols_ref[0]                       # [C, L]
+        pad = cols < 0
+        safe = jnp.where(pad, 0, cols)
+        xw = x_ref[...]                          # uint32[W], VMEM-resident
+        bit = packing.gather_bits(xw, safe.reshape(-1)).reshape(cols.shape)
+        hit = jnp.where(pad, 0, bit.astype(jnp.int32))
+        red = hit.max(axis=-1)                   # [C]  OR of 0/1 bits
+        row = chunk % chunk_blk
+        cur = pl.load(out_ref, (pl.ds(row, 1), slice(None)))
+        pl.store(out_ref, (pl.ds(row, 1), slice(None)),
+                 jnp.maximum(cur, red[None, :]))
+
+
+def spmv_packed_grid_spec(T, C, L, w_shape, chunk_blk):
+    """The packed-SpMV grid contract, shared by the wrapper and its
+    registered cases. Identical tile/output structure to the scalar SpMV;
+    only the frontier operand shrinks to the packed word vector."""
+    tile_spec = pl.BlockSpec((1, C, L), lambda t, tids, rb, na: (tids[t], 0, 0))
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T,),
+        in_specs=[tile_spec,
+                  pl.BlockSpec(w_shape, lambda t, tids, rb, na: (0,))],
+        out_specs=pl.BlockSpec((chunk_blk, C),
+                               lambda t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0)),
+    )
+
+
+def _spmv_packed_cases():
+    d = demo_layout()
+    T, C, L, cb = d["T"], d["C"], d["L"], d["chunk_blk"]
+    W = packing.packed_words(d["n_pad"])
+    cases = []
+    for scen, ids, n_active in d["scenarios"]:
+        cases.append(KernelCase(
+            name=f"spmv_packed/{scen}",
+            grid_spec=spmv_packed_grid_spec(T, C, L, (W,), cb),
+            scalar_args=(ids, d["row_block"], n_active),
+            in_shapes=[(T, C, L), (W,)],
+            out_shapes=[(d["n_blk"] * cb, C)],
+            chunked_out=[("out", 0)],
+        ))
+    return cases
+
+
+@kernel_contract(_spmv_packed_cases)
+@functools.partial(jax.jit, static_argnames=("chunk_blk", "n_chunks",
+                                             "interpret"))
+def slimsell_spmv_packed_pallas(cols, tile_ids, row_block, n_active, x_words,
+                                *, n_chunks: int, chunk_blk: int = 8,
+                                interpret=None):
+    """Tile-level packed-boolean SpMV. Returns y_blocks int32[n_chunks_pad, C]
+    (chunk-row space, 0/1 hits; the ops wrapper re-packs vertex space).
+
+    cols:      int32[T, C, L]
+    tile_ids:  int32[T]  grid order (SlimWork compaction; tail repeats last)
+    row_block: int32[T]  owning chunk per tile
+    n_active:  int32[1]  number of live grid steps
+    x_words:   uint32[ceil(n/32)] packed frontier bitmap
+    """
+    interpret = resolve_interpret(interpret)
+    T, C, L = cols.shape
+    n_blk = -(-n_chunks // chunk_blk)
+    grid_spec = spmv_packed_grid_spec(T, C, L, x_words.shape, chunk_blk)
+    kernel = functools.partial(_spmv_packed_kernel, chunk_blk=chunk_blk)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blk * chunk_blk, C), jnp.int32),
+        interpret=interpret,
+    )(tile_ids, row_block, n_active, cols, x_words)
+
+
+def _spmm_packed_kernel(tile_ids_ref, row_block_ref, n_active_ref,
+                        cols_ref, x_ref, out_ref, *, chunk_blk: int):
+    """One grid step = one SlimSell tile of the packed-plane SpMM: the RHS
+    rows are uint32 words (32 roots each); OR accumulates whole words."""
+    t = pl.program_id(1)
+    tid = tile_ids_ref[t]
+    chunk = row_block_ref[tid]
+    blk = chunk // chunk_blk
+    prev_tid = tile_ids_ref[jnp.maximum(t - 1, 0)]
+    prev_blk = row_block_ref[prev_tid] // chunk_blk
+    first_visit = (t == 0) | (blk != prev_blk)
+
+    @pl.when(first_visit)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(t < n_active_ref[0])
+    def _work():
+        cols = cols_ref[0]                                  # [C, L]
+        pad = cols < 0
+        safe = jnp.where(pad, 0, cols)
+        xv = x_ref[...]                                     # uint32[n_pad, d_tile]
+        g = jnp.take(xv, safe.reshape(-1), axis=0)          # [C*L, d_tile]
+        g = g.reshape(*cols.shape, xv.shape[-1])            # [C, L, d_tile]
+        # implicit edge value = the all-ones word: mul (AND) is a no-op,
+        # derived in-register — the packed CMP+BLEND analogue
+        contrib = jnp.where(pad[..., None], jnp.asarray(0, jnp.uint32), g)
+        # OR fold over the (static) column-slot axis, unrolled: lane axis
+        # stays the minor word-tile axis so the fold is pure VPU ORs
+        red = contrib[:, 0]
+        for i in range(1, contrib.shape[1]):
+            red = jnp.bitwise_or(red, contrib[:, i])         # [C, d_tile]
+        row = chunk % chunk_blk
+        cur = pl.load(out_ref, (pl.ds(row, 1), slice(None), slice(None)))
+        pl.store(out_ref, (pl.ds(row, 1), slice(None), slice(None)),
+                 jnp.bitwise_or(cur, red[None]))
+
+
+def spmm_packed_grid_spec(T, C, L, n, d, d_tile, chunk_blk):
+    """The packed-SpMM grid contract. Grid (d // d_tile, T): the tile axis
+    is LAST so SlimChunk revisits stay contiguous within each word tile."""
+    tile_spec = pl.BlockSpec((1, C, L), lambda dt, t, tids, rb, na: (tids[t], 0, 0))
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(d // d_tile, T),
+        in_specs=[tile_spec,
+                  pl.BlockSpec((n, d_tile), lambda dt, t, tids, rb, na: (0, dt))],
+        out_specs=pl.BlockSpec(
+            (chunk_blk, C, d_tile),
+            lambda dt, t, tids, rb, na: (rb[tids[t]] // chunk_blk, 0, dt)),
+    )
+
+
+def _spmm_packed_cases():
+    d = demo_layout()
+    T, C, L, cb = d["T"], d["C"], d["L"], d["chunk_blk"]
+    n, width, d_tile = d["n_pad"], 2, 1   # 2 word planes: exercises revisit
+    cases = []
+    for scen, ids, n_active in d["scenarios"]:
+        cases.append(KernelCase(
+            name=f"spmm_packed/{scen}",
+            grid_spec=spmm_packed_grid_spec(T, C, L, n, width, d_tile, cb),
+            scalar_args=(ids, d["row_block"], n_active),
+            in_shapes=[(T, C, L), (n, width)],
+            out_shapes=[(d["n_blk"] * cb, C, width)],
+            chunked_out=[("out", 0)],
+        ))
+    return cases
+
+
+@kernel_contract(_spmm_packed_cases)
+@functools.partial(jax.jit, static_argnames=("chunk_blk", "n_chunks",
+                                             "d_tile", "interpret"))
+def slimsell_spmm_packed_pallas(cols, tile_ids, row_block, n_active, X_words,
+                                *, n_chunks: int, chunk_blk: int = 8,
+                                d_tile: int = 128, interpret=None):
+    """Tile-level packed-plane SpMM. Returns y_blocks uint32[n_chunks_pad,
+    C, Wb] (chunk-row space).
+
+    cols:      int32[T, C, L]
+    tile_ids:  int32[T]  grid order (SlimWork compaction; tail repeats last)
+    row_block: int32[T]  owning chunk per tile
+    n_active:  int32[1]  number of live grid steps
+    X_words:   uint32[n_pad, Wb] packed frontier planes (Wb = ceil(B/32))
+    """
+    interpret = resolve_interpret(interpret)
+    T, C, L = cols.shape
+    n, d = X_words.shape
+    d_tile = min(d_tile, d)
+    if d % d_tile:
+        d_tile = math.gcd(d, d_tile)
+    n_blk = -(-n_chunks // chunk_blk)
+    grid_spec = spmm_packed_grid_spec(T, C, L, n, d, d_tile, chunk_blk)
+    kernel = functools.partial(_spmm_packed_kernel, chunk_blk=chunk_blk)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blk * chunk_blk, C, d), jnp.uint32),
+        interpret=interpret,
+    )(tile_ids, row_block, n_active, cols, X_words)

@@ -35,16 +35,20 @@ def semiring_ops(name: str):
     single source of truth (``repro.analysis.laws`` cross-checks the
     derivation behaviorally, so a future hand-specialization cannot drift).
 
-    The edge value is the implicit SlimSell **numeric 1**, so the
-    contribution is ``sr.mul(1, x)`` — under tropical/min-plus that is
-    ``x + 1`` (one hop), under real/boolean/selmax it is ``x`` (the
-    weighted kernel replaces the 1 with the stored slot weight).
+    The edge value is the semiring's implicit SlimSell contribution
+    (``sr.edge_value``, derived in-register, never stored): the numeric 1
+    for the scalar semirings — ``sr.mul(1, x)`` is ``x + 1`` under
+    tropical/min-plus (one hop), ``x`` under real/boolean/selmax — and the
+    all-ones word for the packed boolean domain (the weighted kernel
+    replaces it with the stored slot weight).
     """
     try:
         sr = _sm.get(name)
     except (KeyError, ValueError):
         raise ValueError(name) from None
-    return sr.add, (lambda x: sr.mul(jnp.asarray(1, x.dtype), x)), sr.zero
+    return (sr.add,
+            (lambda x: sr.mul(jnp.asarray(sr.edge_value, x.dtype), x)),
+            sr.zero)
 
 
 def _reduce_l(sr_name: str, contrib):

@@ -6,10 +6,11 @@ is that one semiring SpMM sweep advances *every* column of its batch, so
 the server's job is to keep batches wide and their shapes few:
 
 * **Bucketing** — queries only share a batch if they share an execution
-  signature: ``BucketKey = (algorithm, semiring, delta)``. The graph and
-  the engine config are session-wide, so they are not part of the key; the
-  SSSP bucket width ``delta`` is, because columns of one min-plus SpMM batch
-  share their ``ctx`` views.
+  signature: ``BucketKey = (algorithm, semiring, delta, packed)``. The
+  graph and the engine config are session-wide, so they are not part of the
+  key; the SSSP bucket width ``delta`` is, because columns of one min-plus
+  SpMM batch share their ``ctx`` views, and the SlimSell-B ``packed`` flag
+  is, because packed columns travel as bit planes of a different dtype.
 * **Power-of-two widths** — a bucket of k queries dispatches at width
   ``min(next_pow2(k), max_batch)``, padded by repeating the last real root
   (the engine's own padding convention — padded columns are discarded at
@@ -67,6 +68,7 @@ class Query:
     need_parents: bool
     deadline_at: Optional[float]
     submitted_at: float
+    packed: bool = False           # SlimSell-B bit-packed boolean sweeps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +77,7 @@ class BucketKey:
     algorithm: str
     semiring: str
     delta: Optional[float] = None
+    packed: bool = False           # packed columns ride packed word planes
 
 
 @dataclasses.dataclass
@@ -139,7 +142,8 @@ class Batcher:
         """Queue one query (atomic: capacity check, duplicate-root check
         and enqueue happen under one lock hold, so concurrent producers
         cannot both land the same root or overshoot ``max_pending``)."""
-        key = BucketKey(query.algorithm, query.semiring, query.delta)
+        key = BucketKey(query.algorithm, query.semiring, query.delta,
+                        query.packed)
         with self._lock:
             if self.max_pending is not None and self._depth >= self.max_pending:
                 raise QueueFull(

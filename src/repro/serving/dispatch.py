@@ -58,7 +58,8 @@ from ..core import engine as eng
 from ..core.bfs import dp_transform
 from ..core.cc import CC_SPEC, cc
 from ..core.formats import layout_signature
-from ..core.multi_bfs import multi_bfs_spec, multi_source_bfs
+from ..core.multi_bfs import (multi_bfs_spec, multi_source_bfs,
+                              packed_multi_bfs_spec)
 from ..core.multi_sssp import MULTI_SSSP_SPEC, multi_source_sssp
 from ..core.options import EngineConfig, QUERY_STATUSES, check_choice
 from ..core.sssp import sssp_parents
@@ -236,7 +237,12 @@ class Dispatcher:
                 state = handle.init_state(self.tiled,
                                           jnp.asarray(0, jnp.int32), ctx)
             elif alg == "bfs":
-                spec = multi_bfs_spec(slot.key.semiring)
+                # packed slots ride the SlimSell-B word-plane spec: the
+                # batch's frontier/visited are uint32[n, ceil(width/32)]
+                # planes, distances land in the same [n, width] int32 as
+                # the lane spec so harvest is shape-identical
+                spec = (packed_multi_bfs_spec(slot.width) if slot.key.packed
+                        else multi_bfs_spec(slot.key.semiring))
                 handle = self._handle(spec, max_iters=n,
                                       direction=cfg.direction,
                                       batch_width=slot.width)
@@ -367,7 +373,7 @@ class Dispatcher:
         cfg, alg, sem = self.config, slot.key.algorithm, slot.key.semiring
         if alg == "cc":
             res = cc(self.tiled, semiring=sem, slimwork=self.slimwork,
-                     config=cfg)
+                     packed=slot.key.packed, config=cfg)
             self.metrics.inc(sweeps_total=int(res.iterations))
             for q in slot.queries:
                 self._finish(q, values=res.labels, sweeps=res.iterations,
@@ -379,6 +385,7 @@ class Dispatcher:
             res = multi_source_bfs(self.tiled, roots, sem,
                                    need_parents=need_parents,
                                    slimwork=self.slimwork,
+                                   packed=slot.key.packed,
                                    batch_size=slot.width, config=cfg)
             self.metrics.inc(sweeps_total=int(np.sum(res.iterations)))
             for i, q in enumerate(slot.queries):

@@ -173,7 +173,7 @@ class GraphSession:
 
     def submit(self, algorithm: str, root: Optional[int] = None, *,
                semiring: Optional[str] = None, delta: Optional[float] = None,
-               need_parents: bool = False,
+               need_parents: bool = False, packed: bool = False,
                deadline: Optional[float] = None) -> QueryHandle:
         """Enqueue one query; returns its handle. Validation is all here, at
         the boundary: unknown algorithm/semiring, out-of-range or missing
@@ -182,6 +182,12 @@ class GraphSession:
 
         deadline: seconds from now; a query still queued (or still in
         flight) when it lapses completes as ``status="timeout"``.
+
+        packed: SlimSell-B — serve this query on the bit-packed boolean
+        path (32 vertices per uint32 lane element). Valid for boolean bfs
+        and boolean cc only; packed queries bucket separately from lane
+        queries (the batch carries uint32 word planes, not lanes) and
+        require a push-direction config.
 
         Raises ``SessionClosed`` after ``close()`` and ``QueueFull`` when a
         bounded queue overflows under ``on_full="raise"``; under
@@ -213,6 +219,16 @@ class GraphSession:
             delta = _resolve_delta(self.tiled, delta)
         elif delta is not None:
             raise ValueError(f"delta is an sssp knob; {algorithm} ignores it")
+        if packed:
+            if algorithm not in ("bfs", "cc") or semiring != "boolean":
+                raise ValueError(
+                    "packed=True is the SlimSell-B bit-packed boolean path; "
+                    f"it serves boolean bfs/cc only, not {algorithm} on "
+                    f"{semiring!r}")
+            if self.config.direction != "push":
+                raise ValueError(
+                    "packed=True needs a push-direction config (the packed "
+                    f"sweep is push-only), got {self.config.direction!r}")
         now = self._clock()
         with self._submit_lock:
             if self._closed:
@@ -222,7 +238,7 @@ class GraphSession:
                 qid=self._next_qid, algorithm=algorithm, semiring=semiring,
                 root=root, delta=delta, need_parents=bool(need_parents),
                 deadline_at=None if deadline is None else now + float(deadline),
-                submitted_at=now)
+                submitted_at=now, packed=bool(packed))
             try:
                 self.batcher.add(query)
             except QueueFull:
@@ -354,18 +370,19 @@ class GraphSession:
     # ------------------------------------------------------------- facades
 
     def bfs(self, root: int, semiring: str = "tropical", *,
-            need_parents: bool = False) -> QueryResult:
+            need_parents: bool = False, packed: bool = False) -> QueryResult:
         """One BFS, served through the batch path (width-1 slot)."""
         h = self.submit("bfs", root, semiring=semiring,
-                        need_parents=need_parents)
+                        need_parents=need_parents, packed=packed)
         return h.result()
 
     def bfs_many(self, roots: Sequence[int], semiring: str = "tropical", *,
-                 need_parents: bool = False) -> list:
+                 need_parents: bool = False, packed: bool = False) -> list:
         """BFS from every root as one submit wave — the bucketer packs them
         into power-of-two batches and one SpMM sweep advances them all."""
         handles = [self.submit("bfs", int(r), semiring=semiring,
-                               need_parents=need_parents) for r in roots]
+                               need_parents=need_parents, packed=packed)
+                   for r in roots]
         self.drain()
         return [h.result() for h in handles]
 
@@ -384,9 +401,10 @@ class GraphSession:
         self.drain()
         return [h.result() for h in handles]
 
-    def cc(self, semiring: str = "selmax") -> QueryResult:
+    def cc(self, semiring: str = "selmax", *,
+           packed: bool = False) -> QueryResult:
         """Connected components over the resident layout."""
-        return self.submit("cc", semiring=semiring).result()
+        return self.submit("cc", semiring=semiring, packed=packed).result()
 
 
 def session(graph: GraphLike, **kwargs) -> GraphSession:

@@ -1,0 +1,14 @@
+"""Golden bad example for the ``packed-constants`` rule: packed-word
+bit-twiddling constants re-derived outside ``core/packing.py``."""
+
+
+def word_of(i):
+    return i >> 5            # word-index shift belongs to core.packing
+
+
+def bit_of(i):
+    return i & 31            # bit-offset mask belongs to core.packing
+
+
+def full_word():
+    return 0xFFFFFFFF        # the all-ones word is packing.FULL_WORD

@@ -37,7 +37,7 @@ def small_graph(n=64, m=300, seed=0, weights=False):
 
 def test_all_registered_contracts_pass():
     import repro.kernels.ops  # noqa: F401  (populates the registry)
-    assert len(REGISTRY) == 5, sorted(REGISTRY)  # all pallas_call wrappers
+    assert len(REGISTRY) == 7, sorted(REGISTRY)  # all pallas_call wrappers
     errors = contracts.check_all()
     assert errors == []
 
@@ -194,6 +194,25 @@ def test_lint_catches_string_option():
 def test_lint_catches_f32_vertex_ids():
     rules = [f.rule for f in _findings_for("bad_f32_ids.py")]
     assert rules == ["f32-vertex-id", "f32-vertex-id"]
+
+
+def test_lint_catches_packed_constants():
+    rules = [f.rule for f in _findings_for("bad_packed_constants.py")]
+    assert rules == ["packed-constants"] * 3, rules
+
+
+def test_packed_constants_rule_is_allowlist_free():
+    # allow entries for the rule (path-level and qualname-level) change
+    # nothing: the rule's only fix is routing through core.packing
+    findings = _findings_for("bad_packed_constants.py")
+    keys = {k for f in findings for k in f.key_candidates()}
+    assert len(_findings_for("bad_packed_constants.py", allow=keys)) == 3
+
+
+def test_packing_module_is_exempt_from_packed_constants():
+    packing_py = (REPO / "src" / "repro" / "core" / "packing.py")
+    findings = lint.lint_paths([packing_py], REPO, set())
+    assert [f for f in findings if f.rule == "packed-constants"] == []
 
 
 def test_lint_catches_interpret_literal():

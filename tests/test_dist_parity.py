@@ -180,3 +180,62 @@ for dirn in ["push", "pull"]:
     assert np.array_equal(np.asarray(d), refs), ("pallas multi", dirn)
 print("PASS")
 """)
+
+
+def test_dist_packed_multi_bfs_parity():
+    """SlimSell-B on the mesh: packed word planes shard along the batch
+    axis, so the distributed packed multi-BFS must match both the lane
+    distributed path and the single-device oracle — including a B=33 batch
+    (half-empty second plane) on an n % 32 != 0 graph."""
+    run_multidevice(_PRELUDE + """
+csr = erdos_renyi(140, 5, seed=7)                      # tail word: 140 % 32
+roots = np.asarray(sorted(np.random.default_rng(2).choice(
+    csr.n, 33, replace=False)), np.int32)              # 33 -> 2 word planes
+refs = np.stack([bfs_traditional(csr, int(r))[0] for r in roots])
+mesh = make_mesh((2, 2), ("data", "model"))
+dist = partition_slimsell(csr, R=2, Co=2, C=4, L=8)
+lane = make_dist_multi_bfs(mesh, dist, "boolean", max_iters=64,
+                           direction="push")
+d_lane, it_lane = lane(dist.cols, dist.row_block, dist.row_vertex, roots)
+packed = make_dist_multi_bfs(mesh, dist, "boolean", max_iters=64,
+                             direction="push", packed=True,
+                             batch_width=len(roots))
+d_pk, it_pk = packed(dist.cols, dist.row_block, dist.row_vertex, roots)
+assert np.array_equal(np.asarray(d_lane), refs)
+assert np.array_equal(np.asarray(d_pk), np.asarray(d_lane))
+assert int(it_pk) == int(it_lane)
+print("PASS")
+""")
+
+
+def test_dist_slimwork_push_mask_parity():
+    """The per-shard push index (inc_src/inc_tile) must not change any
+    result: masked push sweeps equal unmasked ones for single- and
+    multi-source BFS, and compose with the packed boolean path."""
+    run_multidevice(_PRELUDE + """
+csr = kronecker(7, 8, seed=5)
+root = int(np.argmax(csr.deg))
+d_ref, _ = bfs_traditional(csr, root)
+mesh = make_mesh((2, 2), ("data", "model"))
+dist = partition_slimsell(csr, R=2, Co=2, C=4, L=8)
+assert dist.inc_src is not None and dist.inc_tile is not None
+sw_args = (dist.cols, dist.row_block, dist.row_vertex,
+           dist.inc_src, dist.inc_tile)
+for srn in ["tropical", "boolean"]:
+    fn = make_dist_bfs(mesh, dist, srn, max_iters=64, direction="push",
+                       slimwork=True)
+    d, it = fn(*sw_args, np.int32(root))
+    assert np.array_equal(np.asarray(d), d_ref), srn
+roots = np.asarray([0, 9, 41, 77], np.int32)
+refs = np.stack([bfs_traditional(csr, int(r))[0] for r in roots])
+fn = make_dist_multi_bfs(mesh, dist, "boolean", max_iters=64,
+                         direction="push", slimwork=True)
+d, it = fn(*sw_args, roots)
+assert np.array_equal(np.asarray(d), refs)
+fn = make_dist_multi_bfs(mesh, dist, "boolean", max_iters=64,
+                         direction="push", slimwork=True, packed=True,
+                         batch_width=len(roots))
+d, it = fn(*sw_args, roots)
+assert np.array_equal(np.asarray(d), refs)
+print("PASS")
+""")

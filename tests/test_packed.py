@@ -1,0 +1,243 @@
+"""SlimSell-B (bit-packed boolean) parity with the lane-boolean path.
+
+The packed layout must be a pure re-encoding: boolean BFS, multi-source
+BFS and CC peeling bit-equal to their lane twins on every graph family,
+backend and engine mode; tail words (n % 32 != 0, B % 32 != 0) carry zero
+padding bits everywhere (the sanitizer enforces it); the serving layer
+buckets packed and lane queries separately but returns identical answers.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import debug, packing
+from repro.core import semiring as sm
+from repro.core.bfs import bfs
+from repro.core.bfs_traditional import bfs_traditional
+from repro.core.cc import cc
+from repro.core.formats import build_slimsell, layout_signature, packed_words
+from repro.core.multi_bfs import multi_source_bfs
+from repro.core.options import EngineConfig
+from repro.graphs.generators import (erdos_renyi, kronecker, ring_of_cliques,
+                                     star, two_components)
+
+# six families; several with n % 32 != 0 so every suite crosses tail words
+FAMILIES = {
+    "kronecker": lambda: kronecker(8, 8, seed=3),        # n = 256
+    "erdos": lambda: erdos_renyi(220, 5.0, seed=1),      # tail word (220)
+    "ring_cliques": lambda: ring_of_cliques(12, 5),      # n = 60, diameter
+    "two_components": lambda: two_components(6, 8, seed=2),
+    "star": lambda: star(97),                            # tail word (97)
+    "sparse": lambda: erdos_renyi(77, 1.5, seed=9),      # isolated vertices
+}
+BACKENDS = ["jnp", "pallas"]
+MODES = ["fused", "hostloop"]
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_compile_cache():
+    # this module compiles many distinct hostloop/pallas step functions on
+    # top of whatever the rest of the suite already jitted; in one long
+    # pytest process the accumulated CPU-JIT executables can crash XLA's
+    # next compile, so start (and leave) this module with empty caches
+    jax.clear_caches()
+    yield
+    jax.clear_caches()
+
+
+@functools.lru_cache(maxsize=None)
+def _layout(family):
+    csr = FAMILIES[family]()
+    return csr, build_slimsell(csr, C=4, L=16, sigma=csr.n).to_jax()
+
+
+def _cfg(backend, mode):
+    return EngineConfig(backend=backend, direction="push", mode=mode)
+
+
+# ----------------------------------------------------------- packing basics
+
+
+def test_pack_unpack_roundtrip_tail_widths(rng):
+    for n in (1, 31, 32, 33, 64, 70, 97):
+        bits = rng.random(n) < 0.4
+        words = np.asarray(packing.pack_bits(jnp.asarray(bits)))
+        assert words.shape == (packed_words(n),)
+        assert np.array_equal(
+            np.asarray(packing.unpack_bits(jnp.asarray(words), n)), bits)
+        # tail padding bits stay zero straight out of pack
+        assert not np.any(words & ~np.asarray(
+            packing._cached_padding_mask(n)))
+        # host twins agree with the device path
+        assert np.array_equal(packing.pack_bits_np(bits), words)
+        assert np.array_equal(packing.unpack_bits_np(words, n), bits)
+
+
+def test_pack_axis1_planes(rng):
+    bits = rng.random((50, 33)) < 0.3            # B=33 -> 2 word planes
+    words = np.asarray(packing.pack_bits(jnp.asarray(bits), axis=1))
+    assert words.shape == (50, 2)
+    assert np.array_equal(
+        np.asarray(packing.unpack_bits(jnp.asarray(words), 33, axis=1)),
+        bits)
+
+
+def test_layout_signature_carries_packed_dim():
+    _, tiled = _layout("erdos")
+    assert layout_signature(tiled)[-1] == packed_words(tiled.n)
+
+
+# ------------------------------------------------------------- BFS parity
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_packed_bfs_bit_equal(family, backend, mode):
+    csr, tiled = _layout(family)
+    root = int(np.argmax(csr.deg))
+    d_ref, _ = bfs_traditional(csr, root)
+    cfg = _cfg(backend, mode)
+    lane = bfs(tiled, root, "boolean", config=cfg)
+    packed = bfs(tiled, root, "boolean", config=cfg, packed=True)
+    assert np.array_equal(lane.distances, d_ref), (family, backend, mode)
+    assert np.array_equal(packed.distances, lane.distances), \
+        (family, backend, mode)
+    assert packed.iterations == lane.iterations
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_packed_multi_bfs_two_planes(backend, mode):
+    """B=64 Graph500-style root batch -> 2 packed word planes."""
+    csr, tiled = _layout("kronecker")
+    roots = list(range(64))
+    cfg = _cfg(backend, mode)
+    lane = multi_source_bfs(tiled, roots, "boolean", batch_size=64,
+                            config=cfg)
+    packed = multi_source_bfs(tiled, roots, "boolean", batch_size=64,
+                              config=cfg, packed=True)
+    assert np.array_equal(packed.distances, lane.distances), (backend, mode)
+    assert np.array_equal(packed.iterations, lane.iterations)
+
+
+def test_packed_multi_bfs_ragged_batch_tail():
+    """B=33 -> a half-empty second plane; per-batch spec geometry."""
+    csr, tiled = _layout("erdos")
+    roots = [int(r) for r in
+             np.random.default_rng(3).choice(csr.n, 33, replace=False)]
+    lane = multi_source_bfs(tiled, roots, "boolean", batch_size=64)
+    packed = multi_source_bfs(tiled, roots, "boolean", batch_size=64,
+                              packed=True)
+    assert np.array_equal(packed.distances, lane.distances)
+
+
+@pytest.mark.parametrize("family", ["two_components", "ring_cliques",
+                                    "sparse"])
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_packed_cc_peeling_bit_equal(family, backend, mode):
+    _, tiled = _layout(family)
+    cfg = _cfg(backend, mode)
+    lane = cc(tiled, semiring="boolean", config=cfg)
+    packed = cc(tiled, semiring="boolean", config=cfg, packed=True)
+    assert np.array_equal(packed.labels, lane.labels), (family, backend, mode)
+    assert packed.n_components == lane.n_components
+
+
+def test_packed_front_door_validation():
+    _, tiled = _layout("sparse")
+    with pytest.raises(ValueError, match="packed"):
+        bfs(tiled, 0, "tropical", packed=True)
+    with pytest.raises(ValueError, match="push"):
+        bfs(tiled, 0, "boolean", packed=True,
+            config=EngineConfig(direction="pull"))
+    with pytest.raises(ValueError, match="packed"):
+        cc(tiled, semiring="selmax", packed=True)
+
+
+# -------------------------------------------------------- sanitizer coverage
+
+
+def test_packed_runs_clean_under_sanitizer():
+    csr, tiled = _layout("erdos")
+    root = int(np.argmax(csr.deg))
+    with debug.checked():
+        res = bfs(tiled, root, "boolean", packed=True)
+    d_ref, _ = bfs_traditional(csr, root)
+    assert np.array_equal(res.distances, d_ref)
+
+
+def test_sanitizer_flags_tail_padding_violation():
+    """check_sweep's packed branch: a set bit above n_bits is a hard error."""
+    sr = sm.get("boolean_packed")
+
+    def sweep_like(y):
+        debug.check_sweep(sr, y, n_bits=33)
+        return y
+
+    good = jnp.asarray([0xDEADBEEF, 0x1], jnp.uint32)   # bit 32 is live
+    bad = jnp.asarray([0xDEADBEEF, 0x4], jnp.uint32)    # bit 34 is padding
+    with debug.checked():
+        debug.call_checked(sweep_like, good)
+        with pytest.raises(Exception, match="nonzero tail padding"):
+            debug.call_checked(sweep_like, bad)
+
+
+# ------------------------------------------------------------ serving layer
+
+
+def test_serving_buckets_packed_separately():
+    from repro.serving.batcher import Batcher, Query
+    b = Batcher()
+    k_lane = b.add(Query(0, "bfs", "boolean", 0, None, False, None, 0.0))
+    k_packed = b.add(Query(1, "bfs", "boolean", 0, None, False, None, 0.0,
+                           packed=True))
+    assert k_lane != k_packed and k_packed.packed and not k_lane.packed
+    slots, _ = b.drain(0.0)
+    assert sorted(s.key.packed for s in slots) == [False, True]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_serving_packed_queries_bit_equal(mode):
+    from repro.serving import GraphSession
+    csr, tiled = _layout("erdos")
+    roots = list(range(20))
+    with GraphSession(tiled, config=_cfg("jnp", mode)) as sess:
+        lane = sess.bfs_many(roots, "boolean")
+        packed = sess.bfs_many(roots, "boolean", packed=True)
+        for r_l, r_p in zip(lane, packed):
+            assert np.array_equal(r_l.distances, r_p.distances)
+        c_lane = sess.cc("boolean")
+        c_packed = sess.cc("boolean", packed=True)
+        assert np.array_equal(c_lane.labels, c_packed.labels)
+
+
+def test_serving_packed_submit_validation():
+    from repro.serving import GraphSession
+    _, tiled = _layout("sparse")
+    with GraphSession(tiled, config=_cfg("jnp", "fused")) as sess:
+        with pytest.raises(ValueError, match="packed"):
+            sess.submit("bfs", 0, semiring="tropical", packed=True)
+        with pytest.raises(ValueError, match="packed"):
+            sess.submit("cc", semiring="selmax", packed=True)
+    with GraphSession(tiled, config=EngineConfig(direction="pull",
+                                                 mode="hostloop")) as sess:
+        with pytest.raises(ValueError, match="push"):
+            sess.submit("bfs", 0, semiring="boolean", packed=True)
+
+
+# ------------------------------------------------------- storage accounting
+
+
+def test_packed_frontier_bytes_reduction():
+    """frontier + visited bitmaps shrink >= 16x vs one lane-boolean
+    frontier + visited pair (float32 lanes vs packed uint32 words)."""
+    _, tiled = _layout("kronecker")
+    n = tiled.n
+    lane_bytes = 2 * n * 4                      # f + visited, float32 lanes
+    packed_bytes = 2 * packed_words(n) * 4      # f + visited, word bitmaps
+    assert lane_bytes / packed_bytes >= 16
