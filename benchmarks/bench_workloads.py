@@ -1,0 +1,101 @@
+"""Workload throughput: PageRank sweep rate, batched Brandes, k-hop serve.
+
+Three points for the BENCH trajectory:
+
+* **pagerank** — damped power-iteration throughput as a TEPS-equivalent
+  (every sweep is one dense real-semiring SpMV over all 2m directed edges,
+  so ``edges_swept = 2m * iterations``);
+* **betweenness** — batched Brandes (one [n, B] forward + backward SpMM
+  pair per batch) against the per-root degenerate batching (B=1), the
+  speedup being the point of the [n, B] formulation;
+* **khop** — depth-capped boolean batch (the serving primitive), TEPS over
+  the edges actually inside the k-balls.
+
+    PYTHONPATH=src python benchmarks/bench_workloads.py [--scale 10]
+    PYTHONPATH=src python -m benchmarks.run --only workloads
+"""
+import argparse
+import time
+
+import numpy as np
+
+try:  # package execution (benchmarks.run) or standalone script
+    from . import common
+except ImportError:
+    import common
+from repro.core.betweenness import betweenness
+from repro.core.khop import khop_many
+from repro.core.pagerank import pagerank
+from repro.graph500 import sample_roots
+
+
+def _timed(fn, *args, **kwargs):
+    fn(*args, **kwargs)                 # jit warm-up
+    t0 = time.perf_counter()
+    res = fn(*args, **kwargs)
+    return res, time.perf_counter() - t0
+
+
+def run(scale: int = 10, ef: int = 8, n_sources: int = 32,
+        backend: str = "jnp", khop_k: int = 3):
+    csr = common.graph("kron", scale, ef)
+    tiled = common.tiled("kron", scale, ef, C=8, L=32)
+    m2 = 2 * csr.m_undirected
+    print(f"# workloads: n={csr.n} m={csr.m_undirected} backend={backend}")
+
+    # -------------------------------------------------------- pagerank
+    pr, pr_s = _timed(pagerank, tiled, damping=0.85, tol=1e-6)
+    assert pr.converged and abs(float(pr.ranks.sum()) - 1.0) < 1e-3
+    pr_teps = m2 * pr.iterations / pr_s
+    common.emit(f"workloads/pagerank/{backend}", pr_s * 1e6,
+                f"sweeps={pr.iterations} TEPS_eq={pr_teps:.3e}")
+    common.record("workloads/pagerank", teps=pr_teps, scale=scale,
+                  iterations=pr.iterations,
+                  residual=float(pr.residuals[-1]))
+
+    # ----------------------------------------------------- betweenness
+    roots = sample_roots(csr, n_sources)
+    batched, bat_s = _timed(betweenness, tiled, sources=roots)
+    per_root, per_s = _timed(betweenness, tiled, sources=roots, batch_size=1)
+    assert np.allclose(batched.scores, per_root.scores, rtol=1e-5,
+                       atol=1e-6), "batched Brandes != per-root Brandes"
+    speedup = per_s / bat_s
+    common.emit(f"workloads/betweenness/batched/{backend}",
+                bat_s / roots.size * 1e6,
+                f"B={roots.size} sweeps={batched.iterations}")
+    common.emit(f"workloads/betweenness/per_root/{backend}",
+                per_s / roots.size * 1e6, f"vs_batched={speedup:.2f}x")
+    common.record("workloads/betweenness", scale=scale, batch=roots.size,
+                  us_per_source=bat_s / roots.size * 1e6,
+                  speedup_vs_per_root=speedup,
+                  iterations=batched.iterations)
+
+    # ------------------------------------------------------------ khop
+    kh, kh_s = _timed(khop_many, tiled, roots, khop_k,
+                      batch_size=roots.size)
+    ball_edges = int(sum(csr.deg[np.asarray(d) >= 0].sum()
+                         for d in kh.distances)) // 2
+    kh_teps = max(1, ball_edges) / kh_s
+    common.emit(f"workloads/khop/{backend}", kh_s / roots.size * 1e6,
+                f"k={khop_k} B={roots.size} TEPS={kh_teps:.3e}")
+    common.record("workloads/khop", teps=kh_teps, scale=scale, k=khop_k,
+                  batch=roots.size,
+                  mean_ball=float(kh.count.mean()))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--ef", type=int, default=8)
+    ap.add_argument("--sources", type=int, default=32)
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--tag", default="workloads",
+                    help="results file suffix: BENCH_<tag>.json")
+    args = ap.parse_args()
+    run(args.scale, args.ef, args.sources, args.backend, args.k)
+    common.write_json(f"BENCH_{args.tag}.json", args.tag)
+
+
+if __name__ == "__main__":
+    main()

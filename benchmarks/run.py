@@ -20,7 +20,7 @@ import time
 from . import (bench_cc, bench_direction, bench_layout, bench_multisource,
                bench_packed, bench_semirings, bench_serving, bench_slimchunk,
                bench_slimsell, bench_slimwork, bench_sssp, bench_storage,
-               bench_vs_traditional, bench_work)
+               bench_vs_traditional, bench_work, bench_workloads)
 from . import common
 
 ALL = {
@@ -38,6 +38,7 @@ ALL = {
     "multisource": bench_multisource,    # beyond-paper: batched BFS/SSSP
     "serving": bench_serving,            # beyond-paper: GraphSession qps
     "packed": bench_packed,              # beyond-paper: SlimSell-B word sweeps
+    "workloads": bench_workloads,        # beyond-paper: PageRank/BC/k-hop
 }
 
 

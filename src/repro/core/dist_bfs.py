@@ -46,6 +46,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from . import debug
 from . import engine as eng
+from .betweenness import BRANDES_BACKWARD_SPEC, BRANDES_FORWARD_SPEC
 from .bfs import bfs_spec
 from .cc import CC_SPEC
 from .engine import DIRECTIONS, WORK_LOG, FixpointSpec
@@ -53,6 +54,7 @@ from .formats import CSRGraph, build_push_index, sellcs_order
 from .multi_bfs import multi_bfs_spec, packed_multi_bfs_spec
 from .multi_sssp import MULTI_SSSP_SPEC
 from .options import COMMS, check_choice
+from .pagerank import PAGERANK_MAX_ITERS, PAGERANK_SPEC, pagerank_views
 from .spmv import resolve_backend
 from .sssp import SSSP_SPEC
 
@@ -553,3 +555,100 @@ def make_dist_cc(mesh: Mesh, meta: DistSlimSell, *,
         finalize=lambda state, iters, dirs:
             (state["x"].astype(jnp.int32) - 1, iters))
     return lambda *args: run(*args, jnp.asarray(0, jnp.int32), ())
+
+
+def make_dist_pagerank(mesh: Mesh, meta: DistSlimSell, *,
+                       row_axes: Sequence[str] = ("data",),
+                       col_axes: Sequence[str] = ("model",),
+                       max_iters: int = PAGERANK_MAX_ITERS,
+                       comm: str = "allreduce",
+                       backend: Optional[str] = None,
+                       slimwork: bool = False):
+    """Jitted distributed PageRank (damped real-semiring power iteration):
+    (cols, row_block, row_vertex[, inc_src, inc_tile], damping, tol) ->
+    (ranks float32[n], iterations, resid_log float32[WORK_LOG]).
+
+    The per-vertex ``inv_deg`` / ``dangling`` views are built from
+    ``meta.deg`` here (the shard-local setup never sees the global degree
+    vector) and ride as replicated ctx operands; the L1 residual history in
+    ``resid_log`` is what the dist-parity tests compare sweep-for-sweep
+    against the single-device engine. ``damping`` / ``tol`` are traced, so
+    one compilation serves every parameterization."""
+    inv_deg, dangling = pagerank_views(np.asarray(meta.deg))
+    run = make_dist_fixpoint(
+        mesh, meta, PAGERANK_SPEC, row_axes=row_axes, col_axes=col_axes,
+        max_iters=max_iters, comm=comm, backend=backend, direction="push",
+        slimwork=slimwork,
+        finalize=lambda state, iters, dirs:
+            (state["r"], iters, state["resid_log"]))
+
+    def fn(*args):
+        *head, damping, tol = args
+        ctx_args = (jnp.asarray(damping, jnp.float32),
+                    jnp.asarray(tol, jnp.float32), inv_deg, dangling)
+        return run(*head, jnp.asarray(0, jnp.int32), ctx_args)
+    return fn
+
+
+def make_dist_brandes(mesh: Mesh, meta: DistSlimSell, *,
+                      row_axes: Sequence[str] = ("data",),
+                      col_axes: Sequence[str] = ("model",),
+                      max_iters: Optional[int] = None,
+                      comm: str = "allreduce",
+                      backend: Optional[str] = None,
+                      slimwork: bool = False):
+    """Distributed Brandes betweenness sweeps: (cols, row_block, row_vertex
+    [, inc_src, inc_tile], roots[B]) -> (delta float32[n, B], d int32[n, B],
+    fwd_iters, bwd_iters).
+
+    Two chained ``make_dist_fixpoint`` runners — the forward sigma/depth
+    SpMM batch, then the dependency back-propagation over the recorded
+    levels (its ``d`` / ``sigma`` inputs travel as replicated ctx
+    operands). Fold the per-source dependency matrix into scores with
+    ``betweenness.brandes_accumulate`` (zero the source rows, sum columns,
+    halve for the undirected doubling)."""
+    cap = int(max_iters) if max_iters is not None else meta.n + 1
+    fwd = make_dist_fixpoint(
+        mesh, meta, BRANDES_FORWARD_SPEC, row_axes=row_axes,
+        col_axes=col_axes, max_iters=cap, comm=comm, backend=backend,
+        direction="push", slimwork=slimwork,
+        finalize=lambda state, iters, dirs:
+            (state["d"], state["sigma"], iters))
+    bwd = make_dist_fixpoint(
+        mesh, meta, BRANDES_BACKWARD_SPEC, row_axes=row_axes,
+        col_axes=col_axes, max_iters=cap, comm=comm, backend=backend,
+        direction="push", slimwork=slimwork,
+        finalize=lambda state, iters, dirs: (state["delta"], iters))
+
+    def fn(*args):
+        *head, roots = args
+        d, sigma, it_f = fwd(*head, roots, ())
+        levels0 = jnp.max(d, axis=0)        # per-column eccentricity
+        delta, it_b = bwd(*head, levels0, (d, sigma))
+        return delta, d, it_f, it_b
+    return fn
+
+
+def make_dist_khop(mesh: Mesh, meta: DistSlimSell, k: int, *,
+                   row_axes: Sequence[str] = ("data",),
+                   col_axes: Sequence[str] = ("model",),
+                   comm: str = "allreduce",
+                   backend: Optional[str] = None,
+                   direction: str = "push", slimwork: bool = False,
+                   packed: bool = False,
+                   batch_width: Optional[int] = None):
+    """Jitted distributed k-hop filter: (cols, row_block, row_vertex
+    [, inc_src, inc_tile], roots[B]) -> (distances int32[B, n], iterations)
+    with ``distances`` truncated at depth ``k`` (-1 outside the ball; the
+    membership mask is ``distances >= 0``).
+
+    A boolean multi-source BFS whose iteration cap *is* the query depth —
+    the engine's ``k <= max_iters`` guard does the early exit, so this is
+    ``make_dist_multi_bfs`` with ``max_iters=k`` (``packed=True`` for the
+    SlimSell-B word-plane exchange)."""
+    if k < 0:
+        raise ValueError(f"make_dist_khop: k must be >= 0, got {k}")
+    return make_dist_multi_bfs(
+        mesh, meta, "boolean", row_axes=row_axes, col_axes=col_axes,
+        max_iters=int(k), comm=comm, backend=backend, direction=direction,
+        slimwork=slimwork, packed=packed, batch_width=batch_width)

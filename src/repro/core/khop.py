@@ -1,0 +1,81 @@
+"""k-hop neighborhood / reachability filters on the SlimSell engine.
+
+A k-hop query is a boolean BFS whose fixpoint loop is **capped at depth
+k**: the engine's ``cont & (k <= max_iters)`` condition makes every BFS
+spec an early-exit-at-depth-k spec for free, so this module reuses
+``core.bfs`` / ``core.multi_bfs`` wholesale — lane-boolean and bit-packed
+(SlimSell-B, ``core/packing.py``) variants, single-source and batched
+[n, B] multi-source — and projects the depth-capped distance vector into a
+membership mask. It is the natural serving primitive ("who is within k
+hops of v?") and is exposed through ``GraphSession.khop`` / ``Router.khop``
+with the depth ``k`` as part of the batching bucket key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .bfs import bfs
+from .multi_bfs import multi_source_bfs
+from .options import EngineConfig, resolve_config
+
+
+@dataclasses.dataclass
+class KHopResult:
+    mask: np.ndarray        # bool[n] (or [B, n] batched): within k hops
+    distances: np.ndarray   # int32, same shape; -1 beyond depth k
+    iterations: np.ndarray  # sweeps executed (scalar int, or int[B] batched)
+
+    @property
+    def count(self):
+        """Vertices within k hops (per root when batched)."""
+        return self.mask.sum(axis=-1)
+
+
+def _resolve_k(k: Optional[int], n: int) -> int:
+    if k is None:
+        return n  # "within n hops" == full reachability
+    k = int(k)
+    if k < 0:
+        raise ValueError(f"khop: k must be >= 0 (or None for 'any'), got {k}")
+    return k
+
+
+def khop(tiled, root: int, k: Optional[int], *, packed: bool = False,
+         slimwork: bool = True, mode: Optional[str] = None,
+         backend: Optional[str] = None, direction: Optional[str] = None,
+         config: Optional[EngineConfig] = None) -> KHopResult:
+    """Vertices within ``k`` hops of ``root`` (``k=None`` = reachability).
+
+    A boolean BFS truncated at depth ``k`` — ``mask[v]`` iff a path of at
+    most ``k`` edges reaches ``v``; ``distances`` keeps the exact hop count
+    for members and -1 outside the ball. ``packed=True`` runs the
+    bit-packed SlimSell-B recurrence (push-only) with identical results.
+    """
+    cap = _resolve_k(k, tiled.n)
+    cfg = resolve_config("khop", config, mode=mode, backend=backend,
+                         direction=direction)
+    res = bfs(tiled, root, "boolean", packed=packed, slimwork=slimwork,
+              max_iters=cap, config=cfg)
+    d = np.asarray(res.distances)
+    return KHopResult(mask=d >= 0, distances=d,
+                      iterations=np.asarray(res.iterations))
+
+
+def khop_many(tiled, roots: Sequence[int], k: Optional[int], *,
+              packed: bool = False, batch_size: Optional[int] = None,
+              slimwork: bool = True, mode: Optional[str] = None,
+              backend: Optional[str] = None,
+              config: Optional[EngineConfig] = None) -> KHopResult:
+    """Batched k-hop: one [n, B] boolean SpMM sweep per depth level for all
+    ``roots`` at once (packed: 32 root columns per uint32 word plane)."""
+    cap = _resolve_k(k, tiled.n)
+    cfg = resolve_config("khop", config, mode=mode, backend=backend)
+    res = multi_source_bfs(tiled, roots, "boolean", packed=packed,
+                           batch_size=batch_size, slimwork=slimwork,
+                           max_iters=cap, config=cfg)
+    d = np.asarray(res.distances)
+    return KHopResult(mask=d >= 0, distances=d,
+                      iterations=np.asarray(res.iterations))

@@ -48,7 +48,7 @@ DIRECTIONS = ("push", "pull", "auto")
 
 # the serving layer's query vocabulary: every GraphSession.submit() call
 # names one of these (multi-source requests are streams of them)
-ALGORITHMS = ("bfs", "sssp", "cc")
+ALGORITHMS = ("bfs", "sssp", "cc", "pagerank", "betweenness", "khop")
 
 # query lifecycle states reported by serving.QueryResult.status: "shed"
 # marks a query dropped at submit by the bounded-queue backpressure policy

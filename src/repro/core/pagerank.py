@@ -1,0 +1,157 @@
+"""PageRank on the SlimSell engine: damped real-semiring power iteration.
+
+The first **non-monotone** spec in the repo. BFS/SSSP/CC all converge by
+a monotone argument — state only ever tightens, so "no bits changed" is a
+fixpoint certificate. PageRank's update is *replace-style*: every sweep
+rewrites the whole rank vector
+
+    r' = (1 - a)/n  +  a * (A_colstoch @ r  +  dangling_mass/n),
+
+and nothing about ``r'`` vs ``r`` is ordered. Convergence therefore comes
+from an **L1-residual extractor** carried in the state (``resid = sum
+|r' - r|``; continue while ``resid > tol``), and termination when the
+residual never crosses ``tol`` comes from the engine's ``k <= max_iters``
+guard — the loop condition is ``cont & (k <= max_iters)``, so an
+oscillating or slowly-converging spec still halts.
+
+The row-stochastic sweep rides the *unweighted* layout: instead of storing
+1/deg edge weights, the frontier payload is pre-scaled per source,
+``x[u] = r[u] / deg[u]``, and the real-semiring SpMV sums exactly the
+column-stochastic product. Dangling vertices (deg 0) contribute their rank
+uniformly via a scalar correction, matching ``networkx.pagerank``'s
+handling. The same spec runs fused / hostloop / distributed (see
+``dist_bfs.make_dist_pagerank``); per-sweep residuals land in a fixed
+``resid_log`` ring so distributed parity can compare whole histories.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine as eng
+from .engine import FixpointSpec, WORK_LOG
+from .options import EngineConfig, check_choice, resolve_config
+
+Array = jax.Array
+
+#: serving-path iteration cap: a=0.85 contracts the L1 error by ~a per sweep,
+#: so 256 sweeps reach residuals ~1e-18 — far past float32 resolution
+PAGERANK_MAX_ITERS = 256
+
+
+@dataclasses.dataclass
+class PageRankResult:
+    ranks: np.ndarray        # float32[n]; sums to 1
+    iterations: int
+    residuals: np.ndarray    # float32[iterations]; L1 residual per sweep
+    converged: bool          # final residual <= tol (vs stopped at max_iters)
+
+
+def pagerank_views(deg) -> tuple[Array, Array]:
+    """Per-vertex constants the spec needs: ``(inv_deg, dangling)``.
+
+    ``inv_deg[u] = 1/deg[u]`` (0 for dangling vertices) pre-scales the
+    frontier payload into the column-stochastic product; ``dangling`` marks
+    deg-0 vertices whose rank is redistributed uniformly. Computed with a
+    safe divisor so the sanitizer never sees an inf in a discarded branch.
+    """
+    deg = jnp.asarray(deg, jnp.float32)
+    dangling = deg <= 0
+    inv_deg = jnp.where(dangling, 0.0, 1.0 / jnp.maximum(deg, 1.0))
+    return inv_deg, dangling
+
+
+def _pr_init(n: int, arg, ctx):
+    # per-vertex constants ride in the *state*, not ctx: hostloop's weighted
+    # path gathers ctx leaves whose leading axis == n_tiles, and an [n]
+    # leaf would be mis-sliced whenever n == n_tiles. State leaves are safe.
+    return {"r": jnp.full((n,), 1.0 / n, jnp.float32),
+            "resid": jnp.asarray(jnp.inf, jnp.float32),
+            "resid_log": jnp.zeros((WORK_LOG,), jnp.float32),
+            "inv_deg": ctx["inv_deg"],
+            "dangling": ctx["dangling"]}
+
+
+def _pr_frontier(ctx, state, k):
+    return state["r"] * state["inv_deg"]
+
+
+def _pr_update(ctx, state, y: Array, k):
+    r = state["r"]
+    n = r.shape[0]
+    a = ctx["damping"]
+    dangling_mass = jnp.sum(jnp.where(state["dangling"], r, 0.0))
+    r_new = (1.0 - a) / n + a * (y + dangling_mass / n)
+    resid = jnp.sum(jnp.abs(r_new - r))
+    slot = jnp.minimum(k - 1, WORK_LOG - 1)
+    state = dict(state, r=r_new, resid=resid,
+                 resid_log=state["resid_log"].at[slot].set(resid))
+    return state, resid > ctx["tol"]
+
+
+PAGERANK_SPEC = FixpointSpec(
+    name="pagerank",
+    sr_name="real",
+    directions=("push",),
+    setup=lambda tiled, damping, tol, inv_deg, dangling:
+        {"damping": damping, "tol": tol,
+         "inv_deg": inv_deg, "dangling": dangling},
+    init_state=_pr_init,
+    frontier=_pr_frontier,
+    # the iteration is dense: every vertex re-emits its rank each sweep
+    source_bits=lambda ctx, state, k: jnp.ones_like(state["dangling"]),
+    not_final=lambda ctx, state: jnp.ones_like(state["dangling"]),
+    update=_pr_update,
+    host_bits=lambda state, k, need_sb, need_nf:
+        (np.ones(state["r"].shape[0], bool), None),
+)
+
+
+def pagerank(tiled, *, damping: float = 0.85, tol: float = 1e-6,
+             slimwork: bool = True, mode: Optional[str] = None,
+             max_iters: Optional[int] = None,
+             backend: Optional[str] = None,
+             config: Optional[EngineConfig] = None) -> PageRankResult:
+    """Damped PageRank over the SlimSell layout; ``ranks`` sums to 1.
+
+    damping: teleport factor ``a`` in (0, 1); ``(1-a)/n`` uniform restart.
+    tol: stop when the L1 residual ``sum |r' - r|`` drops to ``tol`` or
+    below; otherwise the engine halts at ``max_iters`` (default
+    ``PAGERANK_MAX_ITERS``) with ``converged=False``.
+    config: the usual ``EngineConfig`` knobs; the sweep is push-only and
+    dense (SlimWork masks pass everything through).
+    """
+    cfg = resolve_config("pagerank", config, mode=mode, backend=backend)
+    check_choice("direction", cfg.direction, PAGERANK_SPEC.directions,
+                 hint="the PageRank sweep is push-only")
+    if not 0.0 < damping < 1.0:
+        raise ValueError(f"pagerank: damping must be in (0, 1), got {damping}")
+    if not tol > 0.0:
+        raise ValueError(f"pagerank: tol must be > 0, got {tol}")
+    if slimwork and getattr(tiled, "inc_src", None) is None:
+        raise ValueError("SlimWork masks need the push index; rebuild the "
+                         "layout with formats.build_slimsell")
+    cap = int(max_iters) if max_iters is not None else PAGERANK_MAX_ITERS
+    inv_deg, dangling = pagerank_views(tiled.deg)
+    ctx_args = (jnp.asarray(damping, jnp.float32),
+                jnp.asarray(tol, jnp.float32), inv_deg, dangling)
+    arg = jnp.asarray(0, jnp.int32)  # no root: the iteration is global
+    with cfg.applied():
+        if cfg.mode == "fused":
+            res = eng.run_fused(PAGERANK_SPEC, tiled, arg, ctx_args=ctx_args,
+                                slimwork=slimwork, max_iters=cap,
+                                backend=cfg.backend)
+        else:
+            res = eng.run_hostloop(PAGERANK_SPEC, tiled, arg,
+                                   ctx_args=ctx_args, slimwork=slimwork,
+                                   max_iters=cap, backend=cfg.backend)
+    resid = float(res.state["resid"])
+    residuals = np.asarray(res.state["resid_log"])[:res.iterations]
+    return PageRankResult(ranks=np.asarray(res.state["r"]),
+                          iterations=res.iterations,
+                          residuals=residuals,
+                          converged=bool(resid <= tol))

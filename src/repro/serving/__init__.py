@@ -3,8 +3,9 @@ batching, async dispatch.
 
 The package turns the batched sweep engine into a service: a
 ``GraphSession`` owns one built layout plus one ``EngineConfig``, accepts a
-stream of heterogeneous BFS / SSSP / CC queries (``submit`` ->
-``QueryHandle``), buckets them by execution signature (``Batcher``), runs
+stream of heterogeneous BFS / SSSP / CC / PageRank / betweenness / k-hop
+queries (``submit`` -> ``QueryHandle``), buckets them by execution
+signature (``Batcher``), runs
 them as padded power-of-two device batches on persistent jitted handles
 with async harvest (``Dispatcher``), and reports throughput/latency/fill
 counters (``ServingMetrics`` via ``stats()``).

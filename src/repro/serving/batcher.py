@@ -6,11 +6,15 @@ is that one semiring SpMM sweep advances *every* column of its batch, so
 the server's job is to keep batches wide and their shapes few:
 
 * **Bucketing** — queries only share a batch if they share an execution
-  signature: ``BucketKey = (algorithm, semiring, delta, packed)``. The
-  graph and the engine config are session-wide, so they are not part of the
-  key; the SSSP bucket width ``delta`` is, because columns of one min-plus
-  SpMM batch share their ``ctx`` views, and the SlimSell-B ``packed`` flag
-  is, because packed columns travel as bit planes of a different dtype.
+  signature: ``BucketKey = (algorithm, semiring, delta, packed, k,
+  damping, tol)``. The graph and the engine config are session-wide, so
+  they are not part of the key; the SSSP bucket width ``delta`` is, because
+  columns of one min-plus SpMM batch share their ``ctx`` views, the
+  SlimSell-B ``packed`` flag is, because packed columns travel as bit
+  planes of a different dtype, the k-hop depth ``k`` is, because it is the
+  batch's iteration cap (a jitted-handle static), and PageRank's
+  ``damping``/``tol`` are, because every query in a width-1 whole-graph
+  dispatch reads the same converged vector.
 * **Power-of-two widths** — a bucket of k queries dispatches at width
   ``min(next_pow2(k), max_batch)``, padded by repeating the last real root
   (the engine's own padding convention — padded columns are discarded at
@@ -63,12 +67,16 @@ class Query:
     qid: int
     algorithm: str                 # one of options.ALGORITHMS
     semiring: str
-    root: Optional[int]            # None for whole-graph queries (cc)
+    root: Optional[int]            # None for whole-graph queries
+    #                                (cc / pagerank / betweenness)
     delta: Optional[float]         # sssp bucket width (resolved at submit)
     need_parents: bool
     deadline_at: Optional[float]
     submitted_at: float
     packed: bool = False           # SlimSell-B bit-packed boolean sweeps
+    k: Optional[int] = None        # khop depth cap (resolved at submit)
+    damping: Optional[float] = None  # pagerank teleport factor
+    tol: Optional[float] = None      # pagerank L1 residual threshold
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +86,9 @@ class BucketKey:
     semiring: str
     delta: Optional[float] = None
     packed: bool = False           # packed columns ride packed word planes
+    k: Optional[int] = None        # khop depth: the batch's iteration cap
+    damping: Optional[float] = None  # pagerank: shared ctx scalars
+    tol: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -143,7 +154,7 @@ class Batcher:
         and enqueue happen under one lock hold, so concurrent producers
         cannot both land the same root or overshoot ``max_pending``)."""
         key = BucketKey(query.algorithm, query.semiring, query.delta,
-                        query.packed)
+                        query.packed, query.k, query.damping, query.tol)
         with self._lock:
             if self.max_pending is not None and self._depth >= self.max_pending:
                 raise QueueFull(
@@ -187,7 +198,11 @@ class Batcher:
                     live.append(q)
             for i in range(0, len(live), self.max_batch):
                 group = live[i:i + self.max_batch]
-                width = (1 if key.algorithm == "cc"
+                # whole-graph queries (cc / pagerank / betweenness) share one
+                # width-1 dispatch: every query in the bucket reads the same
+                # whole-graph answer
+                width = (1 if key.algorithm in ("cc", "pagerank",
+                                                "betweenness")
                          else min(next_pow2(len(group)), self.max_batch))
                 slots.append(BatchSlot(key=key, queries=group, width=width))
         return slots, expired

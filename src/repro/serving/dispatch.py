@@ -55,13 +55,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import engine as eng
+from ..core.betweenness import betweenness
 from ..core.bfs import dp_transform
 from ..core.cc import CC_SPEC, cc
 from ..core.formats import layout_signature
+from ..core.khop import khop_many
 from ..core.multi_bfs import (multi_bfs_spec, multi_source_bfs,
                               packed_multi_bfs_spec)
 from ..core.multi_sssp import MULTI_SSSP_SPEC, multi_source_sssp
 from ..core.options import EngineConfig, QUERY_STATUSES, check_choice
+from ..core.pagerank import (PAGERANK_MAX_ITERS, PAGERANK_SPEC, pagerank,
+                             pagerank_views)
 from ..core.sssp import sssp_parents
 from .batcher import BatchSlot, Query
 from .metrics import ServingMetrics
@@ -104,12 +108,15 @@ class QueryResult:
     algorithm: str
     semiring: str
     status: str                       # one of options.QUERY_STATUSES
-    values: Optional[np.ndarray]      # distances (bfs/sssp) or labels (cc)
+    values: Optional[np.ndarray]      # distances (bfs/sssp/khop), labels
+    #                                   (cc), ranks (pagerank) or BC scores
+    #                                   (betweenness)
     parents: Optional[np.ndarray] = None
     sweeps: int = 0                   # engine sweeps its batch executed
     buckets: Optional[int] = None     # sssp delta buckets (its column)
     delta: Optional[float] = None     # sssp bucket width actually used
     n_components: Optional[int] = None  # cc
+    residual: Optional[float] = None  # pagerank final L1 residual
     latency_s: float = 0.0            # submit -> harvest wall time
 
     def __post_init__(self):
@@ -128,9 +135,11 @@ class QueryResult:
 
     @property
     def distances(self) -> np.ndarray:
-        """BFS/SSSP distance vector; raises on timeout or a cc query."""
-        if self.algorithm == "cc":
-            raise AttributeError("cc results carry labels, not distances")
+        """BFS/SSSP/khop distance vector; raises on timeout or a query
+        whose values are not distances (cc / pagerank / betweenness)."""
+        if self.algorithm in ("cc", "pagerank", "betweenness"):
+            raise AttributeError(
+                f"{self.algorithm} results carry no distance vector")
         self.raise_for_status()
         return self.values
 
@@ -138,7 +147,24 @@ class QueryResult:
     def labels(self) -> np.ndarray:
         """CC component labels; raises on timeout or a non-cc query."""
         if self.algorithm != "cc":
-            raise AttributeError(f"{self.algorithm} results carry distances")
+            raise AttributeError(f"{self.algorithm} results carry no labels")
+        self.raise_for_status()
+        return self.values
+
+    @property
+    def ranks(self) -> np.ndarray:
+        """PageRank vector (sums to 1); raises on a non-pagerank query."""
+        if self.algorithm != "pagerank":
+            raise AttributeError(f"{self.algorithm} results carry no ranks")
+        self.raise_for_status()
+        return self.values
+
+    @property
+    def scores(self) -> np.ndarray:
+        """Betweenness centrality scores; raises on other queries."""
+        if self.algorithm != "betweenness":
+            raise AttributeError(f"{self.algorithm} results carry no "
+                                 "centrality scores")
         self.raise_for_status()
         return self.values
 
@@ -173,6 +199,12 @@ class Dispatcher:
         self._inflight: Deque[_Inflight] = collections.deque()
         self._handles: Dict[tuple, eng.FixpointHandle] = {}
         self._layout_sig = layout_signature(tiled)
+        self._pr_views = None  # lazy (inv_deg, dangling) for pagerank
+
+    def _pagerank_views(self):
+        if self._pr_views is None:
+            self._pr_views = pagerank_views(self.tiled.deg)
+        return self._pr_views
 
     # ------------------------------------------------------------- handles
 
@@ -222,10 +254,14 @@ class Dispatcher:
         n = self.tiled.n
         self.metrics.inc(
             batches_dispatched=1, columns_total=slot.width,
-            columns_real=(1 if alg == "cc" else slot.n_real))
+            columns_real=(1 if alg in ("cc", "pagerank", "betweenness")
+                          else slot.n_real))
 
-        if cfg.mode == "hostloop" or (alg == "cc"
-                                      and slot.key.semiring == "boolean"):
+        # betweenness is two chained fixpoints with host orchestration
+        # between them (level extraction feeds the backward pass), so it
+        # always completes synchronously, like the other host-driven loops
+        if cfg.mode == "hostloop" or alg == "betweenness" \
+                or (alg == "cc" and slot.key.semiring == "boolean"):
             self._dispatch_sync(slot)
             return
 
@@ -236,6 +272,29 @@ class Dispatcher:
                 ctx = handle.setup(self.tiled)
                 state = handle.init_state(self.tiled,
                                           jnp.asarray(0, jnp.int32), ctx)
+            elif alg == "pagerank":
+                handle = self._handle(PAGERANK_SPEC,
+                                      max_iters=PAGERANK_MAX_ITERS,
+                                      direction="push", batch_width=None)
+                # damping/tol are traced ctx scalars, so every (damping,
+                # tol) bucket shares this one compiled handle
+                ctx = handle.setup(self.tiled, (
+                    jnp.asarray(slot.key.damping, jnp.float32),
+                    jnp.asarray(slot.key.tol, jnp.float32),
+                    *self._pagerank_views()))
+                state = handle.init_state(self.tiled,
+                                          jnp.asarray(0, jnp.int32), ctx)
+            elif alg == "khop":
+                # a k-hop batch is the boolean multi-BFS batch whose
+                # iteration cap is the bucket's depth k (the early exit)
+                spec = (packed_multi_bfs_spec(slot.width) if slot.key.packed
+                        else multi_bfs_spec("boolean"))
+                handle = self._handle(spec, max_iters=int(slot.key.k),
+                                      direction=cfg.direction,
+                                      batch_width=slot.width)
+                ctx = handle.setup(self.tiled)
+                state = handle.init_state(self.tiled,
+                                          jnp.asarray(slot.roots()), ctx)
             elif alg == "bfs":
                 # packed slots ride the SlimSell-B word-plane spec: the
                 # batch's frontier/visited are uint32[n, ceil(width/32)]
@@ -328,6 +387,19 @@ class Dispatcher:
                              n_components=n_comp)
             return
 
+        if alg == "pagerank":
+            ranks = np.asarray(state["r"])
+            resid = float(np.asarray(state["resid"]))
+            for q in slot.queries:
+                self._finish(q, values=ranks, sweeps=iters, residual=resid)
+            return
+
+        if alg == "khop":
+            d = np.asarray(state["d"]).T          # [width, n]; -1 beyond k
+            for col, q in enumerate(slot.queries):
+                self._finish(q, values=d[col], sweeps=iters)
+            return
+
         need_dp = any(q.need_parents for q in slot.queries)
         if alg == "bfs":
             d = np.asarray(state["d"]).T          # [width, n]
@@ -379,8 +451,33 @@ class Dispatcher:
                 self._finish(q, values=res.labels, sweeps=res.iterations,
                              n_components=res.n_components)
             return
+        if alg == "pagerank":
+            res = pagerank(self.tiled, damping=slot.key.damping,
+                           tol=slot.key.tol, slimwork=self.slimwork,
+                           config=cfg)
+            self.metrics.inc(sweeps_total=int(res.iterations))
+            resid = float(res.residuals[-1]) if res.residuals.size else 0.0
+            for q in slot.queries:
+                self._finish(q, values=res.ranks, sweeps=res.iterations,
+                             residual=resid)
+            return
+        if alg == "betweenness":
+            res = betweenness(self.tiled, slimwork=self.slimwork, config=cfg)
+            self.metrics.inc(sweeps_total=int(res.iterations))
+            for q in slot.queries:
+                self._finish(q, values=res.scores, sweeps=res.iterations)
+            return
         roots = [q.root for q in slot.queries]
         need_parents = any(q.need_parents for q in slot.queries)
+        if alg == "khop":
+            res = khop_many(self.tiled, roots, slot.key.k,
+                            packed=slot.key.packed, batch_size=slot.width,
+                            slimwork=self.slimwork, config=cfg)
+            self.metrics.inc(sweeps_total=int(np.sum(res.iterations)))
+            for i, q in enumerate(slot.queries):
+                self._finish(q, values=res.distances[i],
+                             sweeps=int(np.max(res.iterations)))
+            return
         if alg == "bfs":
             res = multi_source_bfs(self.tiled, roots, sem,
                                    need_parents=need_parents,

@@ -148,6 +148,15 @@ class Router:
     def cc(self, graph: str, semiring: str = "selmax") -> QueryResult:
         return self.session(graph).cc(semiring)
 
+    def pagerank(self, graph: str, **kwargs) -> QueryResult:
+        return self.session(graph).pagerank(**kwargs)
+
+    def betweenness(self, graph: str) -> QueryResult:
+        return self.session(graph).betweenness()
+
+    def khop(self, graph: str, root: int, k: int, **kwargs) -> QueryResult:
+        return self.session(graph).khop(root, k, **kwargs)
+
     # ---------------------------------------------------------- lifecycle
 
     def flush(self) -> None:

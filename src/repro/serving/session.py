@@ -174,6 +174,8 @@ class GraphSession:
     def submit(self, algorithm: str, root: Optional[int] = None, *,
                semiring: Optional[str] = None, delta: Optional[float] = None,
                need_parents: bool = False, packed: bool = False,
+               k: Optional[int] = None, damping: Optional[float] = None,
+               tol: Optional[float] = None,
                deadline: Optional[float] = None) -> QueryHandle:
         """Enqueue one query; returns its handle. Validation is all here, at
         the boundary: unknown algorithm/semiring, out-of-range or missing
@@ -184,10 +186,15 @@ class GraphSession:
         flight) when it lapses completes as ``status="timeout"``.
 
         packed: SlimSell-B — serve this query on the bit-packed boolean
-        path (32 vertices per uint32 lane element). Valid for boolean bfs
-        and boolean cc only; packed queries bucket separately from lane
-        queries (the batch carries uint32 word planes, not lanes) and
+        path (32 vertices per uint32 lane element). Valid for boolean bfs,
+        boolean cc and khop only; packed queries bucket separately from
+        lane queries (the batch carries uint32 word planes, not lanes) and
         require a push-direction config.
+
+        k: khop depth cap (required for ``algorithm="khop"``; ``k >= 0``).
+        damping / tol: pagerank teleport factor in (0, 1) (default 0.85)
+        and L1-residual convergence threshold (default 1e-6); valid for
+        ``algorithm="pagerank"`` only.
 
         Raises ``SessionClosed`` after ``close()`` and ``QueueFull`` when a
         bounded queue overflows under ``on_full="raise"``; under
@@ -196,17 +203,19 @@ class GraphSession:
         """
         check_choice("algorithm", algorithm, ALGORITHMS)
         n = self.tiled.n
-        if algorithm == "cc":
-            semiring = check_choice("cc semiring", semiring or "selmax",
-                                    CC_SEMIRINGS)
+        if algorithm in ("cc", "pagerank", "betweenness"):
             if root is not None:
-                raise ValueError("cc is a whole-graph query; root must be None")
+                raise ValueError(f"{algorithm} is a whole-graph query; "
+                                 "root must be None")
         else:
             if root is None:
                 raise ValueError(f"{algorithm} needs a root vertex")
             root = int(root)
             if not 0 <= root < n:
                 raise ValueError(f"root {root} out of range for n={n}")
+        if algorithm == "cc":
+            semiring = check_choice("cc semiring", semiring or "selmax",
+                                    CC_SEMIRINGS)
         if algorithm == "bfs":
             semiring = check_choice("semiring", semiring or "tropical",
                                     BFS_SEMIRINGS)
@@ -219,11 +228,44 @@ class GraphSession:
             delta = _resolve_delta(self.tiled, delta)
         elif delta is not None:
             raise ValueError(f"delta is an sssp knob; {algorithm} ignores it")
+        if algorithm == "pagerank":
+            semiring = check_choice("pagerank semiring", semiring or "real",
+                                    ("real",),
+                                    hint="PageRank is the damped real-"
+                                         "semiring iteration")
+            damping = 0.85 if damping is None else float(damping)
+            tol = 1e-6 if tol is None else float(tol)
+            if not 0.0 < damping < 1.0:
+                raise ValueError(
+                    f"pagerank: damping must be in (0, 1), got {damping}")
+            if not tol > 0.0:
+                raise ValueError(f"pagerank: tol must be > 0, got {tol}")
+        elif damping is not None or tol is not None:
+            raise ValueError(f"damping/tol are pagerank knobs; "
+                             f"{algorithm} ignores them")
+        if algorithm == "betweenness":
+            semiring = check_choice("betweenness semiring",
+                                    semiring or "real", ("real",),
+                                    hint="Brandes sweeps run on the real "
+                                         "(path-counting) semiring")
+        if algorithm == "khop":
+            semiring = check_choice("khop semiring", semiring or "boolean",
+                                    ("boolean",),
+                                    hint="k-hop filters are depth-capped "
+                                         "boolean BFS")
+            if k is None:
+                raise ValueError("khop needs a depth cap k (k >= 0)")
+            k = int(k)
+            if k < 0:
+                raise ValueError(f"khop: k must be >= 0, got {k}")
+        elif k is not None:
+            raise ValueError(f"k is a khop knob; {algorithm} ignores it")
         if packed:
-            if algorithm not in ("bfs", "cc") or semiring != "boolean":
+            if algorithm not in ("bfs", "cc", "khop") \
+                    or semiring != "boolean":
                 raise ValueError(
                     "packed=True is the SlimSell-B bit-packed boolean path; "
-                    f"it serves boolean bfs/cc only, not {algorithm} on "
+                    f"it serves boolean bfs/cc/khop only, not {algorithm} on "
                     f"{semiring!r}")
             if self.config.direction != "push":
                 raise ValueError(
@@ -238,7 +280,8 @@ class GraphSession:
                 qid=self._next_qid, algorithm=algorithm, semiring=semiring,
                 root=root, delta=delta, need_parents=bool(need_parents),
                 deadline_at=None if deadline is None else now + float(deadline),
-                submitted_at=now, packed=bool(packed))
+                submitted_at=now, packed=bool(packed), k=k,
+                damping=damping, tol=tol)
             try:
                 self.batcher.add(query)
             except QueueFull:
@@ -405,6 +448,32 @@ class GraphSession:
            packed: bool = False) -> QueryResult:
         """Connected components over the resident layout."""
         return self.submit("cc", semiring=semiring, packed=packed).result()
+
+    def pagerank(self, *, damping: float = 0.85,
+                 tol: float = 1e-6) -> QueryResult:
+        """Damped PageRank over the resident layout; ``result.ranks`` sums
+        to 1. Queries sharing (damping, tol) share one whole-graph run."""
+        return self.submit("pagerank", damping=damping, tol=tol).result()
+
+    def betweenness(self) -> QueryResult:
+        """Brandes betweenness centrality (all sources, unnormalized);
+        ``result.scores`` is the per-vertex BC vector."""
+        return self.submit("betweenness").result()
+
+    def khop(self, root: int, k: int, *, packed: bool = False) -> QueryResult:
+        """k-hop filter: depth-capped boolean BFS from ``root``.
+        ``result.distances`` holds hop counts (-1 outside the ball); the
+        membership mask is ``result.distances >= 0``."""
+        return self.submit("khop", root, k=k, packed=packed).result()
+
+    def khop_many(self, roots: Sequence[int], k: int, *,
+                  packed: bool = False) -> list:
+        """k-hop from every root as one submit wave; same-depth queries
+        batch into one depth-capped SpMM."""
+        handles = [self.submit("khop", int(r), k=k, packed=packed)
+                   for r in roots]
+        self.drain()
+        return [h.result() for h in handles]
 
 
 def session(graph: GraphLike, **kwargs) -> GraphSession:

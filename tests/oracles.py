@@ -1,0 +1,108 @@
+"""Reference implementations and the shared tolerance policy for the
+workload oracle tests (PageRank / betweenness / k-hop).
+
+One place owns the numerics: ``TOLERANCES`` maps workload -> the allclose
+kwargs every cross-check uses, and ``PAGERANK_PARAMS`` pins the (damping,
+tol) the engine runs with so the oracle's float64 answer and the engine's
+float32 fixpoint are compared under one policy instead of per-test
+literals.
+
+The references are deliberately independent of the engine: ``nx.pagerank``
+(scipy power iteration in float64), a plain-python Brandes (BFS + explicit
+predecessor lists, so source *subsets* have an exact reference — networkx's
+``k=`` sampling draws its own random sources), and networkx BFS with a
+depth cutoff for k-hop. All of them rebuild the graph from the CSR the
+layout was built from, so dedup/self-loop handling is shared by
+construction.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import networkx as nx
+import numpy as np
+
+# workload -> np.allclose kwargs; the single tolerance policy
+TOLERANCES = {
+    # engine fixpoint stops at L1 residual <= tol (see PAGERANK_PARAMS);
+    # the remaining gap to the float64 fixpoint is bounded by
+    # tol * damping / (1 - damping) in L1, far below this atol
+    "pagerank": dict(atol=2e-5, rtol=0.0),
+    # float32 path counts are exact (< 2^24) but the backward divisions
+    # round; errors accumulate over depth levels and sources
+    "betweenness": dict(atol=1e-3, rtol=2e-3),
+    # k-hop is discrete: masks and hop counts match exactly
+    "khop": dict(atol=0.0, rtol=0.0),
+}
+
+# the engine-side knobs every PageRank oracle test runs with
+PAGERANK_PARAMS = dict(damping=0.85, tol=1e-6)
+
+
+def to_networkx(csr) -> nx.Graph:
+    """Undirected nx.Graph over the CSR's vertex set (isolated vertices
+    included; nx dedups the symmetric doubling)."""
+    G = nx.Graph()
+    G.add_nodes_from(range(csr.n))
+    src = np.repeat(np.arange(csr.n), np.diff(csr.indptr))
+    G.add_edges_from(zip(src.tolist(), csr.indices.tolist()))
+    return G
+
+
+def pagerank_oracle(csr, damping: float = 0.85) -> np.ndarray:
+    """float64 PageRank via networkx (uniform dangling redistribution,
+    matching the engine's dangling-mass correction)."""
+    pr = nx.pagerank(to_networkx(csr), alpha=damping, tol=1e-12,
+                     max_iter=1000)
+    return np.array([pr[v] for v in range(csr.n)])
+
+
+def betweenness_oracle(csr, sources=None) -> np.ndarray:
+    """Plain-python Brandes (float64), restricted to ``sources`` when given.
+
+    Returns unnormalized undirected scores (each unordered pair counted
+    once — the accumulated dependencies halved), the same convention as
+    ``repro.core.betweenness.betweenness(normalized=False)``.
+    """
+    n = csr.n
+    bc = np.zeros(n)
+    for s in (range(n) if sources is None else sources):
+        s = int(s)
+        order = []
+        sigma = np.zeros(n)
+        sigma[s] = 1.0
+        depth = np.full(n, -1, np.int64)
+        depth[s] = 0
+        preds: list[list[int]] = [[] for _ in range(n)]
+        q = deque([s])
+        while q:
+            v = q.popleft()
+            order.append(v)
+            for w in csr.indices[csr.indptr[v]:csr.indptr[v + 1]]:
+                w = int(w)
+                if depth[w] < 0:
+                    depth[w] = depth[v] + 1
+                    q.append(w)
+                if depth[w] == depth[v] + 1:
+                    sigma[w] += sigma[v]
+                    preds[w].append(v)
+        delta = np.zeros(n)
+        for w in reversed(order):
+            for v in preds[w]:
+                delta[v] += sigma[v] / sigma[w] * (1.0 + delta[w])
+            if w != s:
+                bc[w] += delta[w]
+    return bc / 2.0
+
+
+def khop_oracle(csr, root: int, k) -> tuple[np.ndarray, np.ndarray]:
+    """(mask bool[n], distances int64[n]) of the depth-<=k BFS ball via
+    networkx (``k=None`` = full reachability); distances -1 outside."""
+    depths = nx.single_source_shortest_path_length(
+        to_networkx(csr), int(root), cutoff=k)
+    mask = np.zeros(csr.n, bool)
+    dist = np.full(csr.n, -1, np.int64)
+    for v, dv in depths.items():
+        mask[v] = True
+        dist[v] = dv
+    return mask, dist

@@ -208,6 +208,75 @@ print("PASS")
 """)
 
 
+def test_dist_pagerank_parity():
+    """Distributed PageRank matches the single-device engine: same rank
+    vector (up to tile-sum reassociation) and the same per-sweep L1
+    residual history out of the resid_log ring, for two dampings through
+    one traced compilation."""
+    run_multidevice(_PRELUDE + """
+from repro.core.dist_bfs import make_dist_pagerank
+from repro.core.pagerank import pagerank
+csr = kronecker(8, 8, seed=3)
+tiled = build_slimsell(csr, C=4, L=8).to_jax()
+mesh = make_mesh((2, 2), ("data", "model"))
+dist = partition_slimsell(csr, R=2, Co=2, C=4, L=8)
+fn = make_dist_pagerank(mesh, dist)
+for damping in [0.85, 0.3]:
+    single = pagerank(tiled, damping=damping, tol=1e-6)
+    r, it, resid_log = fn(dist.cols, dist.row_block, dist.row_vertex,
+                          np.float32(damping), np.float32(1e-6))
+    assert int(it) == single.iterations, damping
+    assert np.allclose(np.asarray(r), single.ranks, rtol=1e-5,
+                       atol=1e-7), damping
+    assert np.allclose(np.asarray(resid_log)[:int(it)], single.residuals,
+                       rtol=1e-3, atol=1e-7), damping
+print("PASS")
+""")
+
+
+def test_dist_brandes_parity():
+    """Distributed Brandes (forward sigma/depth batch + dependency
+    back-propagation) folds to the same betweenness scores as the
+    single-device front door restricted to the same sources."""
+    run_multidevice(_PRELUDE + """
+from repro.core.dist_bfs import make_dist_brandes
+from repro.core.betweenness import betweenness, brandes_accumulate
+csr = erdos_renyi(96, 5, seed=2)
+tiled = build_slimsell(csr, C=4, L=8).to_jax()
+roots = np.asarray([0, 7, 23, 55, 80], np.int32)
+single = betweenness(tiled, sources=roots)
+mesh = make_mesh((2, 2), ("data", "model"))
+dist = partition_slimsell(csr, R=2, Co=2, C=4, L=8)
+fn = make_dist_brandes(mesh, dist)
+delta, d, it_f, it_b = fn(dist.cols, dist.row_block, dist.row_vertex, roots)
+scores = brandes_accumulate(np.asarray(delta), roots) / 2.0
+assert np.allclose(scores, single.scores, rtol=1e-5, atol=1e-6)
+print("PASS")
+""")
+
+
+def test_dist_khop_parity():
+    """Distributed k-hop: the depth-capped boolean batch matches the
+    single-device khop_many ball exactly, lane and packed."""
+    run_multidevice(_PRELUDE + """
+from repro.core.dist_bfs import make_dist_khop
+from repro.core.khop import khop_many
+csr = erdos_renyi(140, 5, seed=7)
+tiled = build_slimsell(csr, C=4, L=8).to_jax()
+roots = np.asarray([0, 9, 41, 77, 130], np.int32)
+single = khop_many(tiled, roots, 2)
+mesh = make_mesh((2, 2), ("data", "model"))
+dist = partition_slimsell(csr, R=2, Co=2, C=4, L=8)
+for packed in [False, True]:
+    fn = make_dist_khop(mesh, dist, 2, packed=packed,
+                        batch_width=len(roots) if packed else None)
+    d, it = fn(dist.cols, dist.row_block, dist.row_vertex, roots)
+    assert np.array_equal(np.asarray(d), single.distances), packed
+    assert np.array_equal(np.asarray(d) >= 0, single.mask), packed
+print("PASS")
+""")
+
+
 def test_dist_slimwork_push_mask_parity():
     """The per-shard push index (inc_src/inc_tile) must not change any
     result: masked push sweeps equal unmasked ones for single- and

@@ -129,6 +129,8 @@ def test_duplicate_root_rejected_at_submit(wtiled):
 def test_bad_submits_rejected(wtiled):
     s = GraphSession(wtiled)
     with pytest.raises(ValueError, match="unknown algorithm"):
+        s.submit("triangles", 0)
+    with pytest.raises(ValueError, match="root must be None"):
         s.submit("pagerank", 0)
     with pytest.raises(ValueError, match="out of range"):
         s.submit("bfs", wtiled.n)

@@ -1,0 +1,357 @@
+"""Workload oracle tests: PageRank / betweenness / k-hop vs independent
+references (``tests/oracles.py``) across the graph families, both backends
+and both engine modes, plus the serving-path coverage, the non-monotone
+termination regression and the sanitizer case.
+
+Layering:
+
+* oracle matrix — each workload front door against its float64 reference
+  on the six unweighted families (power-law, uniform, cliques-on-a-ring,
+  star, path, disconnected), under the centralized ``TOLERANCES`` policy;
+* cross-checks — the plain-python Brandes oracle itself against networkx,
+  so the reference is not a second copy of the implementation under test;
+* serving — the same answers through ``GraphSession`` facades and shared
+  pagerank buckets;
+* engine regressions — an oscillating (never-converging) toy spec halts at
+  ``max_iters`` on fused *and* hostloop, and PageRank runs clean under the
+  checkify sanitizer (no NaN/inf in discarded branches).
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.betweenness import betweenness
+from repro.core.engine import FixpointSpec, run_fused, run_hostloop
+from repro.core.formats import build_csr, build_slimsell
+from repro.core.khop import khop, khop_many
+from repro.core.options import EngineConfig
+from repro.core.pagerank import pagerank
+from repro.graphs.generators import (erdos_renyi, kronecker, ring_of_cliques,
+                                     star, two_components)
+from repro.serving import session
+
+from oracles import (PAGERANK_PARAMS, TOLERANCES, betweenness_oracle,
+                     khop_oracle, pagerank_oracle, to_networkx)
+
+nx = pytest.importorskip("networkx")
+
+BACKENDS = ["jnp", "pallas"]
+MODES = ["fused", "hostloop"]
+
+
+def path_graph(n: int):
+    edges = np.stack([np.arange(n - 1), np.arange(1, n)], axis=1)
+    return build_csr(edges, n)
+
+
+FAMILIES = {
+    "kron": lambda: kronecker(9, 8, seed=3),
+    "er": lambda: erdos_renyi(256, 6, seed=1),
+    "ring": lambda: ring_of_cliques(10, 5),
+    "star": lambda: star(100),
+    "path": lambda: path_graph(64),
+    "disconnected": lambda: two_components(6, 6, seed=0),
+}
+
+#: families small enough for full-source (exact) betweenness
+SMALL = ("ring", "star", "path", "disconnected")
+
+
+@functools.lru_cache(maxsize=None)
+def family(name):
+    """(csr, tiled) for one family, built once per test session."""
+    csr = FAMILIES[name]()
+    return csr, build_slimsell(csr, C=8, L=32).to_jax()
+
+
+def sample_sources(csr, m=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.choice(csr.n, size=min(m, csr.n), replace=False))
+
+
+# ---------------------------------------------------------------- pagerank
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_pagerank_matches_networkx(name, backend, mode):
+    csr, tiled = family(name)
+    ref = pagerank_oracle(csr, damping=PAGERANK_PARAMS["damping"])
+    res = pagerank(tiled, config=EngineConfig(mode=mode, backend=backend),
+                   **PAGERANK_PARAMS)
+    assert res.converged
+    assert abs(res.ranks.sum() - 1.0) < 1e-4
+    np.testing.assert_allclose(res.ranks, ref, **TOLERANCES["pagerank"])
+
+
+def test_pagerank_result_shape():
+    csr, tiled = family("ring")
+    res = pagerank(tiled, **PAGERANK_PARAMS)
+    # residual history: one entry per sweep, monotone toward tol at the end
+    assert res.residuals.shape == (res.iterations,)
+    assert res.residuals[-1] <= PAGERANK_PARAMS["tol"]
+    assert np.all(res.residuals[:-1] > 0)
+
+
+def test_pagerank_damping_sweep():
+    # teleport-heavy ranks flatten toward uniform; walk-heavy ranks spread
+    csr, tiled = family("star")
+    flat = pagerank(tiled, damping=0.05, tol=1e-6).ranks
+    sharp = pagerank(tiled, damping=0.9, tol=1e-6).ranks
+    assert flat.std() < sharp.std()
+    for a in (0.05, 0.9):
+        np.testing.assert_allclose(
+            pagerank(tiled, damping=a, tol=1e-6).ranks,
+            pagerank_oracle(csr, damping=a), **TOLERANCES["pagerank"])
+
+
+def test_pagerank_validation():
+    _, tiled = family("path")
+    with pytest.raises(ValueError, match="damping"):
+        pagerank(tiled, damping=1.0)
+    with pytest.raises(ValueError, match="tol"):
+        pagerank(tiled, tol=0.0)
+    with pytest.raises(ValueError, match="push-only"):
+        pagerank(tiled, config=EngineConfig(direction="pull"))
+
+
+def test_pagerank_unconverged_at_max_iters():
+    # max_iters below the convergence point: the engine's k <= max_iters
+    # guard is the only exit, and the result says so
+    _, tiled = family("ring")
+    res = pagerank(tiled, tol=1e-30, max_iters=3)
+    assert res.iterations == 3
+    assert not res.converged
+
+
+# ------------------------------------------------------------- betweenness
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_betweenness_matches_oracle(name):
+    csr, tiled = family(name)
+    if name in SMALL:
+        ref = betweenness_oracle(csr)
+        res = betweenness(tiled)
+        assert res.n_sources == csr.n
+    else:
+        src = sample_sources(csr)
+        ref = betweenness_oracle(csr, src)
+        res = betweenness(tiled, sources=src)
+        assert res.n_sources == src.size
+    np.testing.assert_allclose(res.scores, ref, **TOLERANCES["betweenness"])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_betweenness_modes_backends(backend, mode):
+    csr, tiled = family("ring")
+    ref = betweenness_oracle(csr)
+    res = betweenness(tiled, config=EngineConfig(mode=mode, backend=backend))
+    np.testing.assert_allclose(res.scores, ref, **TOLERANCES["betweenness"])
+
+
+def test_betweenness_batched_equals_monolithic():
+    csr, tiled = family("ring")
+    whole = betweenness(tiled).scores
+    chunked = betweenness(tiled, batch_size=16).scores
+    np.testing.assert_allclose(chunked, whole, rtol=1e-6, atol=1e-9)
+
+
+def test_betweenness_normalized_matches_networkx():
+    csr, tiled = family("ring")
+    ref = nx.betweenness_centrality(to_networkx(csr), normalized=True)
+    res = betweenness(tiled, normalized=True)
+    np.testing.assert_allclose(
+        res.scores, [ref[v] for v in range(csr.n)],
+        **TOLERANCES["betweenness"])
+
+
+def test_betweenness_validation():
+    _, tiled = family("path")
+    with pytest.raises(ValueError, match="non-empty"):
+        betweenness(tiled, sources=[])
+    with pytest.raises(ValueError, match="out of range"):
+        betweenness(tiled, sources=[tiled.n])
+    with pytest.raises(ValueError, match="push-only"):
+        betweenness(tiled, config=EngineConfig(direction="pull"))
+
+
+def test_brandes_oracle_matches_networkx():
+    # the python reference itself is cross-checked, so the oracle matrix
+    # above is not implementation-vs-reimplementation
+    for name in ("ring", "disconnected"):
+        csr, _ = family(name)
+        ref = nx.betweenness_centrality(to_networkx(csr), normalized=False)
+        np.testing.assert_allclose(
+            betweenness_oracle(csr), [ref[v] for v in range(csr.n)],
+            rtol=1e-9, atol=1e-9)
+
+
+# ------------------------------------------------------------------- k-hop
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_khop_matches_oracle(name):
+    csr, tiled = family(name)
+    root = int(np.argmax(csr.deg))
+    for k in (0, 1, 2, 3, None):
+        mask_ref, dist_ref = khop_oracle(csr, root, k)
+        res = khop(tiled, root, k)
+        np.testing.assert_array_equal(res.mask, mask_ref)
+        np.testing.assert_array_equal(res.distances, dist_ref)
+        assert res.count == mask_ref.sum()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("packed", [False, True])
+def test_khop_modes_backends_packed(backend, mode, packed):
+    csr, tiled = family("ring")
+    root = 3
+    mask_ref, dist_ref = khop_oracle(csr, root, 2)
+    res = khop(tiled, root, 2, packed=packed,
+               config=EngineConfig(mode=mode, backend=backend))
+    np.testing.assert_array_equal(res.mask, mask_ref)
+    np.testing.assert_array_equal(res.distances, dist_ref)
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_khop_many_matches_per_root(packed):
+    csr, tiled = family("er")
+    roots = sample_sources(csr, m=12, seed=3)
+    res = khop_many(tiled, roots, 2, packed=packed)
+    assert res.distances.shape == (roots.size, csr.n)
+    for b, root in enumerate(roots):
+        mask_ref, dist_ref = khop_oracle(csr, int(root), 2)
+        np.testing.assert_array_equal(res.mask[b], mask_ref)
+        np.testing.assert_array_equal(res.distances[b], dist_ref)
+
+
+def test_khop_validation():
+    _, tiled = family("path")
+    with pytest.raises(ValueError, match="k must be"):
+        khop(tiled, 0, -1)
+
+
+# ------------------------------------------------------------------ serving
+
+
+def ring_edges():
+    csr, _ = family("ring")
+    src = np.repeat(np.arange(csr.n), np.diff(csr.indptr))
+    return np.stack([src, csr.indices], axis=1)
+
+
+def test_serving_workload_facades():
+    csr, tiled = family("ring")
+    with session(ring_edges()) as sess:
+        pr = sess.pagerank(**PAGERANK_PARAMS)
+        np.testing.assert_allclose(
+            pr.ranks, pagerank_oracle(csr, PAGERANK_PARAMS["damping"]),
+            **TOLERANCES["pagerank"])
+        assert pr.residual is not None and pr.residual <= PAGERANK_PARAMS["tol"]
+
+        bc = sess.betweenness()
+        np.testing.assert_allclose(bc.scores, betweenness_oracle(csr),
+                                   **TOLERANCES["betweenness"])
+
+        mask_ref, dist_ref = khop_oracle(csr, 7, 2)
+        for packed in (False, True):
+            kh = sess.khop(7, 2, packed=packed)
+            np.testing.assert_array_equal(kh.distances, dist_ref)
+
+        many = sess.khop_many([1, 8, 21], 3)
+        for r, res in zip([1, 8, 21], many):
+            _, dist_ref = khop_oracle(csr, r, 3)
+            np.testing.assert_array_equal(res.distances, dist_ref)
+
+
+def test_serving_pagerank_bucket_shared():
+    # identical (damping, tol) queries land in one whole-graph bucket and
+    # return identical rank vectors
+    with session(ring_edges()) as sess:
+        h1 = sess.submit("pagerank", damping=0.85, tol=1e-6)
+        h2 = sess.submit("pagerank", damping=0.85, tol=1e-6)
+        sess.drain()
+        r1, r2 = h1.result(), h2.result()
+        np.testing.assert_array_equal(r1.ranks, r2.ranks)
+        assert sess.stats()["batches_dispatched"] == 1
+
+
+def test_serving_workload_validation():
+    with session(ring_edges()) as sess:
+        with pytest.raises(ValueError):
+            sess.submit("pagerank", 0)          # whole-graph: no root
+        with pytest.raises(ValueError):
+            sess.submit("pagerank", damping=1.5)
+        with pytest.raises(ValueError):
+            sess.submit("khop", 0)              # k required
+        with pytest.raises(ValueError):
+            sess.submit("khop", 0, k=-1)
+        with pytest.raises(ValueError):
+            sess.submit("bfs", 0, damping=0.5)  # pagerank-only knob
+        with pytest.raises(ValueError):
+            sess.submit("betweenness", packed=True)
+
+
+# -------------------------------------------------- engine regressions
+
+
+def _osc_init(n, arg, ctx):
+    return {"x": jnp.zeros((n,), jnp.float32)}
+
+
+def _osc_update(ctx, state, y, k):
+    # period-2 flip: no fixpoint exists, cont never goes False
+    return dict(state, x=1.0 - state["x"]), jnp.asarray(True)
+
+
+OSCILLATOR_SPEC = FixpointSpec(
+    name="test/oscillator",
+    sr_name="real",
+    init_state=_osc_init,
+    frontier=lambda ctx, state, k: state["x"],
+    source_bits=lambda ctx, state, k: jnp.ones(state["x"].shape, bool),
+    not_final=lambda ctx, state: jnp.ones(state["x"].shape, bool),
+    update=_osc_update,
+    host_bits=lambda state, k, need_sb, need_nf:
+        (np.ones(state["x"].shape[0], bool), None),
+)
+
+
+@pytest.mark.parametrize("run", [run_fused, run_hostloop],
+                         ids=["fused", "hostloop"])
+def test_nonmonotone_spec_halts_at_max_iters(run):
+    # the contract PageRank leans on: a spec whose cont never drops still
+    # terminates, at exactly max_iters sweeps
+    _, tiled = family("path")
+    res = run(OSCILLATOR_SPEC, tiled, jnp.asarray(0, jnp.int32),
+              max_iters=7, backend="jnp")
+    assert res.iterations == 7
+    np.testing.assert_array_equal(np.asarray(res.state["x"]),
+                                  np.ones(tiled.n, np.float32))
+
+
+def test_pagerank_under_sanitizer():
+    # checkify-instrumented sweep: the masked safe divisors must keep
+    # NaN/inf out of every branch, discarded or not
+    csr, tiled = family("disconnected")
+    cfg = EngineConfig(sanitize=True)
+    res = pagerank(tiled, config=cfg, **PAGERANK_PARAMS)
+    assert np.all(np.isfinite(res.ranks))
+    assert np.all(res.ranks >= 0)
+    np.testing.assert_allclose(
+        res.ranks, pagerank_oracle(csr, PAGERANK_PARAMS["damping"]),
+        **TOLERANCES["pagerank"])
+
+
+def test_betweenness_under_sanitizer():
+    csr, tiled = family("disconnected")
+    res = betweenness(tiled, config=EngineConfig(sanitize=True))
+    np.testing.assert_allclose(res.scores, betweenness_oracle(csr),
+                               **TOLERANCES["betweenness"])
